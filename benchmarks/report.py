@@ -1,0 +1,59 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables."""
+from __future__ import annotations
+
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks import roofline
+
+
+def dryrun_table(path: str) -> str:
+    rows = roofline.load_results(path)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    out = ["| arch | shape | mesh | status | mem/dev (args+temp) GB | "
+           "dot FLOPs/dev | coll GB/dev | compile s |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            mem = ((r["memory"]["argument_bytes"] or 0)
+                   + (r["memory"]["temp_bytes"] or 0)) / 1e9
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{mem:.1f} | {r['dot_flops']:.2e} | "
+                f"{r['collectives']['total'] / 1e9:.1f} | "
+                f"{r['compile_s']:.0f} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} |  |  |  |  |")
+    return "\n".join(out)
+
+
+def roofline_table_md(path: str, mesh: str = "16x16") -> str:
+    rows = roofline.table(path, mesh)
+    out = ["| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful ratio | MFU bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"*{r['status']}* |  |  |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s'] * 1e3:.1f} | "
+            f"{r['memory_s'] * 1e3:.1f} | {r['collective_s'] * 1e3:.1f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']:.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl"
+    which = sys.argv[2] if len(sys.argv) > 2 else "both"
+    if which in ("dryrun", "both"):
+        print(dryrun_table(path))
+        print()
+    if which in ("roofline", "both"):
+        print(roofline_table_md(path))

@@ -1,0 +1,114 @@
+"""Roofline terms from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell from dryrun_results.jsonl:
+
+    compute    = HLO_dot_FLOPs_per_device / 197e12      [s]   (bf16 MXU)
+    memory     = HBM_traffic_per_device   / 819e9       [s]
+    collective = collective_bytes_per_device / (n_links·50e9) [s]
+
+All three use the trip-count-corrected HLO analysis (launch/hlo_analysis) —
+the partitioned module is per-device, so numbers are already per-chip.
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per step; the ratio
+MODEL_FLOPS/(HLO_FLOPs·chips) shows how much compiled compute is useful
+(remat and redundancy push it below 1).
+
+v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI with 4
+links usable per chip on a 2D torus (2 send + 2 recv per direction pair);
+we charge collectives against 2 links (conservative bidirectional rings).
+"""
+from __future__ import annotations
+
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_LINK_BW = 50e9
+ICI_LINKS = 2.0
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,
+    "long_500k": 1,
+}
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """6·N(active)·tokens (train counts fwd+bwd; serve 2·N·tokens)."""
+    n_active = cfg.param_count(active_only=True)
+    tokens = SHAPE_TOKENS[shape_name]
+    mult = 6.0 if shape_name == "train_4k" else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_terms(rec: dict) -> dict:
+    compute = rec["dot_flops"] / PEAK_FLOPS
+    memory = rec["hbm_traffic_bytes"] / HBM_BW
+    collective = rec["collectives"]["total"] / (ICI_LINKS * ICI_LINK_BW)
+    dominant = max(
+        (("compute", compute), ("memory", memory),
+         ("collective", collective)), key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant,
+        "bound_s": total,
+        "compute_fraction": compute / total if total else 0.0,
+    }
+
+
+def load_results(path: str = "dryrun_results.jsonl") -> list:
+    out = []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"], r["mesh"])] = r   # last wins
+    return list(seen.values())
+
+
+def table(path: str = "dryrun_results.jsonl", mesh: str = "16x16") -> list:
+    from repro.configs import all_configs
+    cfgs = {c.name: c for c in all_configs().values()}
+    rows = []
+    for r in load_results(path):
+        if r["mesh"] != mesh:
+            continue
+        row = {"arch": r["arch"], "shape": r["shape"], "status": r["status"]}
+        if r["status"] == "ok":
+            t = roofline_terms(r)
+            cfg = cfgs[r["arch"]]
+            mf = model_flops(cfg, r["shape"])
+            hlo_total = r["dot_flops"] * r["n_devices"]
+            row.update(t)
+            row["model_flops"] = mf
+            row["useful_ratio"] = mf / hlo_total if hlo_total else 0.0
+            row["mfu_bound"] = (mf / r["n_devices"] / PEAK_FLOPS) / t["bound_s"] \
+                if t["bound_s"] else 0.0
+        elif r["status"] == "skipped":
+            row["reason"] = r.get("reason", "")
+        rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def print_table(path: str = "dryrun_results.jsonl", mesh: str = "16x16"):
+    rows = table(path, mesh)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_ms':>9s} {'mem_ms':>9s} "
+           f"{'coll_ms':>9s} {'dominant':>10s} {'useful':>7s} {'MFU_bnd':>8s}")
+    print(hdr)
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"{r['arch']:24s} {r['shape']:12s} "
+                  f"{'[' + r['status'] + ']':>9s}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} "
+              f"{r['compute_s'] * 1e3:9.2f} {r['memory_s'] * 1e3:9.2f} "
+              f"{r['collective_s'] * 1e3:9.2f} {r['dominant']:>10s} "
+              f"{r['useful_ratio']:7.2f} {r['mfu_bound']:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    print_table(sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.jsonl",
+                sys.argv[2] if len(sys.argv) > 2 else "16x16")

@@ -1,0 +1,64 @@
+"""Quickstart: tune an index for YOUR storage and data (paper Alg. 2).
+
+1. profiles the local filesystem (T(Δ), §3.2),
+2. tunes an index for a gmm dataset with AirTune,
+3. compares the modeled latency against B-tree / RMI / PGM / DataCalc,
+4. serializes the index and serves real partial-read lookups (Alg. 1).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (KeyPositions, PROFILES, SerializedIndex, airtune,
+                        expected_latency, profile_local_storage, write_index)
+from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
+from repro.data.datasets import sosd_like
+
+workdir = tempfile.mkdtemp(prefix="airindex-")
+print(f"== profiling local storage ({workdir}) ==")
+prof = profile_local_storage(os.path.join(workdir, "scratch.bin"))
+aff = prof.fit_affine()
+print(f"measured T(4KB)={prof(4096) * 1e6:.1f}us  "
+      f"affine fit: latency={aff.latency * 1e6:.1f}us "
+      f"bandwidth={aff.bandwidth / 1e9:.2f}GB/s")
+
+print("== dataset: gmm, 400k keys ==")
+keys = sosd_like("gmm", 400_000)
+D = KeyPositions.fixed_record(keys, 16)
+
+print("== AirTune (Alg. 2) ==")
+t0 = time.perf_counter()
+res = airtune(D, prof, k=5)
+print(f"tuned in {time.perf_counter() - t0:.2f}s -> {res.describe()}")
+
+for name, design in [
+    ("B-TREE(255,4K)", build_fixed_btree(D)),
+    ("RMI (tuned)", tune_rmi(D, prof).design),
+    ("PGM (tuned)", tune_pgm(D, prof).design),
+]:
+    c = expected_latency(design, prof)
+    print(f"  vs {name:16s}: {c * 1e6:9.1f}us  "
+          f"({c / res.cost:.2f}x slower than AirIndex)")
+
+print("== serialized, real partial-read lookups ==")
+idx_path = os.path.join(workdir, "index.air")
+write_index(idx_path, res.design)
+idx = SerializedIndex(idx_path)
+rng = np.random.default_rng(0)
+qs = rng.choice(keys, 1000)
+t0 = time.perf_counter()
+for q in qs:
+    lo, hi = idx.lookup(int(q))
+dt = (time.perf_counter() - t0) / len(qs)
+print(f"1000 file lookups: {dt * 1e6:.1f}us each, "
+      f"{idx.bytes_read / idx.reads:.0f}B/read avg, index file "
+      f"{os.path.getsize(idx_path)}B")
+idx.close()
+print("OK")

@@ -1,0 +1,32 @@
+"""AirIndex core — the paper's contribution as a composable library.
+
+Public surface:
+  KeyPositions                      — key→position collections (``D``)
+  StorageProfile / PROFILES         — ``T(Δ)`` models (§3.2)
+  StepLayer / BandLayer / outline   — unified index model layers (§4)
+  LayerBuilder / make_builders      — GStep/GBand/EBand on the Eq.(8) grid
+  IndexDesign / expected_latency    — ``L_SM`` (Eq. 5/6)
+  step_index_complexity / tau_hat   — τ̂ (Eq. 12)
+  airtune / brute_force             — the search (Alg. 2)
+  lookup_batch / verify_lookup      — batched Alg. 1
+  write_index / SerializedIndex     — on-disk format + partial-read lookup
+  baselines                         — B-TREE / RMI / PGM / Data Calculator
+"""
+from .airtune import TuneResult, airtune, brute_force
+from .builders import (LayerBuilder, build_eband, build_gband, build_gstep,
+                       build_partitioned, greedy_partition, make_builders,
+                       merge_layers)
+from .complexity import (S_STEP, step_index_complexity,
+                         step_index_complexity_layers, tau_hat)
+from .keyset import KeyPositions
+from .latency import (IndexDesign, expected_latency, ideal_latency_with_index,
+                      latency_breakdown, mean_read_volume)
+from .lookup import LookupResult, last_mile_search, lookup_batch, verify_lookup
+from .nodes import (BAND_NODE_BYTES, STEP_PIECE_BYTES, BandLayer, StepLayer,
+                    mean_width, outline)
+from .serialize import SerializedIndex, load_index, write_index
+from .storage import (AffineProfile, AffineUniformProfile, MeasuredProfile,
+                      PROFILES, StorageProfile, profile_local_storage)
+from . import baselines  # noqa: F401
+
+__all__ = [k for k in dir() if not k.startswith("_")]

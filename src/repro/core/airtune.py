@@ -1,0 +1,171 @@
+"""AirTune — guided graph search with bounded visits (paper §5, Alg. 2).
+
+Vertices are key-position collections (the origin is the data layer); an
+edge applies a layer builder ``F ∈ 𝓕`` and moves to the layer's outline.
+The value function solved here is exactly Alg. 2's recursion:
+
+    V(D) = min( T(s_D),                                  # stop: D is root
+                min_{Θ_next} E_X[T(Δ(x; Θ_next))] + V(outline(Θ_next)) )
+
+with two paper mechanisms bounding the visit count:
+
+  * **stopping criterion** (Alg. 2 lines 1–2): if reading all of ``D``
+    already beats an *ideal* extra layer (1-byte root + 1-byte precise
+    read), stop — no real layer can help;
+  * **top-k selection** (Eq. 9): recurse only into the k candidates with
+    the smallest ``τ̂(D_next; T) + E_X[T(Δ(x; Θ_next))]``.
+
+Exactness of the expectation: step widths are constant per piece and band
+widths constant per node, and piece/node boundaries are drawn from the
+collection's keys, so evaluating widths at outline keys with aggregated
+weights equals evaluating at the original query keys (see latency.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .builders import LayerBuilder, make_builders
+from .complexity import tau_hat
+from .keyset import KeyPositions
+from .latency import IndexDesign, expected_latency, ideal_latency_with_index
+from .nodes import Layer, outline
+from .storage import StorageProfile
+
+
+@dataclasses.dataclass
+class TuneStats:
+    vertices_visited: int = 0
+    layers_built: int = 0
+    candidates_pruned: int = 0
+    wall_seconds: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    design: IndexDesign
+    cost: float               # L_SM(X; Θ*, T), Eq. (6)
+    stats: TuneStats
+
+    def describe(self) -> str:
+        return (f"{self.design.describe()}  cost={self.cost * 1e6:.1f}us  "
+                f"(visited={self.stats.vertices_visited}, "
+                f"built={self.stats.layers_built}, "
+                f"{self.stats.wall_seconds:.2f}s)")
+
+
+SCORE_SAMPLE = 65536   # pairs used for candidate *ranking* (§5.3); the
+                       # selected candidates' costs are always exact
+
+
+def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
+                          profile: StorageProfile,
+                          sample: bool = False) -> float:
+    """E_{x∼X}[T(Δ(x; Θ))] over D's weighted keys.
+
+    ``sample=True``: strided subsample for ranking-only estimates — exact
+    evaluation of all |𝓕| candidates cost O(|𝓕|·n·log) per vertex and
+    dominated tuning time (EXPERIMENTS.md §Perf, core iteration 2).
+    """
+    if sample and D.n > 2 * SCORE_SAMPLE:
+        stride = D.n // SCORE_SAMPLE
+        keys = D.keys[::stride]
+        weights = D.weights[::stride]
+    else:
+        keys, weights = D.keys, D.weights
+    wq = layer.widths_at(keys)
+    return float(np.average(profile(wq), weights=weights))
+
+
+def airtune(D: KeyPositions, profile: StorageProfile,
+            builders: list[LayerBuilder] | None = None, *,
+            k: int = 5, max_layers: int = 12) -> TuneResult:
+    """Find Θ* ≈ argmin_Θ L_SM(X; Θ, T) (Table 3) via Alg. 2."""
+    if builders is None:
+        builders = make_builders()
+    stats = TuneStats()
+    t0 = time.perf_counter()
+    layers, cost = _airtune_rec(D, profile, builders, k, max_layers, stats)
+    stats.wall_seconds = time.perf_counter() - t0
+    design = IndexDesign(layers=tuple(layers), data=D)
+    # the recursion's incremental cost must agree with the Eq. (6) evaluator
+    return TuneResult(design=design, cost=cost, stats=stats)
+
+
+def _airtune_rec(D: KeyPositions, profile: StorageProfile,
+                 builders: list[LayerBuilder], k: int, depth_left: int,
+                 stats: TuneStats) -> tuple[list, float]:
+    stats.vertices_visited += 1
+    no_index_cost = float(profile(D.size_bytes))   # L_SM(D; (), T)
+
+    # stopping criterion: even an ideal layer cannot beat reading D outright
+    if no_index_cost < ideal_latency_with_index(profile) or depth_left == 0 \
+            or D.n <= 1:
+        return [], no_index_cost
+
+    # explore all outgoing edges: build every candidate next layer (§5.2).
+    # ranking uses sampled read-cost estimates; the k selected candidates
+    # are re-scored exactly, so the returned cost is still exactly Eq. (6)
+    candidates = []
+    for F in builders:
+        layer = F(D)
+        stats.layers_built += 1
+        D_next = outline(layer, D)
+        # safeguard: only strictly shrinking layers guarantee termination
+        if D_next.size_bytes >= D.size_bytes:
+            continue
+        est_cost = _mean_layer_read_cost(layer, D, profile, sample=True)
+        score = tau_hat(D_next, profile) + est_cost         # Eq. (9)
+        candidates.append((score, layer, D_next))
+
+    # select top-k by index-complexity-guided score (§5.3)
+    candidates.sort(key=lambda c: c[0])
+    stats.candidates_pruned += max(len(candidates) - k, 0)
+    best_layers, best_cost = [], no_index_cost
+    for score, layer, D_next in candidates[:k]:
+        read_cost = _mean_layer_read_cost(layer, D, profile)   # exact
+        upper_layers, upper_cost = _airtune_rec(
+            D_next, profile, builders, k, depth_left - 1, stats)
+        total = read_cost + upper_cost       # V(D) recursion (Alg. 2 line 11)
+        if total < best_cost:
+            best_cost = total
+            best_layers = [layer] + upper_layers
+    return best_layers, best_cost
+
+
+def brute_force(D: KeyPositions, profile: StorageProfile,
+                builders: list[LayerBuilder] | None = None, *,
+                max_layers: int = 4) -> TuneResult:
+    """Exhaustive reference search (no top-k pruning, no τ̂ guidance).
+
+    Exponential in |𝓕|; only usable on small inputs.  Tests use it to
+    certify AirTune's pruning never loses the optimum on tractable cases.
+    """
+    if builders is None:
+        builders = make_builders()
+    stats = TuneStats()
+    t0 = time.perf_counter()
+
+    def rec(Dc: KeyPositions, depth_left: int) -> tuple[list, float]:
+        stats.vertices_visited += 1
+        best_layers, best_cost = [], float(profile(Dc.size_bytes))
+        if depth_left == 0 or Dc.n <= 1:
+            return best_layers, best_cost
+        for F in builders:
+            layer = F(Dc)
+            stats.layers_built += 1
+            D_next = outline(layer, Dc)
+            if D_next.size_bytes >= Dc.size_bytes:
+                continue
+            upper_layers, upper_cost = rec(D_next, depth_left - 1)
+            total = _mean_layer_read_cost(layer, Dc, profile) + upper_cost
+            if total < best_cost:
+                best_cost, best_layers = total, [layer] + upper_layers
+        return best_layers, best_cost
+
+    layers, cost = rec(D, max_layers)
+    stats.wall_seconds = time.perf_counter() - t0
+    return TuneResult(design=IndexDesign(layers=tuple(layers), data=D),
+                      cost=cost, stats=stats)

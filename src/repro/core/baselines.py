@@ -1,0 +1,168 @@
+"""Baseline index structures (paper §7.1, Appendix B), re-implemented inside
+the AirIndex framework exactly like the paper's own controlled "B-TREE"
+baseline: the *structure* is fixed by the baseline's rules, the storage
+model scores it, and only AirIndex gets data-and-I/O-aware tuning.
+
+  * :func:`build_fixed_btree`   — B-TREE: GStep(p=255, λ=4096) stacked
+    (≡ 4 KB pages, 255 fanout) until a single-node root.
+  * :func:`tune_rmi`            — RMI/CDFShop-style: two layers, linear
+    root partitioning the key space equally over n linear leaf models;
+    n swept on a grid (CDFShop recommends a Pareto set; we take the best
+    under the storage model — a *stronger* baseline than the paper's).
+  * :func:`tune_pgm`            — PGM-style: bounded-error greedy PLA
+    stacked bottom-up with the same ε per layer; ε swept per the paper's
+    grid {16 … 1024} records.
+  * :func:`data_calculator`     — exhaustive grid over homogeneous step
+    designs (restricted branching functions, cost-model driven).
+  * :func:`homogeneous_airtune` — AirTune restricted to one node type
+    (the §2.2 Step-only / PWL-only comparison).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .airtune import TuneResult, TuneStats, airtune
+from .builders import (LayerBuilder, _fit_bands_for_groups, build_gband,
+                       build_gstep, make_builders)
+from .keyset import KeyPositions, POS_DTYPE
+from .latency import IndexDesign, expected_latency
+from .nodes import BandLayer, StepLayer, outline
+from .storage import StorageProfile
+
+
+def _stack_until_root(D: KeyPositions, build_one, max_layers: int = 16):
+    """Repeatedly build a layer on the previous outline until single-node."""
+    layers = []
+    cur = D
+    for _ in range(max_layers):
+        layer = build_one(cur)
+        nxt = outline(layer, cur)
+        if nxt.size_bytes >= cur.size_bytes:
+            break  # no longer shrinking: stop below this layer
+        layers.append(layer)
+        cur = nxt
+        if len(layer.node_sizes()) <= 1:
+            break
+    return IndexDesign(layers=tuple(layers), data=D)
+
+
+# ---------------------------------------------------------------------------
+# B-TREE (paper Appendix B): fixed GStep(255, 4096) stack
+# ---------------------------------------------------------------------------
+def build_fixed_btree(D: KeyPositions, p: int = 255, lam: float = 4096.0) -> IndexDesign:
+    return _stack_until_root(D, lambda c: build_gstep(c, p=p, lam=lam))
+
+
+# ---------------------------------------------------------------------------
+# RMI (Appendix B): linear root → n linear leaf models, on-storage
+# ---------------------------------------------------------------------------
+def build_rmi(D: KeyPositions, n_models: int) -> IndexDesign:
+    """Two-layer RMI with an equal-key-range linear root (CDF root model)."""
+    n_models = min(n_models, D.n)
+    k0 = int(D.keys[0])
+    span = max(int(D.keys[-1]) - k0, 1)
+    n_models = min(n_models, span + 1)
+    # model-slot boundaries first; routing = searchsorted over them, so the
+    # build-time grouping and lookup-time routing agree by construction
+    bounds = (k0 + np.arange(n_models, dtype=np.float64)
+              * (span + 1) / n_models).astype(np.uint64)
+    gid = np.searchsorted(bounds, D.keys, side="right") - 1
+    gid = np.clip(gid, 0, n_models - 1)
+    starts = np.flatnonzero(np.diff(gid, prepend=-1))
+    leaf = _fit_bands_for_groups(D, starts)
+    present = gid[starts]
+
+    # materialize one 40 B record per model slot; empty slots get a
+    # whole-data fallback band (never queried for existing keys)
+    node_keys = bounds
+    x1 = node_keys.copy()
+    y1 = np.full(n_models, (D.lo[0] + D.hi[-1]) // 2, dtype=POS_DTYPE)
+    m = np.zeros(n_models, dtype=np.float64)
+    delta = np.full(n_models, (D.hi[-1] - D.lo[0]) / 2 + 2.0, dtype=np.float64)
+    y1[present] = leaf.y1
+    m[present] = leaf.m
+    delta[present] = leaf.delta
+    x1[present] = leaf.x1
+    bottom = BandLayer(node_keys=node_keys, x1=x1, y1=y1, m=m, delta=delta,
+                       clamp_lo=int(D.lo[0]), clamp_hi=int(D.hi[-1]))
+
+    # root: single band mapping key → 40-byte model slot (exact ±1 slot)
+    slot_bytes = 40.0
+    root = BandLayer(
+        node_keys=np.array([0], dtype=np.uint64),
+        x1=np.array([k0], dtype=np.uint64),
+        y1=np.array([int(slot_bytes // 2)], dtype=POS_DTYPE),
+        m=np.array([slot_bytes * n_models / (span + 1)], dtype=np.float64),
+        delta=np.array([slot_bytes + 1.0], dtype=np.float64),
+        clamp_lo=0, clamp_hi=int(slot_bytes) * n_models)
+    return IndexDesign(layers=(bottom, root), data=D)
+
+
+def tune_rmi(D: KeyPositions, profile: StorageProfile,
+             grid=(2**8, 2**10, 2**12, 2**14, 2**16, 2**18, 2**20)) -> TuneResult:
+    best, best_cost = None, np.inf
+    for n_models in grid:
+        if n_models > D.n:
+            break
+        design = build_rmi(D, n_models)
+        cost = expected_latency(design, profile)
+        if cost < best_cost:
+            best, best_cost = design, cost
+    return TuneResult(design=best, cost=best_cost, stats=TuneStats())
+
+
+# ---------------------------------------------------------------------------
+# PGM-INDEX (Appendix B): bounded-ε greedy PLA per layer, bottom-up
+# ---------------------------------------------------------------------------
+def build_pgm(D: KeyPositions, eps_records: int, record_bytes: int = 16) -> IndexDesign:
+    lam = 2.0 * eps_records * record_bytes
+    return _stack_until_root(D, lambda c: build_gband(c, lam=lam))
+
+
+def tune_pgm(D: KeyPositions, profile: StorageProfile,
+             grid=(16, 32, 64, 128, 256, 512, 1024)) -> TuneResult:
+    best, best_cost = None, np.inf
+    for eps in grid:
+        design = build_pgm(D, eps)
+        cost = expected_latency(design, profile)
+        if cost < best_cost:
+            best, best_cost = design, cost
+    return TuneResult(design=best, cost=best_cost, stats=TuneStats())
+
+
+# ---------------------------------------------------------------------------
+# DATA CALCULATOR (Appendix B): exhaustive homogeneous-step grid
+# ---------------------------------------------------------------------------
+def data_calculator(D: KeyPositions, profile: StorageProfile,
+                    lam_grid=None, p_grid=(16, 64, 255, 1024),
+                    max_layers: int = 4) -> TuneResult:
+    """Cost-model-driven exhaustive search, restricted to step branching and
+    one (p, λ) shared across layers — the paper's characterization of Data
+    Calculator's auto-completion (grid-search-like, restricted functions)."""
+    if lam_grid is None:
+        lam_grid = [2.0**s for s in range(10, 22, 2)]
+    stats = TuneStats()
+    best, best_cost = IndexDesign(layers=(), data=D), expected_latency(
+        IndexDesign(layers=(), data=D), profile)
+    for p in p_grid:
+        for lam in lam_grid:
+            design = _stack_until_root(
+                D, lambda c: build_gstep(c, p=p, lam=lam), max_layers)
+            stats.layers_built += design.n_layers
+            for L in range(1, design.n_layers + 1):
+                sub = IndexDesign(layers=design.layers[:L], data=D)
+                stats.vertices_visited += 1
+                cost = expected_latency(sub, profile)
+                if cost < best_cost:
+                    best, best_cost = sub, cost
+    return TuneResult(design=best, cost=best_cost, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous AirTune (§2.2 Step-only vs PWL-only vs heterogeneous)
+# ---------------------------------------------------------------------------
+def homogeneous_airtune(D: KeyPositions, profile: StorageProfile, kind: str,
+                        **kw) -> TuneResult:
+    kinds = {"step": ("gstep",), "band": ("gband", "eband")}[kind]
+    builders = make_builders(kinds=kinds)
+    return airtune(D, profile, builders, **kw)

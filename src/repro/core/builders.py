@@ -1,0 +1,297 @@
+"""Layer builders ``F(D) → Θ`` (paper §5.2, §A.1).
+
+Three families, exactly as the paper deploys:
+
+  * ``GStep(p, λ)``  — greedy step packing: start a new constant piece when
+    ``y⁺_i − b_k > λ``; pack ``p`` pieces per node (≅ sparse B-tree bulk
+    load with fanout ``p`` and page size ``λ``).
+  * ``GBand(λ)``     — greedily extend a linear band while its width stays
+    ``≤ λ`` (band through the group's first/last key-position points).
+  * ``EBand(λ)``     — group pairs into equal-size position ranges and fit
+    one band per group.
+
+The candidate set ``F`` samples the granularity λ on an exponential grid
+``λ_low·(1+ε)^j`` (Eq. 8).
+
+Array-program adaptation (DESIGN.md §2): the paper's Rust builders are
+single-pass loops.  Here GStep/EBand are *fully vectorized*: the greedy
+grouping recurrence is solved exactly with a jump table + frontier-doubling
+orbit extraction (O(n log G) numpy work, no per-group Python iteration).
+GBand keeps the paper's greedy semantics with a galloping feasibility
+search per emitted node (inner ops vectorized).  All builders assume
+non-overlapping, sorted position ranges — true for data layers and all
+outlines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .keyset import KeyPositions, POS_DTYPE
+from .nodes import BandLayer, Layer, StepLayer
+
+_DELTA_SAFETY = 1.0  # absorbs float64 rounding so Eq.(1) holds bit-exactly
+
+
+# ---------------------------------------------------------------------------
+# exact greedy partitioning, vectorized
+# ---------------------------------------------------------------------------
+def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float) -> np.ndarray:
+    """Greedy grouping of sorted ranges: group starting at ``s`` absorbs
+    items while ``hi[i] − lo[s] ≤ λ``.  Returns group start indices
+    (including 0), i.e. the exact greedy boundaries of paper §A.1 (1).
+
+    Exact vectorization: ``jump[s] = first i with hi[i] > lo[s] + λ`` is a
+    monotone map; the greedy boundaries are the orbit of 0 under ``jump``.
+    We extract the orbit with frontier doubling — repeatedly appending
+    ``jump^{2^k}`` applied to the known prefix — in O(log G) vectorized
+    rounds instead of G sequential steps.
+    """
+    n = len(lo)
+    if n == 0:
+        return np.zeros(1, dtype=np.int64)
+    lam = np.float64(lam)
+
+    # fast path: walk boundary-to-boundary with per-point binary search.
+    # O(G log n) — beats the O(n log n) jump-table when groups are few.
+    # hi is converted to float64 once: searchsorted with a float probe
+    # would otherwise re-convert the whole array per call.
+    switch = 8192
+    hi_f = hi if hi.dtype == np.float64 else hi.astype(np.float64)
+    lo_f = lo if lo.dtype == np.float64 else lo.astype(np.float64)
+    walk = [0]
+    s = 0
+    while len(walk) <= switch:
+        nxt = int(np.searchsorted(hi_f, lo_f[s] + lam, side="right"))
+        nxt = min(max(nxt, s + 1), n)
+        if nxt >= n:
+            return np.asarray(walk, dtype=np.int64)
+        walk.append(nxt)
+        s = nxt
+
+    # many groups: build the full jump table and extract the remaining
+    # orbit with frontier doubling (O(log G) vectorized rounds).  The
+    # doubling invariant — after round k the orbit holds the first 2^k
+    # elements and the table equals jump^(2^k) — requires seeding from a
+    # single point: the boundary where the scalar walk stopped.
+    targets = lo_f + lam
+    jump = np.searchsorted(hi_f, targets, side="right").astype(np.int64)
+    idx = np.arange(n, dtype=np.int64)
+    jump = np.maximum(jump, idx + 1)          # ≥ one item per group
+    jump = np.minimum(jump, n)
+    jump = np.append(jump, n)                 # absorbing state
+    orbit = np.asarray([s], dtype=np.int64)
+    while orbit[-1] < n:
+        nxt = jump[orbit]
+        orbit = np.concatenate([orbit, nxt])
+        if orbit[-1] >= n and np.all(nxt >= n):
+            break
+        jump = jump[jump]                     # square the jump map
+    orbit = orbit[orbit < n]
+    # saturated duplicates are dropped by unique; walk[:-1] precedes s
+    return np.concatenate([np.asarray(walk[:-1], dtype=np.int64),
+                           np.unique(orbit)])
+
+
+def _check_disjoint(D: KeyPositions) -> None:
+    if D.n > 1:
+        assert np.all(D.hi[:-1] <= D.lo[1:]), (
+            "builders require non-overlapping position ranges")
+
+
+# ---------------------------------------------------------------------------
+# GStep
+# ---------------------------------------------------------------------------
+def build_gstep(D: KeyPositions, p: int, lam: float) -> StepLayer:
+    """Greedy step builder (paper §A.1 (1)) — exact, fully vectorized."""
+    _check_disjoint(D)
+    starts = greedy_partition(D.lo_f, D.hi_f, lam)      # piece start indices
+    piece_keys = D.keys[starts]
+    piece_pos = np.empty(len(starts) + 1, dtype=POS_DTYPE)
+    piece_pos[:-1] = D.lo[starts]
+    piece_pos[-1] = D.hi[-1]
+    P = len(starts)
+    node_off = np.arange(0, P, p, dtype=np.int64)
+    node_off = np.append(node_off, P)
+    return StepLayer(piece_keys=piece_keys, piece_pos=piece_pos,
+                     node_piece_off=node_off)
+
+
+# ---------------------------------------------------------------------------
+# band fitting helpers
+# ---------------------------------------------------------------------------
+def _fit_bands_for_groups(D: KeyPositions, starts: np.ndarray) -> BandLayer:
+    """Fit one band per group (line through first/last midpoints, width =
+    max residual + safety).  Vectorized with segment reductions."""
+    ends = np.append(starts[1:], D.n)
+    first, last = starts, ends - 1
+    mid = D.mid_f
+    x1 = D.keys[first]
+    y1 = mid[first]
+    dx = D.keys_f[last] - D.keys_f[first]
+    dy = mid[last] - mid[first]
+    m = np.where(dx > 0, dy / np.maximum(dx, 1.0), 0.0)
+    # broadcast group params to items, residuals, then segment max
+    gid = np.repeat(np.arange(len(starts)), ends - starts)
+    line = y1[gid] + m[gid] * (D.keys_f - x1[gid].astype(np.float64))
+    resid = np.maximum(line - D.lo_f, D.hi_f - line)
+    delta = np.maximum.reduceat(resid, starts) + _DELTA_SAFETY
+    return BandLayer(
+        node_keys=D.keys[first].astype(np.uint64),
+        x1=D.keys[first].astype(np.uint64),
+        y1=np.rint(y1).astype(POS_DTYPE),
+        m=m,
+        delta=delta + 1.0,  # covers the rint() on y1
+        clamp_lo=int(D.lo[0]),
+        clamp_hi=int(D.hi[-1]),
+    )
+
+
+def build_eband(D: KeyPositions, lam: float) -> BandLayer:
+    """Equal-position-range band builder (paper §A.1 (3)) — vectorized.
+
+    Groups by the position grid ``⌊(y⁻ − y⁻_0)/λ⌋`` ("equal-size position
+    ranges"); worst-case group extent ≤ λ + max record size.
+    """
+    _check_disjoint(D)
+    lam = max(float(lam), 1.0)
+    cell = ((D.lo_f - float(D.lo[0])) // lam).astype(np.int64)
+    starts = np.flatnonzero(np.diff(cell, prepend=cell[0] - 1))
+    return _fit_bands_for_groups(D, starts)
+
+
+def build_gband(D: KeyPositions, lam: float) -> BandLayer:
+    """Greedy band builder (paper §A.1 (2)): extend each group while the
+    band width ``2δ`` stays ≤ λ.  Galloping + binary search per node with
+    vectorized feasibility, seeded by the previous group's size.
+    """
+    _check_disjoint(D)
+    n = D.n
+    keys_f = D.keys_f
+    lo_f = D.lo_f
+    hi_f = D.hi_f
+    mid = D.mid_f
+    half = 0.5 * float(lam)
+
+    def feasible(s: int, e: int) -> bool:
+        """Band through midpoints of s and e−1 has width 2δ ≤ λ?"""
+        if e - s <= 1:
+            return True
+        dx = keys_f[e - 1] - keys_f[s]
+        m = (mid[e - 1] - mid[s]) / dx if dx > 0 else 0.0
+        line = mid[s] + m * (keys_f[s:e] - keys_f[s])
+        resid = np.maximum(line - lo_f[s:e], hi_f[s:e] - line)
+        return float(resid.max()) + _DELTA_SAFETY <= half
+
+    starts = [0]
+    s = 0
+    guess = 64
+    while True:
+        # gallop to bracket the maximal feasible end
+        step = max(guess, 2)
+        e_ok = s + 1
+        e = min(s + step, n)
+        while e > e_ok and feasible(s, e):
+            e_ok = e
+            if e == n:
+                break
+            step *= 4
+            e = min(s + step, n)
+        # binary search in (e_ok, e)
+        bad = e if e > e_ok else e_ok
+        while bad - e_ok > 1:
+            probe = (e_ok + bad) // 2
+            if feasible(s, probe):
+                e_ok = probe
+            else:
+                bad = probe
+        guess = e_ok - s
+        if e_ok >= n:
+            break
+        starts.append(e_ok)
+        s = e_ok
+    return _fit_bands_for_groups(D, np.asarray(starts, dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# builder objects + the Eq.(8) grid
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerBuilder:
+    """A node builder F ∈ 𝓕 mapping a key-position collection to a layer."""
+
+    kind: str          # 'gstep' | 'gband' | 'eband'
+    lam: float
+    p: int = 16        # pieces per node (gstep only)
+
+    @property
+    def name(self) -> str:
+        if self.kind == "gstep":
+            return f"GStep({self.p},{int(self.lam)})"
+        return f"{'GBand' if self.kind == 'gband' else 'EBand'}({int(self.lam)})"
+
+    def __call__(self, D: KeyPositions) -> Layer:
+        if self.kind == "gstep":
+            return build_gstep(D, self.p, self.lam)
+        if self.kind == "gband":
+            return build_gband(D, self.lam)
+        if self.kind == "eband":
+            return build_eband(D, self.lam)
+        raise ValueError(self.kind)
+
+
+def make_builders(lam_low: float = 2**8, lam_high: float = 2**20,
+                  base: float = 2.0, p: int = 16,
+                  kinds=("gstep", "gband", "eband")) -> list[LayerBuilder]:
+    """Granularity exponentiation (Eq. 8): λ_low, λ_low·(1+ε), …, λ_high."""
+    assert base > 1.0
+    lams = []
+    lam = float(lam_low)
+    while lam <= lam_high * (1 + 1e-9):
+        lams.append(lam)
+        lam *= base
+    return [LayerBuilder(kind=k, lam=l, p=p) for k in kinds for l in lams]
+
+
+# ---------------------------------------------------------------------------
+# data-partitioned building (paper §5.4 "From Data Partitioning")
+# ---------------------------------------------------------------------------
+def merge_layers(parts: list[Layer]) -> Layer:
+    """Merge per-partition layers into one (piecewise functions concatenate)."""
+    assert parts
+    if isinstance(parts[0], StepLayer):
+        piece_keys = np.concatenate([q.piece_keys for q in parts])
+        piece_pos = np.concatenate(
+            [q.piece_pos[:-1] for q in parts] + [parts[-1].piece_pos[-1:]])
+        offs = [parts[0].node_piece_off]
+        acc = parts[0].n_pieces
+        for q in parts[1:]:
+            offs.append(q.node_piece_off[1:] + acc)
+            acc += q.n_pieces
+        return StepLayer(piece_keys=piece_keys, piece_pos=piece_pos,
+                         node_piece_off=np.concatenate(offs))
+    return BandLayer(
+        node_keys=np.concatenate([q.node_keys for q in parts]),
+        x1=np.concatenate([q.x1 for q in parts]),
+        y1=np.concatenate([q.y1 for q in parts]),
+        m=np.concatenate([q.m for q in parts]),
+        delta=np.concatenate([q.delta for q in parts]),
+        clamp_lo=min(q.clamp_lo for q in parts),
+        clamp_hi=max(q.clamp_hi for q in parts),
+    )
+
+
+def build_partitioned(builder: LayerBuilder, D: KeyPositions,
+                      partition_pairs: int = 1_000_000) -> Layer:
+    """Build per 1M-pair partition and merge (paper's default partitioning).
+
+    On a real cluster each partition builds on a different host/shard over
+    the ``data`` mesh axis; here partitions run sequentially.
+    """
+    if D.n <= partition_pairs:
+        return builder(D)
+    parts = []
+    for s in range(0, D.n, partition_pairs):
+        parts.append(builder(D.slice(s, min(s + partition_pairs, D.n))))
+    return merge_layers(parts)

@@ -1,0 +1,101 @@
+"""End-to-end lookup latency under a storage model (paper §4.3).
+
+``L_SM(x; Θ, T) = T(s(Θ_L)) + Σ_{l=1..L} T(Δ(x; Θ_l))``        (Eq. 5)
+``L_SM(X; Θ, T) = E_{x∼X}[ · ]``                                 (Eq. 6)
+
+A *design* here is the bottom-up list of built layers ``[Θ_1, …, Θ_L]``
+(layer 1 sits directly on the data layer).  The data-layer read
+``T(Δ(x; Θ_1))`` uses layer 1's prediction width; the root layer is read in
+full, ``T(s(Θ_L))``; an empty design reads the whole collection, ``T(s_D)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .keyset import KeyPositions
+from .nodes import Layer, mean_width, outline
+from .storage import StorageProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexDesign:
+    """Built hierarchical index: layers bottom-up + the collection indexed."""
+
+    layers: tuple          # (Θ_1, …, Θ_L); () = no index
+    data: KeyPositions     # the data layer's key-position collection
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.layers)
+
+    def outlines(self) -> list[KeyPositions]:
+        """[D_0=data, D_1=outline(Θ_1), …, D_L]."""
+        outs = [self.data]
+        for layer in self.layers:
+            outs.append(outline(layer, outs[-1]))
+        return outs
+
+    def describe(self) -> str:
+        outs = self.outlines()
+        parts = []
+        for i, layer in enumerate(self.layers):
+            parts.append(
+                f"L{i + 1}:{layer.kind}[nodes={len(layer.node_sizes())}"
+                f" size={layer.size_bytes}B"
+                f" EΔ={mean_width(layer, outs[i]):.0f}B]")
+        return " <- ".join(parts) if parts else "(no index)"
+
+
+def expected_latency(design: IndexDesign, profile: StorageProfile) -> float:
+    """Eq. (6) with X uniform over the data layer's (weighted) keys.
+
+    Every layer's prediction width is evaluated at the *original* query
+    keys; each original key's lookup path touches exactly one node per
+    layer, so ``E_x[T(Δ(x; Θ_l))]`` is a weighted mean over data keys.
+    """
+    data = design.data
+    if design.n_layers == 0:
+        return float(profile(data.size_bytes))
+    outs = design.outlines()
+    total = float(profile(outs[-1].size_bytes))          # root read: T(s(Θ_L))
+    for layer in design.layers:                           # Σ_l E[T(Δ(x; Θ_l))]
+        wq = layer.widths_at(data.keys)
+        total += float(np.average(profile(wq), weights=data.weights))
+    return total
+
+
+def latency_breakdown(design: IndexDesign, profile: StorageProfile) -> dict:
+    """Per-read costs: root + every layer's expected partial read (Eq. 5)."""
+    data = design.data
+    if design.n_layers == 0:
+        t = float(profile(data.size_bytes))
+        return {"root": t, "layers": [], "total": t}
+    outs = design.outlines()
+    root = float(profile(outs[-1].size_bytes))
+    per_layer = []
+    for layer in design.layers:
+        wq = layer.widths_at(data.keys)
+        per_layer.append(float(np.average(profile(wq), weights=data.weights)))
+    # reads happen top-down: root, then partial reads of layers L−1 … 1, data
+    return {"root": root, "layers": per_layer[::-1], "total": root + sum(per_layer)}
+
+
+def mean_read_volume(design: IndexDesign) -> float:
+    """Total expected bytes fetched per query: s(Θ_L) + Σ E[Δ_l] (Fig. 13b)."""
+    data = design.data
+    if design.n_layers == 0:
+        return float(data.size_bytes)
+    outs = design.outlines()
+    vol = float(outs[-1].size_bytes)
+    for layer in design.layers:
+        wq = layer.widths_at(data.keys)
+        vol += float(np.average(wq, weights=data.weights))
+    return vol
+
+
+def ideal_latency_with_index(profile: StorageProfile) -> float:
+    """Cost if an *ideal* extra layer existed: 1-byte root + 1-byte precise
+    read of the current level (paper §5.1 stopping criterion)."""
+    return float(profile(1.0) + profile(1.0))

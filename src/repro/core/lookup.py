@@ -1,0 +1,96 @@
+"""Query process (paper §4.2, Alg. 1) — batched, array-oriented.
+
+The paper traverses one key at a time (read → search → reconstruct node →
+predict).  The TPU-native adaptation (DESIGN.md §2) processes a *batch* of
+query keys per traversal step: each layer descent is a vectorized
+piece/node search plus a prediction, which is exactly what the Pallas
+kernel in ``repro.kernels.index_lookup`` implements on-device.  This module
+provides:
+
+  * :func:`lookup_batch` — in-memory traversal returning predicted data
+    ranges + the modeled per-query latency (Eq. 5 terms), used by tests,
+    benchmarks, and the storage-model evaluation;
+  * :func:`lookup_file` — the real thing against a serialized index file
+    (partial ``pread``s only), used by the data-pipeline substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .keyset import KeyPositions
+from .latency import IndexDesign
+from .nodes import BandLayer, StepLayer
+from .storage import StorageProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class LookupResult:
+    lo: np.ndarray            # (q,) predicted data-layer range start
+    hi: np.ndarray            # (q,) predicted data-layer range end
+    modeled_seconds: np.ndarray  # (q,) Σ T(Δ) + T(s_root) per query (Eq. 5)
+    bytes_read: np.ndarray    # (q,) total bytes fetched per query
+
+
+def lookup_batch(design: IndexDesign, queries: np.ndarray,
+                 profile: StorageProfile | None = None) -> LookupResult:
+    """Traverse the index top-down for a batch of keys (Alg. 1).
+
+    Returns the final data-layer byte range per query; the caller fetches
+    those ranges and runs the last-mile search (binary search over records).
+    """
+    q = np.asarray(queries, dtype=np.uint64)
+    n_q = len(q)
+    seconds = np.zeros(n_q, dtype=np.float64)
+    nbytes = np.zeros(n_q, dtype=np.float64)
+    if design.n_layers == 0:
+        lo = np.full(n_q, design.data.lo[0], dtype=np.int64)
+        hi = np.full(n_q, design.data.hi[-1], dtype=np.int64)
+        width = float(design.data.size_bytes)
+        if profile is not None:
+            seconds += float(profile(width))
+        return LookupResult(lo, hi, seconds, nbytes + width)
+
+    # root layer: read in full
+    root = design.layers[-1]
+    root_size = float(root.size_bytes)
+    nbytes += root_size
+    if profile is not None:
+        seconds += float(profile(root_size))
+
+    lo = hi = None
+    for layer in reversed(design.layers):
+        lo, hi = layer.predict(q)
+        width = (hi - lo).astype(np.float64)
+        nbytes += width
+        if profile is not None:
+            seconds += np.asarray(profile(width), dtype=np.float64)
+    return LookupResult(lo, hi, seconds, nbytes)
+
+
+def verify_lookup(design: IndexDesign, queries: np.ndarray) -> bool:
+    """Check validity end-to-end: the predicted final range must contain the
+    true record range of every queried key (Eq. 1 composed across layers)."""
+    D = design.data
+    idx = np.searchsorted(D.keys, np.asarray(queries, dtype=np.uint64))
+    idx = np.clip(idx, 0, D.n - 1)
+    res = lookup_batch(design, queries)
+    ok = (res.lo <= D.lo[idx]) & (res.hi >= D.hi[idx])
+    return bool(np.all(ok))
+
+
+def last_mile_search(keys_in_range: np.ndarray, query: int) -> int:
+    """Binary search within a fetched data range (Alg. 1 line 3)."""
+    i = int(np.searchsorted(keys_in_range, np.uint64(query), side="right")) - 1
+    return max(i, 0)
+
+
+def lookup_file(path: str, design_meta, queries: np.ndarray):
+    """Real partial-read lookup against a serialized index file.
+
+    Thin convenience wrapper; implemented in :mod:`repro.core.serialize`
+    (which owns the on-disk format).  Re-exported here for API symmetry.
+    """
+    from . import serialize
+    return serialize.lookup_serialized(path, design_meta, queries)

@@ -1,0 +1,217 @@
+"""On-disk index format + real partial-read lookup (paper §5.6).
+
+Layout (single index file, layers bottom-up):
+
+    [magic u64][json_len u64][json meta][layer_1 bytes] … [layer_L bytes]
+
+Per-layer bytes are the concatenated node records whose byte offsets are
+exactly the outline positions used during tuning, so modeled read sizes
+equal real read sizes:
+
+  * step layer — stream of 16 B pieces ``(key u64, pos i64)``; a node of
+    ``p`` pieces is ``16·p`` consecutive bytes (paper §4.1);
+  * band layer — 40 B records ``(x1 u64, y1 f64, m f64, δ f64, rsv u64)``.
+
+Readers fetch *ranges* (``pread``), never whole layers (except the root,
+per Alg. 1), align to record boundaries, and for step layers extend by one
+record to obtain the next piece's position (fence-pointer style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from .keyset import KeyPositions
+from .latency import IndexDesign
+from .nodes import BandLayer, StepLayer
+
+MAGIC = 0x41495249  # "AIRI"
+_STEP_DT = np.dtype([("key", "<u8"), ("pos", "<i8")])
+_BAND_DT = np.dtype([("x1", "<u8"), ("y1", "<f8"), ("m", "<f8"),
+                     ("delta", "<f8"), ("rsv", "<u8")])
+
+
+@dataclasses.dataclass
+class LayerMeta:
+    kind: str
+    offset: int      # byte offset of the layer within the file
+    size: int        # serialized size (== Θ_l's s(Θ_l))
+    end_pos: int     # position after the layer's last prediction target
+
+
+@dataclasses.dataclass
+class IndexFileMeta:
+    layers: list          # bottom-up LayerMeta
+    data_size: int        # extent of the data layer (for clamping)
+    data_record: int      # fixed record size of the data layer (0 = varlen)
+
+    def to_json(self) -> str:
+        return json.dumps({
+            "layers": [dataclasses.asdict(l) for l in self.layers],
+            "data_size": self.data_size, "data_record": self.data_record,
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "IndexFileMeta":
+        d = json.loads(s)
+        return IndexFileMeta(
+            layers=[LayerMeta(**l) for l in d["layers"]],
+            data_size=d["data_size"], data_record=d["data_record"])
+
+
+def _layer_bytes(layer) -> bytes:
+    if isinstance(layer, StepLayer):
+        rec = np.empty(layer.n_pieces, dtype=_STEP_DT)
+        rec["key"] = layer.piece_keys
+        rec["pos"] = layer.piece_pos[:-1]
+        return rec.tobytes()
+    rec = np.empty(layer.n_nodes, dtype=_BAND_DT)
+    rec["x1"] = layer.x1
+    rec["y1"] = layer.y1.astype(np.float64)
+    rec["m"] = layer.m
+    rec["delta"] = layer.delta
+    rec["rsv"] = 0
+    return rec.tobytes()
+
+
+def write_index(path: str, design: IndexDesign, data_record: int = 0) -> IndexFileMeta:
+    metas = []
+    blobs = []
+    for layer in design.layers:
+        b = _layer_bytes(layer)
+        assert len(b) == layer.size_bytes, "serialized size must match s(Θ_l)"
+        end_pos = int(layer.piece_pos[-1]) if isinstance(layer, StepLayer) \
+            else int(layer.clamp_hi)
+        metas.append(LayerMeta(kind=layer.kind, offset=0, size=len(b),
+                               end_pos=end_pos))
+        blobs.append(b)
+    meta = IndexFileMeta(layers=metas, data_size=design.data.size_bytes,
+                         data_record=data_record)
+    hdr = meta.to_json().encode()
+    base = 16 + len(hdr)
+    off = base
+    for m, b in zip(metas, blobs):
+        m.offset = off
+        off += len(b)
+    hdr = meta.to_json().encode()  # re-encode with final offsets
+    # json length changes offsets only if digit counts change; fix-point it
+    while 16 + len(hdr) != base:
+        base = 16 + len(hdr)
+        off = base
+        for m, b in zip(metas, blobs):
+            m.offset = off
+            off += len(b)
+        hdr = meta.to_json().encode()
+    with open(path, "wb") as f:
+        f.write(np.asarray([MAGIC, len(hdr)], dtype="<u8").tobytes())
+        f.write(hdr)
+        for b in blobs:
+            f.write(b)
+    return meta
+
+
+def read_meta(fd: int) -> IndexFileMeta:
+    head = os.pread(fd, 16, 0)
+    magic, hlen = np.frombuffer(head, dtype="<u8")
+    assert magic == MAGIC, "bad index file"
+    return IndexFileMeta.from_json(os.pread(fd, int(hlen), 16).decode())
+
+
+def load_index(path: str, data: KeyPositions) -> IndexDesign:
+    """Full deserialization (tests/round-trip); real lookups use ranges."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        meta = read_meta(fd)
+        layers = []
+        for lm in meta.layers:
+            raw = os.pread(fd, lm.size, lm.offset)
+            if lm.kind == "step":
+                rec = np.frombuffer(raw, dtype=_STEP_DT)
+                pos = np.append(rec["pos"].astype(np.int64), lm.end_pos)
+                # node grouping is not persisted; treat each piece as a node
+                off = np.arange(len(rec) + 1, dtype=np.int64)
+                layers.append(StepLayer(piece_keys=rec["key"].copy(),
+                                        piece_pos=pos,
+                                        node_piece_off=off))
+            else:
+                rec = np.frombuffer(raw, dtype=_BAND_DT)
+                layers.append(BandLayer(
+                    node_keys=rec["x1"].copy(), x1=rec["x1"].copy(),
+                    y1=rec["y1"].astype(np.int64), m=rec["m"].copy(),
+                    delta=rec["delta"].copy(),
+                    clamp_lo=0, clamp_hi=lm.end_pos))
+        return IndexDesign(layers=tuple(layers), data=data)
+    finally:
+        os.close(fd)
+
+
+# ---------------------------------------------------------------------------
+# real partial-read lookup (Alg. 1 against the file)
+# ---------------------------------------------------------------------------
+def _predict_from_bytes(kind: str, raw: bytes, base_off: int, lo: int,
+                        query: int, end_pos: int) -> tuple[int, int]:
+    """Parse fetched records, find the covering one, predict (Alg.1 l.3–5)."""
+    if kind == "step":
+        rec = np.frombuffer(raw, dtype=_STEP_DT)
+        i = int(np.searchsorted(rec["key"], np.uint64(query), side="right")) - 1
+        i = max(i, 0)
+        nxt = int(rec["pos"][i + 1]) if i + 1 < len(rec) else end_pos
+        return int(rec["pos"][i]), nxt
+    rec = np.frombuffer(raw, dtype=_BAND_DT)
+    i = int(np.searchsorted(rec["x1"], np.uint64(query), side="right")) - 1
+    i = max(i, 0)
+    mid = float(rec["y1"][i]) + float(rec["m"][i]) * float(
+        np.float64(np.uint64(query) - rec["x1"][i]))
+    d = float(rec["delta"][i])
+    return int(np.floor(mid - d)), int(np.ceil(mid + d))
+
+
+class SerializedIndex:
+    """Handle for Alg.-1 lookups against an index file with partial reads."""
+
+    def __init__(self, path: str):
+        self.fd = os.open(path, os.O_RDONLY)
+        self.meta = read_meta(self.fd)
+        self.bytes_read = 0
+        self.reads = 0
+        root = self.meta.layers[-1] if self.meta.layers else None
+        self._root_raw = os.pread(self.fd, root.size, root.offset) if root else b""
+        if root:
+            self.bytes_read += root.size
+            self.reads += 1
+
+    def close(self):
+        os.close(self.fd)
+
+    def lookup(self, query: int) -> tuple[int, int]:
+        """→ predicted [lo, hi) byte range in the data layer."""
+        metas = self.meta.layers
+        if not metas:
+            return 0, self.meta.data_size
+        lo, hi = _predict_from_bytes(
+            metas[-1].kind, self._root_raw, 0, 0, query, metas[-1].end_pos)
+        for lm in reversed(metas[:-1]):
+            rsz = 16 if lm.kind == "step" else 40
+            a = (max(lo, 0) // rsz) * rsz
+            b = min(-(-hi // rsz) * rsz + (rsz if lm.kind == "step" else 0),
+                    lm.size)
+            raw = os.pread(self.fd, b - a, lm.offset + a)
+            self.bytes_read += b - a
+            self.reads += 1
+            lo, hi = _predict_from_bytes(lm.kind, raw, lm.offset, a, query,
+                                         lm.end_pos)
+        lo = max(lo, 0)
+        hi = min(max(hi, lo + 1), self.meta.data_size)
+        return lo, hi
+
+
+def lookup_serialized(path: str, meta_unused, queries: np.ndarray):
+    idx = SerializedIndex(path)
+    try:
+        return np.array([idx.lookup(int(q)) for q in np.asarray(queries)],
+                        dtype=np.int64)
+    finally:
+        idx.close()

@@ -1,0 +1,159 @@
+"""Storage performance profiles ``T(Δ)`` (paper §3.2).
+
+``T(Δ)`` is the expected time to read ``Δ`` consecutive bytes from a storage
+tier.  The paper implements the affine profile ``T_aff(Δ) = ℓ + Δ/B`` and
+notes that the optimization works with *any* monotonically increasing
+``T``.  We provide:
+
+  * :class:`AffineProfile`        — ``ℓ + Δ/B`` (paper default),
+  * :class:`AffineUniformProfile` — expectation under uniformly varying
+    latency/bandwidth (paper §3.2 closed form),
+  * :class:`MeasuredProfile`      — monotone piecewise-linear interpolation
+    of real measurements, plus a helper that actually measures the local
+    filesystem of this machine,
+  * named profiles for the tiers a multi-pod TPU training stack talks to
+    (object store / NFS / SSD / host DRAM / HBM / VMEM / ICI / DCN).
+
+Hardware adaptation (DESIGN.md §2): the paper profiles NFS/SSD/HDD; on a
+TPU system the same abstraction spans ~6 orders of magnitude down to HBM
+and VMEM, and AirIndex tunes index structure per tier unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+
+class StorageProfile:
+    """Monotone non-decreasing expected read time ``T(Δ)`` in seconds."""
+
+    name: str = "abstract"
+
+    def read_time(self, delta):
+        """Vectorized ``T(Δ)``; ``delta`` in bytes (scalar or ndarray)."""
+        raise NotImplementedError
+
+    def __call__(self, delta):
+        return self.read_time(delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineProfile(StorageProfile):
+    """``T(Δ) = ℓ + Δ / B`` with latency ``ℓ`` [s] and bandwidth ``B`` [B/s]."""
+
+    latency: float
+    bandwidth: float
+    name: str = "affine"
+
+    def read_time(self, delta):
+        return self.latency + np.asarray(delta, dtype=np.float64) / self.bandwidth
+
+
+@dataclasses.dataclass(frozen=True)
+class AffineUniformProfile(StorageProfile):
+    """Affine profile with uniformly varying ``ℓ ∈ [ℓ0, ℓ1]``, ``B ∈ [B0, B1]``.
+
+    Paper §3.2: ``T(Δ) = (ℓ0+ℓ1)/2 + Δ (ln B1 − ln B0)/(B1 − B0)``.
+    """
+
+    latency_lo: float
+    latency_hi: float
+    bandwidth_lo: float
+    bandwidth_hi: float
+    name: str = "affine-uniform"
+
+    def read_time(self, delta):
+        ell = 0.5 * (self.latency_lo + self.latency_hi)
+        if self.bandwidth_hi == self.bandwidth_lo:
+            inv_bw = 1.0 / self.bandwidth_lo
+        else:
+            inv_bw = (np.log(self.bandwidth_hi) - np.log(self.bandwidth_lo)) / (
+                self.bandwidth_hi - self.bandwidth_lo)
+        return ell + np.asarray(delta, dtype=np.float64) * inv_bw
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredProfile(StorageProfile):
+    """Monotone piecewise-linear ``T(Δ)`` through measured (Δ, seconds) points."""
+
+    deltas: tuple          # increasing byte sizes
+    seconds: tuple         # measured expected read times
+    name: str = "measured"
+
+    def read_time(self, delta):
+        d = np.asarray(delta, dtype=np.float64)
+        xs = np.asarray(self.deltas, dtype=np.float64)
+        ys = np.maximum.accumulate(np.asarray(self.seconds, dtype=np.float64))
+        # extrapolate the last segment's slope beyond the measured range
+        out = np.interp(d, xs, ys)
+        slope = (ys[-1] - ys[-2]) / max(xs[-1] - xs[-2], 1.0) if len(xs) > 1 else 0.0
+        out = np.where(d > xs[-1], ys[-1] + (d - xs[-1]) * slope, out)
+        return out
+
+    def fit_affine(self) -> AffineProfile:
+        """Least-squares affine fit — useful to report ℓ and B of a tier."""
+        xs = np.asarray(self.deltas, dtype=np.float64)
+        ys = np.asarray(self.seconds, dtype=np.float64)
+        A = np.stack([np.ones_like(xs), xs], axis=1)
+        (ell, inv_bw), *_ = np.linalg.lstsq(A, ys, rcond=None)
+        ell = max(float(ell), 1e-12)
+        bw = 1.0 / max(float(inv_bw), 1e-18)
+        return AffineProfile(latency=ell, bandwidth=bw, name=f"{self.name}-affine")
+
+
+def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
+                          file_bytes: int = 1 << 26, rng=None) -> MeasuredProfile:
+    """Measure ``T(Δ)`` of the filesystem hosting ``path`` (paper §3.2).
+
+    Writes a scratch file once, then times ``pread``s of each size at random
+    offsets.  Page-cache effects make this a *warm* profile on this
+    container; it is still monotone and exercises the real syscall path.
+    """
+    if sizes is None:
+        sizes = [1 << s for s in range(8, 23, 2)]  # 256 B .. 4 MiB
+    rng = rng or np.random.default_rng(0)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    if not os.path.exists(path) or os.path.getsize(path) < file_bytes:
+        with open(path, "wb") as f:
+            f.write(os.urandom(min(file_bytes, 1 << 26)))
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        actual = os.path.getsize(path)
+        meas = []
+        for sz in sizes:
+            ts = []
+            for _ in range(repeats):
+                off = int(rng.integers(0, max(actual - sz, 1)))
+                t0 = time.perf_counter()
+                os.pread(fd, sz, off)
+                ts.append(time.perf_counter() - t0)
+            meas.append(float(np.median(ts)))
+        return MeasuredProfile(deltas=tuple(sizes), seconds=tuple(meas), name="local-fs")
+    finally:
+        os.close(fd)
+
+
+# ---------------------------------------------------------------------------
+# Named profiles.
+#   Paper §2.1 example tiers + paper §7.1 Azure tiers + TPU-system tiers
+#   (the hardware adaptation: same T(Δ) abstraction, constants per tier).
+# ---------------------------------------------------------------------------
+PROFILES = {
+    # paper §2.1 worked example
+    "ssd_ex":    AffineProfile(100e-6, 1e9,    name="ssd_ex"),     # 100 µs, 1 GB/s
+    "cloud_ex":  AffineProfile(100e-3, 100e6,  name="cloud_ex"),   # 100 ms, 100 MB/s
+    # paper §7 experimental tiers (Fig. 3 / Fig. 14 constants)
+    "azure_ssd": AffineProfile(250e-6, 175e6,  name="azure_ssd"),  # 250 µs, 175 MB/s
+    "azure_nfs": AffineProfile(50e-3,  12e6,   name="azure_nfs"),  # 50 ms, 12 MB/s
+    "azure_hdd": AffineProfile(2e-3,   60e6,   name="azure_hdd"),  # 500 IOPS, 60 MB/s
+    # TPU-system tiers (targets of the adaptation; v5e-class constants)
+    "object_store": AffineProfile(80e-3, 250e6, name="object_store"),
+    "host_dram":    AffineProfile(150e-9, 50e9, name="host_dram"),
+    "hbm":          AffineProfile(1e-6,  819e9, name="hbm"),       # v5e HBM
+    "vmem":         AffineProfile(30e-9, 10e12, name="vmem"),
+    "ici":          AffineProfile(1e-6,  50e9,  name="ici"),       # per-link
+    "dcn":          AffineProfile(20e-6, 12.5e9, name="dcn"),
+}

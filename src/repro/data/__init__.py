@@ -1,0 +1,2 @@
+from .datasets import sosd_like, DATASETS
+from .store import ShardedTokenStore, write_token_store

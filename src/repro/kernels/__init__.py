@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  index_lookup     — batched hierarchical index lookup (the paper's Alg. 1
+                     adapted to the MXU: compare-count ranks + one-hot
+                     gathers instead of pointer-chase binary search)
+  flash_attention  — causal blockwise attention (GQA, sliding window,
+                     logit softcap) for train/prefill
+  decode_attention — flash-decode: one-token attention over a long KV
+                     cache with partial-softmax accumulation (composes
+                     with sequence-sharded KV via shard_map)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper) and ref.py (pure-jnp oracle).  On this CPU container the
+kernels are validated with ``interpret=True``; on TPU the same code paths
+compile natively.
+"""

@@ -1,0 +1,2 @@
+from .ops import decode_attention, combine_partials
+from . import ref

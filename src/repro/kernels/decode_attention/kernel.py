@@ -1,0 +1,120 @@
+"""Pallas TPU flash-decode: one new token vs a long KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams through once
+per token), so the kernel's job is to keep that stream dense: grid
+``(B, n_kv_blocks)``; per batch element all query heads are processed at
+once against each (BLOCK_K, D) cache tile, with running (m, l, acc)
+accumulators in VMEM scratch.
+
+Emits the partial-softmax triple (o, m, l) — the same contract as ref.py —
+so a shard_map over a sequence-sharded cache can psum-combine shards
+(flash-decoding across chips; see serve/attention.py).
+
+Per-sequence valid lengths arrive via scalar prefetch (SMEM) so tiles
+beyond a sequence's length are skipped without streaming them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref,                      # scalar prefetch (SMEM)
+                   q_ref, k_ref, v_ref,          # VMEM blocks
+                   o_ref, m_out_ref, l_out_ref,  # outputs
+                   m_ref, l_ref, acc_ref,        # scratch
+                   *, scale, block_k, n_kv_blocks):
+    b = pl.program_id(0)
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    live = ik * block_k < length
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (Hq, D)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (Hq, bk)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_ref[...]                             # (Hq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        m_out_ref[0] = m_ref[...][:, 0]
+        l_out_ref[0] = l_ref[...][:, 0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "block_k", "interpret"))
+def decode_attention_pallas(q, k, v, kv_length, *, scale=None, block_k=128,
+                            interpret=True):
+    """q (B,Hq,D); k/v (B,1,S,D); kv_length (B,) int32.
+
+    ops.py folds GQA/MHA kv heads into the batch axis, so every kernel
+    batch row pairs one kv head with its group of query heads (Hkv ≡ 1).
+    Returns (o (B,Hq,D) f32, m (B,Hq) f32, l (B,Hq) f32).
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    assert S % block_k == 0
+    assert Hkv == 1, "ops.py folds kv heads into batch"
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    n_kv = S // block_k
+    grid = (B, n_kv)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_kv_blocks=n_kv)
+    # index maps receive (grid indices..., scalar_ref) under scalar prefetch
+    kmap = (lambda b, ik, lens: (b, 0, ik, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, ik, lens: (b, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), kmap),
+            pl.BlockSpec((1, 1, block_k, D), kmap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Hq, D), lambda b, ik, lens: (b, 0, 0)),
+            pl.BlockSpec((1, Hq), lambda b, ik, lens: (b, 0)),
+            pl.BlockSpec((1, Hq), lambda b, ik, lens: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, 1), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_length.astype(jnp.int32), q, k, v)

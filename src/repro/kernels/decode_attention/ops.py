@@ -1,0 +1,38 @@
+"""Public wrapper for flash-decode: GQA regrouping + shard combination."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as K
+from . import ref
+
+
+def decode_attention(q, k, v, kv_length=None, *, scale=None, block_k=128,
+                     interpret=True, use_ref=False):
+    """q (B,Hq,D); k/v (B,Hkv,S,D) → partial triple (o, m, l).
+
+    GQA is handled by folding the kv-head axis into the batch: each
+    (batch, kv_head) pair becomes one kernel batch row whose Hq′ = group
+    query heads attend to that single kv head.
+    """
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    if kv_length is None:
+        kv_length = jnp.full((B,), S, jnp.int32)
+    if use_ref:
+        return ref.decode_attention_ref(q, k, v, kv_length, scale=scale)
+    group = Hq // Hkv
+    # fold kv heads into batch: q (B·Hkv, group, D); k/v (B·Hkv, 1, S, D) —
+    # the kernel then always pairs one kv head with its group of q heads
+    qg = q.reshape(B, Hkv, group, D).reshape(B * Hkv, group, D)
+    kg = k.reshape(B * Hkv, 1, S, D)
+    vg = v.reshape(B * Hkv, 1, S, D)
+    lg = jnp.repeat(kv_length, Hkv)
+    o, m, l = K.decode_attention_pallas(
+        qg, kg, vg, lg, scale=scale, block_k=block_k, interpret=interpret)
+    return (o.reshape(B, Hq, D), m.reshape(B, Hq), l.reshape(B, Hq))
+
+
+def combine_partials(os, ms, ls):
+    """Combine per-shard partial triples stacked on axis 0 (ref math)."""
+    return ref.combine_partials_ref(os, ms, ls)

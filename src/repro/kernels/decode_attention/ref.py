@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for flash-decode (single-token attention over a cache).
+
+Returns the *partial-softmax triple* ``(o, m, l)`` so the result can be
+combined across sequence shards:
+
+    o — Σ_j exp(s_j − m)·v_j / l     (locally normalized output)
+    m — local running max
+    l — local normalizer Σ_j exp(s_j − m)
+
+Combination across shards i (ref for the shard_map flash-decode path):
+
+    M = max_i m_i;  L = Σ_i l_i·exp(m_i − M);  O = Σ_i o_i·l_i·exp(m_i − M)/L
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, kv_length=None, scale=None):
+    """q (B,Hq,D); k/v (B,Hkv,S,D); kv_length (B,) → (o (B,Hq,D), m, l (B,Hq))."""
+    B, Hq, D = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D)
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)   # (B,Hq,S,D)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", qf, kf)
+    if kv_length is not None:
+        mask = jnp.arange(S)[None, None, :] < kv_length[:, None, None]
+        s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", p, vf) / jnp.maximum(l, 1e-30)[..., None]
+    return o, m, l
+
+
+def combine_partials_ref(os, ms, ls):
+    """Combine per-shard (o, m, l) triples along a leading shard axis."""
+    M = ms.max(axis=0)
+    w = ls * jnp.exp(ms - M[None])
+    L = w.sum(axis=0)
+    O = (os * w[..., None]).sum(axis=0) / jnp.maximum(L, 1e-30)[..., None]
+    return O, M, L

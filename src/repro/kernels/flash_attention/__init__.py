@@ -1,0 +1,2 @@
+from .ops import flash_attention
+from . import ref

@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (causal, GQA, sliding window, softcap).
+
+Blockwise online-softmax attention.  Grid ``(B, Hq, n_q_blocks,
+n_kv_blocks)`` — the kv-block dimension is innermost, and TPU grids are
+executed sequentially per core, so VMEM scratch accumulators (running max
+``m``, normalizer ``l``, output ``acc``) persist across kv iterations of
+one (b, h, iq) cell.
+
+BlockSpecs:
+  q/out: (1, 1, BLOCK_Q, D)  at (b, h, iq, 0)
+  k/v:   (1, 1, BLOCK_K, D)  at (b, h·Hkv//Hq, ik, 0)  ← GQA via index map
+
+Out-of-range blocks (fully masked by causality/window) are skipped with
+``pl.when`` — logits are never computed for them, though their tiles are
+still streamed in by the fixed grid (a known cost of dense grids; the
+§Perf log discusses the skip-map optimization for TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale, causal, window, softcap, q_offset, block_q, block_k,
+                 n_kv_blocks):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = q_offset + iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    # block-level skip: any (q, k) pair in this tile attendable?
+    lo_q = q_offset + iq * block_q
+    hi_q = lo_q + block_q - 1
+    lo_k = ik * block_k
+    hi_k = lo_k + block_k - 1
+    live = True
+    if causal:
+        live = jnp.logical_and(live, lo_k <= hi_q)
+    if window is not None:
+        live = jnp.logical_and(live, hi_k > lo_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones_like(s, dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "block_q",
+                     "block_k", "q_offset", "interpret"))
+def flash_attention_pallas(q, k, v, *, causal=True, window=None, softcap=None,
+                           scale=None, block_q=128, block_k=128,
+                           q_offset=None, interpret=True):
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D) → (B,Hq,Sq,D), q's dtype.
+
+    Sq/Skv must be multiples of the block sizes (ops.py pads).  Query i sits
+    at position ``q_offset + i`` (default: aligned to the end of kv —
+    prefill-with-cache semantics).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Sq % block_q == 0 and Skv % block_k == 0 and Hq % Hkv == 0
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    n_q = Sq // block_q
+    n_kv = Skv // block_k
+    grid = (B, Hq, n_q, n_kv)
+    group = Hq // Hkv
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap,
+        q_offset=(Skv - Sq) if q_offset is None else q_offset,
+        block_q=block_q, block_k=block_k, n_kv_blocks=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

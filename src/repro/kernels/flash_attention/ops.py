@@ -1,0 +1,38 @@
+"""Public wrapper: pad to block multiples, dispatch kernel or oracle."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as K
+from . import ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    scale=None, block_q=128, block_k=128, interpret=True,
+                    use_ref=False):
+    """Flash attention with GQA/sliding-window/softcap.
+
+    q (B,Hq,Sq,D), k/v (B,Hkv,Skv,D).  Pads Sq/Skv up to block multiples;
+    padded kv columns are masked out via an effective causal bound (padding
+    appends *future* positions, which causal masking already excludes).
+    """
+    if use_ref:
+        return ref.attention_ref(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale)
+    B, Hq, Sq, D = q.shape
+    Skv = k.shape[2]
+    pq = (-Sq) % block_q
+    pk = (-Skv) % block_k
+    assert causal or pk == 0, "non-causal padding needs explicit kv masking"
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    # original query i keeps its true position Skv − Sq + i; padded queries
+    # land after it and padded kv is excluded by the causal bound
+    out = K.flash_attention_pallas(
+        q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+        block_q=block_q, block_k=block_k, q_offset=Skv - Sq,
+        interpret=interpret)
+    return out[:, :, :Sq] if pq else out

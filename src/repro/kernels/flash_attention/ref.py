@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for blockwise (flash) attention.
+
+Supports the attention variants the architecture pool needs:
+  * causal masking,
+  * GQA (q_heads a multiple of kv_heads),
+  * sliding-window (local) attention — gemma2's alternating local layers,
+  * logit softcapping — gemma2,
+  * explicit kv length masking (padded caches).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=None,
+                  kv_length=None, scale=None):
+    """q (B, Hq, Sq, D); k/v (B, Hkv, Skv, D) → (B, Hq, Sq, D) float32.
+
+    ``window``: keys attendable iff q_pos − window < k_pos ≤ q_pos.
+    ``kv_length``: (B,) valid kv prefix lengths.
+    Query positions are aligned to the *end* of the kv sequence
+    (q_pos = Skv − Sq + i), matching decode/prefill-with-cache semantics.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(D)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = Skv - Sq + jnp.arange(Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    mask = jnp.broadcast_to(mask[None, None], s.shape)
+    if kv_length is not None:
+        lmask = k_pos[None, :] < kv_length[:, None]          # (B, Skv)
+        mask &= lmask[:, None, None, :]
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf)

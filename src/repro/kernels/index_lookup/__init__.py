@@ -1,0 +1,2 @@
+from .ops import lookup_step_layer, lookup_band_layer, traverse_index
+from . import ref

@@ -1,0 +1,150 @@
+"""Pallas TPU kernels: batched index-layer lookup (Alg. 1 on the MXU/VPU).
+
+Hardware adaptation (DESIGN.md §2): a CPU traverses an index by
+pointer-chase binary search — serial, data-dependent, hostile to TPUs.
+The TPU-native formulation used here:
+
+  rank(q)  = Σ_tiles count(keys_tile ≤ q)       (compare + row-sum, VPU)
+  gather   = Σ_j onehot(i)_j · value_j          (select + row-sum; an MXU
+                                                 matmul when values fit f32)
+
+Both are dense, block-tileable array ops.  One pallas_call handles one
+layer for a block of queries; the whole (padded) layer lives in VMEM —
+which is the *designed* regime: AirIndex tunes upper layers to be small
+(Fig. 1), and `ops.py` falls back to a two-level scheme for oversized
+layers.
+
+Blocking: queries are tiled ``(BLOCK_Q,)``; layer arrays are brought in
+whole (padded to a multiple of 128 lanes).  int32 gathers use masked
+integer row-sums (exact); float32 gathers use select + row-sum (exact,
+one non-zero per row).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 256
+LANE = 128
+KEY_PAD = jnp.iinfo(jnp.int32).max  # padding key: never ≤ any query
+
+
+def _rank(keys, q):
+    """#{keys ≤ q} per query; keys (P,), q (Bq,) → (Bq,) int32."""
+    cmp = (keys[None, :] <= q[:, None]).astype(jnp.int32)   # (Bq, P)
+    return cmp.sum(axis=1)
+
+
+def _gather_i32(values, idx, P):
+    """Exact int32 gather via masked row-sum; values (P,), idx (Bq,)."""
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], P), 1)
+              == idx[:, None])
+    return jnp.sum(jnp.where(onehot, values[None, :], 0), axis=1)
+
+
+def _gather_f32(values, idx, P):
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], P), 1)
+              == idx[:, None])
+    return jnp.sum(jnp.where(onehot, values[None, :], 0.0), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# step layer
+# ---------------------------------------------------------------------------
+def _step_kernel(q_ref, keys_ref, pos_lo_ref, pos_hi_ref, lo_ref, hi_ref):
+    q = q_ref[...]
+    keys = keys_ref[...]
+    P = keys.shape[0]
+    i = jnp.maximum(_rank(keys, q) - 1, 0)
+    lo_ref[...] = _gather_i32(pos_lo_ref[...], i, P)
+    hi_ref[...] = _gather_i32(pos_hi_ref[...], i, P)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def step_lookup_pallas(queries, piece_keys, pos_lo, pos_hi, *, interpret=True):
+    """queries (Q,) int32 — Q multiple of BLOCK_Q; layer padded to LANE."""
+    Q, P = queries.shape[0], piece_keys.shape[0]
+    assert Q % BLOCK_Q == 0 and P % LANE == 0
+    grid = (Q // BLOCK_Q,)
+    qspec = pl.BlockSpec((BLOCK_Q,), lambda i: (i,))
+    lspec = pl.BlockSpec((P,), lambda i: (0,))
+    return pl.pallas_call(
+        _step_kernel,
+        grid=grid,
+        in_specs=[qspec, lspec, lspec, lspec],
+        out_specs=[qspec, qspec],
+        out_shape=[jax.ShapeDtypeStruct((Q,), jnp.int32)] * 2,
+        interpret=interpret,
+    )(queries, piece_keys, pos_lo, pos_hi)
+
+
+# ---------------------------------------------------------------------------
+# band layer
+# ---------------------------------------------------------------------------
+def _band_kernel(q_ref, keys_ref, x1_ref, y1_ref, m_ref, d_ref, lo_ref, hi_ref):
+    q = q_ref[...]
+    keys = keys_ref[...]
+    P = keys.shape[0]
+    j = jnp.maximum(_rank(keys, q) - 1, 0)
+    x1 = _gather_f32(x1_ref[...], j, P)
+    y1 = _gather_f32(y1_ref[...], j, P)
+    m = _gather_f32(m_ref[...], j, P)
+    d = _gather_f32(d_ref[...], j, P)
+    mid = y1 + m * (q.astype(jnp.float32) - x1)
+    lo = jnp.floor(mid - d).astype(jnp.int32)
+    hi = jnp.ceil(mid + d).astype(jnp.int32)
+    lo_ref[...] = lo
+    hi_ref[...] = jnp.maximum(hi, lo + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def band_lookup_pallas(queries, node_keys, x1, y1, m, delta, *, interpret=True):
+    Q, P = queries.shape[0], node_keys.shape[0]
+    assert Q % BLOCK_Q == 0 and P % LANE == 0
+    grid = (Q // BLOCK_Q,)
+    qspec = pl.BlockSpec((BLOCK_Q,), lambda i: (i,))
+    lspec = pl.BlockSpec((P,), lambda i: (0,))
+    return pl.pallas_call(
+        _band_kernel,
+        grid=grid,
+        in_specs=[qspec] + [lspec] * 5,
+        out_specs=[qspec, qspec],
+        out_shape=[jax.ShapeDtypeStruct((Q,), jnp.int32)] * 2,
+        interpret=interpret,
+    )(queries, node_keys, x1, y1, m, delta)
+
+
+# ---------------------------------------------------------------------------
+# segmented step lookup (level 2 of the two-level scheme for big layers):
+# query i searches only its own (S,)-segment, fetched by a host-side gather
+# ---------------------------------------------------------------------------
+def _seg_step_kernel(q_ref, keys_ref, lo_in_ref, hi_in_ref, lo_ref, hi_ref):
+    q = q_ref[...]                         # (Bq,)
+    keys = keys_ref[...]                   # (Bq, S)
+    S = keys.shape[1]
+    cmp = (keys <= q[:, None]).astype(jnp.int32)
+    i = jnp.maximum(cmp.sum(axis=1) - 1, 0)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, keys.shape, 1) == i[:, None])
+    lo_ref[...] = jnp.sum(jnp.where(onehot, lo_in_ref[...], 0), axis=1)
+    hi_ref[...] = jnp.sum(jnp.where(onehot, hi_in_ref[...], 0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segmented_step_lookup_pallas(queries, seg_keys, seg_pos_lo, seg_pos_hi, *,
+                                 interpret=True):
+    Q, S = seg_keys.shape
+    assert Q % BLOCK_Q == 0 and S % LANE == 0
+    grid = (Q // BLOCK_Q,)
+    qspec = pl.BlockSpec((BLOCK_Q,), lambda i: (i,))
+    sspec = pl.BlockSpec((BLOCK_Q, S), lambda i: (i, 0))
+    return pl.pallas_call(
+        _seg_step_kernel,
+        grid=grid,
+        in_specs=[qspec, sspec, sspec, sspec],
+        out_specs=[qspec, qspec],
+        out_shape=[jax.ShapeDtypeStruct((Q,), jnp.int32)] * 2,
+        interpret=interpret,
+    )(queries, seg_keys, seg_pos_lo, seg_pos_hi)

@@ -1,0 +1,144 @@
+"""Public jit'd wrappers for the index-lookup kernels.
+
+``lookup_step_layer`` / ``lookup_band_layer`` pad inputs to kernel tiling,
+dispatch the single-call kernel when the layer fits VMEM, and otherwise use
+the two-level scheme (sampled-grid search → per-query segment gather →
+segmented kernel).  ``traverse_index`` chains layers top-down — the batched
+Alg. 1.
+
+Arrays are int32 keys / int32 positions (band params float32); conversion
+from the numpy ``IndexDesign`` is in :func:`device_arrays_from_design`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel as K
+from . import ref
+
+MAX_VMEM_ENTRIES = 4096  # single-call kernels keep the whole layer in VMEM
+
+
+def _pad_to(x, mult, fill):
+    n = x.shape[-1]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full(x.shape[:-1] + (pad,), fill, x.dtype)],
+                           axis=-1)
+
+
+def _pad_queries(q):
+    padded = _pad_to(q, K.BLOCK_Q, q[-1])
+    return padded, q.shape[0]
+
+
+def lookup_step_layer(queries, piece_keys, piece_pos, *, interpret=True,
+                      use_ref=False):
+    """Batched step-layer lookup.
+
+    queries (Q,) int32; piece_keys (P,) int32 sorted; piece_pos (P+1,) int32.
+    Returns (lo, hi) int32 arrays of shape (Q,).
+    """
+    pos_lo, pos_hi = piece_pos[:-1], piece_pos[1:]
+    if use_ref:
+        return ref.step_lookup_ref(queries, piece_keys, pos_lo, pos_hi)
+    P = piece_keys.shape[0]
+    q, nq = _pad_queries(queries)
+    if P <= MAX_VMEM_ENTRIES:
+        keys = _pad_to(piece_keys, K.LANE, K.KEY_PAD)
+        lo = _pad_to(pos_lo, K.LANE, pos_lo[-1])
+        hi = _pad_to(pos_hi, K.LANE, pos_hi[-1])
+        out_lo, out_hi = K.step_lookup_pallas(q, keys, lo, hi,
+                                              interpret=interpret)
+        return out_lo[:nq], out_hi[:nq]
+    # two-level: search a sampled grid, then the owning segment per query
+    S = K.LANE
+    n_seg = -(-P // S)
+    seg_first = piece_keys[::S]                       # (n_seg,) grid keys
+    g = jnp.searchsorted(seg_first, queries, side="right") - 1
+    g = jnp.maximum(g, 0)
+    # gather each query's segment (host-side XLA gather, then kernel search)
+    base = g * S
+    idx = base[:, None] + jnp.arange(S)[None, :]
+    idx = jnp.minimum(idx, P - 1)
+    seg_keys = piece_keys[idx]
+    seg_lo = pos_lo[idx]
+    seg_hi = pos_hi[idx]
+    qp, nq = _pad_queries(queries)
+    padq = qp.shape[0] - nq
+    if padq:
+        seg_keys = jnp.concatenate([seg_keys, jnp.tile(seg_keys[-1:], (padq, 1))])
+        seg_lo = jnp.concatenate([seg_lo, jnp.tile(seg_lo[-1:], (padq, 1))])
+        seg_hi = jnp.concatenate([seg_hi, jnp.tile(seg_hi[-1:], (padq, 1))])
+    out_lo, out_hi = K.segmented_step_lookup_pallas(
+        qp, seg_keys, seg_lo, seg_hi, interpret=interpret)
+    return out_lo[:nq], out_hi[:nq]
+
+
+def lookup_band_layer(queries, node_keys, x1, y1, m, delta, *, interpret=True,
+                      use_ref=False):
+    """Batched band-layer lookup → (lo, hi) int32 of shape (Q,)."""
+    if use_ref:
+        return ref.band_lookup_ref(queries, node_keys, x1, y1, m, delta)
+    P = node_keys.shape[0]
+    assert P <= MAX_VMEM_ENTRIES, "band layers are tuned small; got %d" % P
+    q, nq = _pad_queries(queries)
+    keys = _pad_to(node_keys, K.LANE, K.KEY_PAD)
+    pads = [_pad_to(a, K.LANE, 0.0) for a in (x1, y1, m, delta)]
+    out_lo, out_hi = K.band_lookup_pallas(q, keys, *pads, interpret=interpret)
+    return out_lo[:nq], out_hi[:nq]
+
+
+def device_arrays_from_design(design) -> list[dict]:
+    """Convert a numpy IndexDesign into kernel-ready int32/f32 arrays.
+
+    Requires keys and positions to fit int32 (serving-scale page tables and
+    sample indexes do; SOSD-scale benchmarks use the numpy path).
+    """
+    layers = []
+    for layer in design.layers:
+        if layer.kind == "step":
+            assert layer.piece_keys.max() < 2**31 and layer.piece_pos.max() < 2**31
+            layers.append(dict(
+                kind="step",
+                piece_keys=jnp.asarray(layer.piece_keys, jnp.int32),
+                piece_pos=jnp.asarray(layer.piece_pos, jnp.int32),
+            ))
+        else:
+            assert layer.node_keys.max() < 2**31
+            # widen δ by the worst-case f32 rounding of mid = y1 + m·(q−x1):
+            # a few ULP of |y1| plus key-quantization error |m|·ULP(x1)
+            slack = (8.0 + np.abs(layer.y1) * 4e-6
+                     + np.abs(layer.m) * np.abs(layer.x1.astype(np.float64))
+                     * 4e-6)
+            layers.append(dict(
+                kind="band",
+                node_keys=jnp.asarray(layer.node_keys, jnp.int32),
+                x1=jnp.asarray(layer.x1, jnp.float32),
+                y1=jnp.asarray(layer.y1, jnp.float32),
+                m=jnp.asarray(layer.m, jnp.float32),
+                delta=jnp.asarray(layer.delta + slack, jnp.float32),
+            ))
+    return layers
+
+
+def traverse_index(layers: list[dict], queries, *, interpret=True,
+                   use_ref=False):
+    """Batched Alg. 1 over kernel-ready layers (top-down) → final (lo, hi)."""
+    lo = hi = None
+    for layer in reversed(layers):
+        if layer["kind"] == "step":
+            lo, hi = lookup_step_layer(queries, layer["piece_keys"],
+                                       layer["piece_pos"],
+                                       interpret=interpret, use_ref=use_ref)
+        else:
+            lo, hi = lookup_band_layer(queries, layer["node_keys"],
+                                       layer["x1"], layer["y1"], layer["m"],
+                                       layer["delta"],
+                                       interpret=interpret, use_ref=use_ref)
+    return lo, hi

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the batched index-lookup kernels.
+
+Semantics contract (shared with kernel.py):
+
+  * step layer: rank r(q) = #{piece keys ≤ q}; covering piece i = max(r−1, 0);
+    prediction = [pos_lo[i], pos_hi[i]).
+  * band layer: node j = max(#{node keys ≤ q} − 1, 0);
+    mid = y1[j] + m[j]·(q − x1[j]) in float32;
+    prediction = [floor(mid − δ[j]), ceil(mid + δ[j])).
+
+Keys and step positions are int32 (TPU-native); band math is float32.
+The oracle uses the same dtypes/ops so kernel vs ref comparison is exact.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_lookup_ref(queries, piece_keys, pos_lo, pos_hi):
+    """queries (Q,) int32; piece_keys (P,) int32 sorted; pos_* (P,) int32."""
+    r = jnp.searchsorted(piece_keys, queries, side="right").astype(jnp.int32)
+    i = jnp.maximum(r - 1, 0)
+    return pos_lo[i], pos_hi[i]
+
+
+def band_lookup_ref(queries, node_keys, x1, y1, m, delta):
+    """queries (Q,) int32; node_keys (N,) int32 sorted; params (N,) float32."""
+    r = jnp.searchsorted(node_keys, queries, side="right").astype(jnp.int32)
+    j = jnp.maximum(r - 1, 0)
+    mid = y1[j] + m[j] * (queries.astype(jnp.float32) - x1[j])
+    lo = jnp.floor(mid - delta[j]).astype(jnp.int32)
+    hi = jnp.ceil(mid + delta[j]).astype(jnp.int32)
+    return lo, jnp.maximum(hi, lo + 1)
+
+
+def segmented_step_lookup_ref(queries, seg_keys, seg_pos_lo, seg_pos_hi):
+    """Row-wise variant: query i searches its own segment seg_keys[i] (S,)."""
+    cmp = (seg_keys <= queries[:, None]).astype(jnp.int32)
+    r = cmp.sum(axis=1)
+    i = jnp.maximum(r - 1, 0)
+    take = jnp.take_along_axis
+    lo = take(seg_pos_lo, i[:, None], axis=1)[:, 0]
+    hi = take(seg_pos_hi, i[:, None], axis=1)[:, 0]
+    return lo, hi

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit each
+step function onto the production mesh with ShapeDtypeStruct inputs,
+``.lower().compile()``, and record memory_analysis / cost_analysis /
+collective-bytes (parsed from HLO) for the roofline (EXPERIMENTS.md).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh single            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.jsonl
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config
+from repro.launch import hlo_analysis
+from repro.dist.sharding import (batch_sharding, decode_state_shardings,
+                                 param_shardings, replicated,
+                                 set_activation_mesh)
+from repro.launch.mesh import make_production_mesh
+from repro.models import api
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train.optimizer import AdamWConfig, opt_state_specs
+from repro.train.train_step import TrainConfig, make_train_step
+
+def _tree_bytes(specs) -> int:
+    return sum(s.size * s.dtype.itemsize for s in jax.tree.leaves(specs))
+
+
+# grad-accumulation microbatches per arch (train_4k): keeps per-device
+# activation memory inside v5e HBM; chosen from the memory_analysis sweep
+MICROBATCHES = {
+    "deepseek-coder-33b": 8, "llava-next-34b": 8, "grok-1-314b": 4,
+    "gemma2-27b": 4, "qwen3-14b": 2, "glm4-9b": 2,
+    "llama4-scout-17b-a16e": 4, "rwkv6-7b": 2, "zamba2-1.2b": 1,
+    "whisper-small": 1,
+}
+
+
+def build_cell(cfg, shape):
+    """→ (fn, example_args (ShapeDtypeStructs), in_shardings fn, donate)."""
+    pspecs = api.param_specs(cfg)
+    if shape.kind == "train":
+        ocfg = AdamWConfig(
+            moment_dtype="bfloat16" if cfg.name == "grok-1-314b" else "float32")
+        tcfg = TrainConfig(optimizer=ocfg,
+                           microbatches=MICROBATCHES.get(cfg.name, 1))
+        step = make_train_step(cfg, tcfg)
+        ospecs = opt_state_specs(pspecs, ocfg)
+        bspecs = api.input_specs(cfg, shape)
+
+        def shardings(mesh):
+            # ZeRO-1: moments additionally sharded over the DP axes
+            return (param_shardings(cfg, pspecs, mesh),
+                    {"m": param_shardings(cfg, ospecs["m"], mesh, zero=True),
+                     "v": param_shardings(cfg, ospecs["v"], mesh, zero=True),
+                     "step": replicated(mesh)},
+                    batch_sharding(mesh, bspecs))
+
+        return step, (pspecs, ospecs, bspecs), shardings, (0, 1)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        bspecs = api.input_specs(cfg, shape)
+
+        def shardings(mesh):
+            return (param_shardings(cfg, pspecs, mesh),
+                    batch_sharding(mesh, bspecs))
+
+        return fn, (pspecs, bspecs), shardings, ()
+    # decode
+    fn = make_decode_step(cfg)
+    bspecs = api.input_specs(cfg, shape)
+    sspecs = api.decode_state_specs(cfg, shape.global_batch, shape.seq_len)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def shardings(mesh):
+        return (param_shardings(cfg, pspecs, mesh),
+                batch_sharding(mesh, bspecs),
+                decode_state_shardings(cfg, sspecs, mesh),
+                replicated(mesh))
+
+    return fn, (pspecs, bspecs, sspecs, pos), shardings, (2,)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    from repro.models.api import SHAPES, shape_supported
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": cfg.name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not shape_supported(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long-context decode requires sub-quadratic "
+                         "attention (DESIGN.md §5)")
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_mesh(mesh)
+    fn, args, shardings, donate = build_cell(cfg, shape)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=shardings(mesh),
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        # collectives appear only in the SPMD-partitioned module; the
+        # trip-count-aware analyzer corrects for scan bodies (hlo_analysis)
+        analysis = hlo_analysis.analyze(compiled.as_text())
+        coll = analysis["collective_bytes"]
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    n_dev = mesh.devices.size
+    rec.update({
+        "status": "ok",
+        "n_devices": int(n_dev),
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "param_bytes": _tree_bytes(args[0]),
+        "dot_flops": analysis["dot_flops"],
+        "hbm_traffic_bytes": analysis["hbm_traffic_bytes"],
+        "unfused_traffic_bytes": analysis["unfused_traffic_bytes"],
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                            None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals", "utilization")
+                 if isinstance(cost, dict) and k in cost},
+    })
+    if not isinstance(cost, dict):
+        try:
+            rec["cost"] = {"flops": cost[0].get("flops"),
+                           "bytes accessed": cost[0].get("bytes accessed")}
+        except Exception:
+            rec["cost"] = {}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL here")
+    args = ap.parse_args()
+
+    from repro.models.api import SHAPES
+    cells = []
+    archs = ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    done = set()
+    if args.out and os.path.exists(args.out):
+        for line in open(args.out):
+            r = json.loads(line)
+            if r.get("status") in ("ok", "skipped"):
+                done.add((r["arch"], r["shape"], r["mesh"]))
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                cells.append((arch, shape, mp))
+    for arch, shape, mp in cells:
+        cfgname = get_config(arch).name
+        key = (cfgname, shape, "2x16x16" if mp else "16x16")
+        if key in done:
+            print(f"[skip-cached] {key}", flush=True)
+            continue
+        print(f"[cell] {key} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, mp)
+        except Exception as e:  # record failures — they are bugs to fix
+            rec = {"arch": cfgname, "shape": shape,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "status": "error", "error": repr(e)[:2000]}
+        print(json.dumps(rec)[:600], flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        if rec["status"] == "ok":
+            m = rec["memory"]
+            print(f"    mem/dev: args={m['argument_bytes']}, "
+                  f"temp={m['temp_bytes']}; flops={rec['cost'].get('flops')}; "
+                  f"coll={rec['collectives']['total']}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — only the dry-run/launcher
+call it after setting the host-platform device count.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: the fault-tolerance path re-forms smaller meshes."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,110 @@
+"""Training launcher: mesh setup, sharded train loop, fault tolerance.
+
+On a real cluster every host runs this same file (jax.distributed
+initializes from the pod environment); on this container it drives the
+single CPU device end-to-end with the identical code path:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --smoke \
+        --steps 20 --batch 4 --seq 128
+
+Production features wired in: ZeRO-1 optimizer sharding, activation
+sharding constraints, grad accumulation, deterministic replayable data
+(ShardedTokenStore), periodic AirIndex-manifest checkpoints, and the
+TrainingSupervisor restart loop (heartbeats + elastic re-mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--workdir", default="/tmp/repro-train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--data", default=None, help="token store dir")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data.store import ShardedTokenStore, write_token_store
+    from repro.models import api
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.train.fault_tolerance import FTConfig, TrainingSupervisor
+    from repro.train.train_step import TrainConfig, make_train_step
+    from repro.train.optimizer import adamw_init
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    os.makedirs(args.workdir, exist_ok=True)
+    print(f"[train] {cfg.name} smoke={args.smoke} devices={jax.devices()}")
+
+    # data: build a synthetic store if none given (deterministic, replayable)
+    data_dir = args.data or os.path.join(args.workdir, "data")
+    if not os.path.exists(os.path.join(data_dir, "offsets.npy")):
+        rng = np.random.default_rng(0)
+        samples = [rng.integers(0, cfg.vocab, rng.integers(64, 512))
+                   .astype(np.int32) for _ in range(2048)]
+        write_token_store(data_dir, samples)
+    store = ShardedTokenStore(data_dir, profile="azure_ssd")
+    print(f"[data] sample index: {store.tune.design.describe()}")
+
+    tcfg = TrainConfig(microbatches=args.microbatches)
+    params = api.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, tcfg.optimizer)
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+    def save(state, step):
+        save_checkpoint(args.workdir, state["params"], step=step,
+                        profile="azure_ssd")
+
+    def restore(step):
+        # build the restore template from specs — the live params
+        # were donated to step_fn and their buffers are gone
+        like = jax.tree.map(lambda s: np.zeros(s.shape, s.dtype),
+                            api.param_specs(cfg))
+        tree, stats = restore_checkpoint(args.workdir, like, step=step)
+        print(f"[restore] step={step} bytes_read={stats['bytes_read']}")
+        # fresh moments: the pre-failure opt state was donated to step_fn
+        restored = jax.tree.map(jnp.asarray, tree)
+        return {"params": restored, "opt": adamw_init(restored, tcfg.optimizer)}
+
+    sup = TrainingSupervisor(args.workdir, [f"host{i}" for i in range(4)],
+                             FTConfig(checkpoint_every=args.ckpt_every),
+                             save, restore)
+    it = store.batch_iterator(args.batch, args.seq, seed=0)
+    losses = []
+
+    def one_step(state, step):
+        batch = next(it)
+        p, o, m = step_fn(state["params"], state["opt"],
+                          jax.tree.map(jnp.asarray, batch))
+        losses.append(float(m["loss"]))
+        if step % 5 == 0:
+            print(f"[step {step}] loss={losses[-1]:.4f} "
+                  f"gnorm={float(m['grad_norm']):.3f}")
+        return {"params": p, "opt": o}
+
+    t0 = time.time()
+    state = {"params": params, "opt": opt}
+    state, steps, log = sup.run(state, one_step, n_steps=args.steps)
+    dt = time.time() - t0
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"[done] {steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    assert losses[-1] < losses[0], "loss must decrease"
+    store.close()
+
+
+if __name__ == "__main__":
+    main()

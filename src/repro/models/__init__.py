@@ -1,0 +1,9 @@
+"""Architecture zoo: pure-pytree JAX model definitions.
+
+All models expose the same API (see api.py):
+    param_specs(cfg)   → pytree of ShapeDtypeStruct (dry-run, sharding)
+    init_params(cfg, rng) → concrete pytree (smoke tests, examples)
+    forward(cfg, params, batch) → logits
+    train_step / prefill / decode in repro.train / repro.serve
+"""
+from .config import ModelConfig

@@ -1,0 +1,143 @@
+"""Uniform model API: dispatch by config.family.
+
+    param_specs(cfg)                  → abstract params (dry-run/sharding)
+    init_params(cfg, rng)             → concrete params (smoke/examples)
+    forward_train(cfg, params, batch) → (logits, aux_loss)
+    forward_decode(cfg, params, batch, cache, pos) → (logits, new_cache)
+    decode_state_specs(cfg, batch, max_len) → abstract cache/state
+    input_specs(cfg, shape)           → abstract batch for a named shape
+
+The four assigned input shapes (train_4k / prefill_32k / decode_32k /
+long_500k) are materialized by :func:`input_specs` as ShapeDtypeStructs —
+weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv, ssm, transformer, whisper
+from .config import ModelConfig
+
+_TRANSFORMER_FAMILIES = ("dense", "moe", "vlm")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer
+    if cfg.family == "ssm":
+        return rwkv
+    if cfg.family == "hybrid":
+        return ssm
+    if cfg.family == "audio":
+        return whisper
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg):
+    return _mod(cfg).param_specs(cfg)
+
+
+def init_params(cfg, rng):
+    return _mod(cfg).init_params(cfg, rng)
+
+
+def forward_train(cfg, params, batch):
+    return _mod(cfg).forward_train(cfg, params, batch)
+
+
+def forward_hidden(cfg, params, batch):
+    """Final-normed hidden states before the unembedding — the loss and
+    prefill paths unembed chunk-wise / last-token-only to avoid ever
+    materializing (B, S, vocab) logits."""
+    return _mod(cfg).forward_hidden(cfg, params, batch)
+
+
+def apply_unembed(cfg, params, hidden):
+    logits = hidden @ params["unembed"]
+    if getattr(cfg, "final_softcap", None):
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)
+    if cfg.padded_vocab != cfg.vocab:      # mask padded columns for sampling
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def forward_decode(cfg, params, batch, cache, pos):
+    return _mod(cfg).forward_decode(cfg, params, batch, cache, pos)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in _TRANSFORMER_FAMILIES:
+        return transformer.cache_specs(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return rwkv.state_specs(cfg, batch)
+    if cfg.family == "hybrid":
+        return ssm.state_specs(cfg, batch, max_len)
+    if cfg.family == "audio":
+        return whisper.cache_specs(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def init_decode_state(cfg: ModelConfig, params, batch: int, max_len: int,
+                      frames=None):
+    if cfg.family == "audio":
+        if frames is None:
+            frames = jnp.zeros((batch, cfg.n_frames, cfg.d_model), cfg.jdtype)
+        return whisper.init_cache(cfg, params, frames, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_state_specs(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# assigned input shapes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str      # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long-context decode requires O(1)/sub-quadratic state (DESIGN.md §5)
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> bool:
+    if shape.name == "long_500k":
+        return cfg.family in LONG_CONTEXT_FAMILIES
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), i32)
+    if shape.kind == "train":
+        batch = {"tokens": tok(S), "labels": tok(S)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": tok(S)}
+    else:  # decode: one new token; cache of length S is a separate input
+        batch = {"tokens": tok(1)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), cfg.jdtype)
+        batch["patch_positions"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches), i32)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frames, cfg.d_model), cfg.jdtype)
+    return batch

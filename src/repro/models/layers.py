@@ -1,0 +1,176 @@
+"""Shared building blocks: norms, RoPE, blocked attention, MLP, MoE.
+
+Attention here is the *jnp* implementation (flash-style blocked online
+softmax via lax.scan) used for CPU smoke tests and the 512-device dry-run
+lowering; on TPU the Pallas kernels in repro.kernels are drop-in (same
+math, validated against the same refs).  Blocked form is mandatory even in
+jnp: a 32k×32k logit matrix would never fit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta=10000.0):
+    """x (..., S, H, D); positions (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def blocked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      q_offset=None, kv_length=None, block_k=1024,
+                      scale=None):
+    """Flash-style attention in jnp (online softmax over kv blocks).
+
+    q (B,Hq,Sq,D); k/v (B,Hkv,Skv,D) → (B,Hq,Sq,D) in q.dtype.
+    Same semantics as kernels.flash_attention.ref (q positions end-aligned
+    unless q_offset given; kv_length masks a padded cache).
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    q_offset = Skv - Sq if q_offset is None else q_offset
+    qf = q.astype(jnp.float32) * scale
+    nb = -(-Skv // block_k)
+    pad = nb * block_k - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, Hkv, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hkv, nb, block_k, D).transpose(2, 0, 1, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+    valid_len = jnp.full((B,), Skv, jnp.int32) if kv_length is None else kv_length
+
+    def step(carry, blk):
+        m, l, acc, ib = carry
+        kblk, vblk = blk                                  # (B,Hkv,bk,D)
+        kg = jnp.repeat(kblk, group, axis=1).astype(jnp.float32)
+        vg = jnp.repeat(vblk, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kg)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = ib * block_k + jnp.arange(block_k)
+        mask = jnp.ones((Sq, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        mask = mask[None, None] & (
+            k_pos[None, None, None, :] < valid_len[:, None, None, None])
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vg)
+        return (m_new, l, acc, ib + 1), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Sq, D), jnp.float32)
+    # remat each kv-block step: backward recomputes the (Sq × block_k)
+    # score tile instead of saving it — the flash-attention memory bound
+    (m, l, acc, _), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0, 0),
+                                     (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing with capacity dropping via expert-sorted permutation
+# ---------------------------------------------------------------------------
+MOE_GROUPS = 64  # routing groups; ≥ DP degree so each shard sorts locally
+
+
+def _moe_group_dispatch(x, gate_vals, experts, we_gate, we_up, we_down,
+                        top_k, capacity_factor):
+    """One routing group: x (t, d); experts (t, k) → (t, d)."""
+    t, d = x.shape
+    E = we_gate.shape[0]
+    C = max(int(t * top_k * capacity_factor / E), 4)
+    flat_e = experts.reshape(-1)                            # (t·k,)
+    order = jnp.argsort(flat_e)                             # stable
+    sorted_e = flat_e[order]
+    # rank within expert group = position − group start
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_e = jnp.arange(t * top_k) - group_start[sorted_e]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # overflow slot
+    tok = order // top_k
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(x[tok])
+    buf = buf[:-1].reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, we_gate)) * \
+        jnp.einsum("ecd,edf->ecf", buf, we_up)
+    y = jnp.einsum("ecf,efd->ecd", h, we_down).reshape(E * C, d)
+    contrib = jnp.where(keep[:, None], y[jnp.minimum(slot, E * C - 1)], 0)
+    g = gate_vals.reshape(-1)[order][:, None].astype(x.dtype)
+    return jnp.zeros_like(x).at[tok].add(contrib * g)
+
+
+def moe_ffn(x, router_w, we_gate, we_up, we_down, *, top_k, capacity_factor):
+    """x (T, d) → (T, d).  Experts computed on a capacity-padded,
+    expert-contiguous buffer (megablocks-lite): argsort token→expert
+    assignments, gather into (E, C, d), batched expert matmuls, scatter
+    back with gate weighting.  Tokens beyond capacity are dropped.
+
+    Dispatch runs per *routing group* (vmap over MOE_GROUPS slices): the
+    argsort/scatter stay local to each group, so with the group axis
+    sharded over DP the SPMD partitioner never materializes a global
+    sort — a global argsort replicated the full token buffer on every
+    device (695 GB/dev on grok prefill_32k; see EXPERIMENTS.md §Perf).
+    """
+    T, d = x.shape
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, top_k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # groups of ≥256 tokens so per-group capacity stays meaningful; tiny
+    # token counts (decode) fall back to one global (but tiny) sort
+    G = max(min(MOE_GROUPS, T // 256), 1)
+    while T % G:
+        G -= 1
+    disp = functools.partial(_moe_group_dispatch, top_k=top_k,
+                             capacity_factor=capacity_factor,
+                             we_gate=we_gate, we_up=we_up, we_down=we_down)
+    out = jax.vmap(disp)(x.reshape(G, T // G, d),
+                         gate_vals.reshape(G, T // G, top_k),
+                         experts.reshape(G, T // G, top_k))
+    return out.reshape(T, d)
+
+
+def aux_load_balance_loss(x, router_w, top_k):
+    """Switch-style load-balancing auxiliary loss (fraction·prob per expert)."""
+    logits = x.astype(jnp.float32) @ router_w.astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    E = probs.shape[-1]
+    _, experts = jax.lax.top_k(probs, top_k)
+    onehot = jax.nn.one_hot(experts, E).sum(axis=-2)  # (T, E)
+    frac = onehot.mean(axis=0) / top_k
+    imp = probs.mean(axis=0)
+    return E * jnp.sum(frac * imp)

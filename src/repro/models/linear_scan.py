@@ -1,0 +1,111 @@
+"""Chunked linear-attention scan — shared by RWKV6 (WKV) and Mamba2 (SSD).
+
+Recurrence (per head; S is a (N, P) state matrix, decay on the N axis):
+
+    S_t = diag(a_t) S_{t−1} + k_tᵀ v_t          a_t = exp(logw_t)
+    o_t = q_t · S_{t−1 or t}  (+ RWKV bonus (q_t ⊙ u)·k_t v_t)
+
+TPU adaptation: instead of a length-T sequential scan, tokens are processed
+in chunks of C: intra-chunk contributions become a (C×C) masked matmul
+(MXU-friendly) with per-channel decay factors exp(W_t − W_s) factorized as
+(q ⊙ e^{W}) @ (k ⊙ e^{−W})ᵀ; inter-chunk state flows through a lax.scan of
+T/C steps.  This is the standard chunked formulation (SSD / FLA) — exactly
+the structure a Pallas kernel would tile.
+
+Numerics: the factorization is computed in float32 on *chunk-local*
+cumulative decays, so exponents are bounded by C·max|logw| per chunk.
+Callers keep decays in a realistic band (|logw| ≲ 1); chunk=32 default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("inclusive", "chunk"))
+def chunked_linear_scan(q, k, v, logw, state0, *, inclusive: bool,
+                        bonus=None, chunk: int = 32):
+    """q,k (B,H,T,N); v (B,H,T,P); logw (B,H,T,N) or (B,H,T,1);
+    state0 (B,H,N,P); bonus (H,N) or None (RWKV's u).
+    Returns (out (B,H,T,P) f32, stateT (B,H,N,P) f32).
+
+    inclusive=True  → o_t = q_t·S_t      (Mamba2/SSD)
+    inclusive=False → o_t = q_t·S_{t−1} + (q_t⊙u)·k_t v_t   (RWKV6)
+    """
+    B, H, T, N = q.shape
+    P = v.shape[-1]
+    T0 = T
+    pad = (-T) % chunk
+    if pad:
+        # zero k/v add nothing to the state and logw=0 means decay 1, so
+        # tail padding is exact for both outputs and the final state
+        zpad = lambda x: jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v, logw = zpad(q), zpad(k), zpad(v), zpad(logw)
+        T = T + pad
+    nc = T // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.astype(f32).reshape(B, H, nc, chunk, -1).transpose(2, 0, 1, 3, 4)
+
+    qc, kc, vc, wc = map(to_chunks, (q, k, v, jnp.broadcast_to(
+        logw, (B, H, T, logw.shape[-1]))))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), 0 if inclusive else -1)
+
+    def step(S, blk):
+        qb, kb, vb, wb = blk          # (B,H,C,N|P)
+        W = jnp.cumsum(wb, axis=2)    # inclusive cumulative log-decay
+        Wq = W if inclusive else W - wb          # exclusive for RWKV
+        q_t = qb * jnp.exp(Wq)
+        k_t = kb * jnp.exp(-W)
+        A = jnp.einsum("bhtn,bhsn->bhts", q_t, k_t)
+        A = jnp.where(tri[None, None], A, 0.0)
+        if bonus is not None:
+            diag = jnp.einsum("bhtn,bhtn->bht", qb * bonus[None, :, None, :], kb)
+            A = A + diag[..., None] * jnp.eye(chunk, dtype=f32)[None, None]
+        intra = jnp.einsum("bhts,bhsp->bhtp", A, vb)
+        inter = jnp.einsum("bhtn,bhnp->bhtp", q_t, S)
+        out = intra + inter
+        Wlast = W[:, :, -1:, :]                 # (B,H,1,N)
+        kd = kb * jnp.exp(Wlast - W)
+        S_new = jnp.exp(Wlast[:, :, 0, :, None]) * S + jnp.einsum(
+            "bhsn,bhsp->bhnp", kd, vb)
+        return S_new, out
+
+    stateT, outs = jax.lax.scan(step, state0.astype(f32), (qc, kc, vc, wc))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, T, P)
+    return out[:, :, :T0], stateT
+
+
+def linear_scan_decode(q, k, v, logw, state, *, inclusive: bool, bonus=None):
+    """Single-token recurrence (serving): all inputs (B,H,N|P); state (B,H,N,P)."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    a = jnp.exp(logw.astype(f32))                         # (B,H,N) or (B,H,1)
+    kv = jnp.einsum("bhn,bhp->bhnp", k, v)
+    if inclusive:
+        S_new = a[..., None] * state + kv
+        out = jnp.einsum("bhn,bhnp->bhp", q, S_new)
+    else:
+        out = jnp.einsum("bhn,bhnp->bhp", q, state) + jnp.einsum(
+            "bhn,bhnp->bhp", q * bonus[None], kv)
+        S_new = a[..., None] * state + kv
+    return out, S_new
+
+
+def sequential_scan_ref(q, k, v, logw, state0, *, inclusive: bool, bonus=None):
+    """O(T) sequential oracle for tests."""
+    B, H, T, N = q.shape
+
+    def step(S, t):
+        o, S_new = linear_scan_decode(q[:, :, t], k[:, :, t], v[:, :, t],
+                                      jnp.broadcast_to(logw[:, :, t],
+                                                       (B, H, logw.shape[-1])),
+                                      S, inclusive=inclusive, bonus=bonus)
+        return S_new, o
+
+    S, outs = jax.lax.scan(step, state0.astype(jnp.float32), jnp.arange(T))
+    return outs.transpose(1, 2, 0, 3), S

@@ -1,0 +1,192 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay (arXiv:2404.05892).
+
+Time-mix: data-dependent token-shift lerp (ddlerp LoRAs) producing r,k,v,g
+and the per-channel decay w_t = exp(−exp(w0 + LoRA_w(x̃))); the WKV
+recurrence runs through the shared chunked linear scan (exclusive form with
+bonus u).  Channel-mix: token-shifted squared-ReLU FFN.
+
+O(1)-state decode: each layer carries (x_prev_att, x_prev_ffn, WKV state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from repro.dist.sharding import constrain_residual
+from .layers import rms_norm
+from .linear_scan import chunked_linear_scan, linear_scan_decode
+
+LORA_R = 64
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    H, N = cfg.n_wkv_heads, cfg.wkv_head_dim
+    dt = cfg.jdtype
+    S = lambda *shape: jax.ShapeDtypeStruct((L, *shape), dt)
+    blocks = {
+        "ln1": S(d), "ln2": S(d),
+        # ddlerp: base mus + one LoRA pair per stream (r,k,v,w,g)
+        "mu_base": S(5, d),
+        "lora_a": S(5, d, LORA_R), "lora_b": S(5, LORA_R, d),
+        "wr": S(d, d), "wk": S(d, d), "wv": S(d, d), "wg": S(d, d),
+        "wo": S(d, d),
+        "w0": S(d),                               # decay bias
+        "wdecay_a": S(d, LORA_R), "wdecay_b": S(LORA_R, d),
+        "bonus_u": S(H, N),
+        "gn_scale": S(H, N),                      # per-head group norm
+        # channel mix
+        "mu_ck": S(d), "mu_cr": S(d),
+        "ck": S(d, ff), "cv": S(ff, d), "cr": S(d, d),
+    }
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, d), dt),
+        "unembed": jax.ShapeDtypeStruct((d, cfg.padded_vocab), dt),
+        "final_norm": jax.ShapeDtypeStruct((d,), dt),
+        "blocks": blocks,
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    specs = param_specs(cfg)
+    flat, tree = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(rng, len(flat))
+    out = []
+    for key, (path, s) in zip(keys, flat):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln1", "ln2", "final_norm", "w0", "gn_scale"):
+            v = jnp.zeros(s.shape, s.dtype)
+        elif name.startswith("mu"):
+            v = jnp.full(s.shape, 0.5, s.dtype)
+        elif name == "bonus_u":
+            v = jnp.full(s.shape, 0.1, s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            v = (jax.random.normal(key, s.shape, jnp.float32)
+                 / jnp.sqrt(fan_in)).astype(s.dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def _token_shift(x, x_prev_first):
+    """Shift sequence right by one; position 0 sees x_prev_first (B,d)."""
+    return jnp.concatenate([x_prev_first[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(x, xs, mu_base, lora_a, lora_b):
+    """Data-dependent lerp for the 5 streams → (5, B, T, d)."""
+    delta = (xs - x).astype(jnp.float32)
+    # shared inner mix then per-stream LoRA (Finch §3)
+    inner = x.astype(jnp.float32) + delta * mu_base[0][None, None]
+    mixes = []
+    for i in range(5):
+        lor = jnp.tanh(inner @ lora_a[i].astype(jnp.float32)) @ \
+            lora_b[i].astype(jnp.float32)
+        mu = mu_base[i][None, None].astype(jnp.float32) + lor
+        mixes.append(x.astype(jnp.float32) + delta * mu)
+    return mixes  # [r, k, v, w, g]
+
+
+def _time_mix(cfg, p, x, x_prev, wkv_state, *, chunked=True):
+    """x (B,T,d).  Returns (out, new_x_prev (B,d), new_state)."""
+    B, T, d = x.shape
+    H, N = cfg.n_wkv_heads, cfg.wkv_head_dim
+    xs = _token_shift(x, x_prev)
+    xr, xk, xv, xw, xg = _ddlerp(x, xs, p["mu_base"], p["lora_a"], p["lora_b"])
+    f32 = jnp.float32
+    r = (xr @ p["wr"].astype(f32)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk"].astype(f32)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv"].astype(f32)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"].astype(f32))
+    dec = p["w0"].astype(f32)[None, None] + \
+        jnp.tanh(xw @ p["wdecay_a"].astype(f32)) @ p["wdecay_b"].astype(f32)
+    logw = -jnp.exp(-3.0 + dec)     # w = exp(−exp(·)) ∈ (0,1); mild at init
+    logw = logw.reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    u = p["bonus_u"].astype(f32)
+    if chunked:
+        y, new_state = chunked_linear_scan(r, k, v, logw, wkv_state,
+                                           inclusive=False, bonus=u)
+    else:
+        y, new_state = linear_scan_decode(
+            r[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0], wkv_state,
+            inclusive=False, bonus=u)
+        y = y[:, :, None, :]
+    # per-head group norm, then gate
+    y = y.transpose(0, 2, 1, 3)                       # (B,T,H,N)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5) * \
+        (1.0 + p["gn_scale"].astype(f32))[None, None]
+    y = y.reshape(B, T, d) * g
+    out = (y @ p["wo"].astype(f32)).astype(x.dtype)
+    return out, x[:, -1, :], new_state
+
+
+def _channel_mix(p, x, x_prev):
+    B, T, d = x.shape
+    xs = _token_shift(x, x_prev)
+    f32 = jnp.float32
+    xk = x.astype(f32) + (xs - x).astype(f32) * p["mu_ck"].astype(f32)
+    xr = x.astype(f32) + (xs - x).astype(f32) * p["mu_cr"].astype(f32)
+    h = jnp.square(jax.nn.relu(xk @ p["ck"].astype(f32)))
+    out = jax.nn.sigmoid(xr @ p["cr"].astype(f32)) * (h @ p["cv"].astype(f32))
+    return out.astype(x.dtype), x[:, -1, :]
+
+
+def _block(cfg, p, x, state, *, chunked=True):
+    att_out, xp_att, wkv = _time_mix(cfg, p, rms_norm(x, p["ln1"]),
+                                     state["x_att"], state["wkv"],
+                                     chunked=chunked)
+    x = x + att_out
+    ffn_out, xp_ffn = _channel_mix(p, rms_norm(x, p["ln2"]), state["x_ffn"])
+    x = x + ffn_out
+    return x, {"x_att": xp_att, "x_ffn": xp_ffn, "wkv": wkv}
+
+
+def state_specs(cfg: ModelConfig, batch: int):
+    H, N, d, L = cfg.n_wkv_heads, cfg.wkv_head_dim, cfg.d_model, cfg.n_layers
+    return {
+        "x_att": jax.ShapeDtypeStruct((L, batch, d), cfg.jdtype),
+        "x_ffn": jax.ShapeDtypeStruct((L, batch, d), cfg.jdtype),
+        "wkv": jax.ShapeDtypeStruct((L, batch, H, N, N), jnp.float32),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_specs(cfg, batch))
+
+
+def _run(cfg, params, tokens, state, *, chunked):
+    x = constrain_residual(params["embed"][tokens])
+
+    def body(x, xs):
+        pblk, st = xs
+        x = constrain_residual(x)
+        x, new_st = _block(cfg, pblk, x, st, chunked=chunked)
+        return x, new_st
+
+    body = jax.checkpoint(body) if (cfg.remat and chunked) else body
+    x, new_state = jax.lax.scan(body, x, (params["blocks"], state))
+    return rms_norm(x, params["final_norm"]), new_state
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    B = batch["tokens"].shape[0]
+    hidden, _ = _run(cfg, params, batch["tokens"], init_state(cfg, B),
+                     chunked=True)
+    return hidden, 0.0
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    hidden, aux = forward_hidden(cfg, params, batch)
+    return hidden @ params["unembed"], aux
+
+
+def forward_decode(cfg: ModelConfig, params, batch, state, pos):
+    """One token; state carries per-layer (x_att, x_ffn, wkv).  pos unused
+    (RWKV has no positional encoding) but kept for API symmetry."""
+    hidden, new_state = _run(cfg, params, batch["tokens"], state,
+                             chunked=False)
+    return hidden @ params["unembed"], new_state

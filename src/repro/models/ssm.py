@@ -1,0 +1,275 @@
+"""Mamba2 blocks + the Zamba2 hybrid (arXiv:2411.15242).
+
+Mamba2 block: in-proj → (z, x, B, C, dt); causal conv over (x,B,C);
+SSD recurrence S_t = exp(a·dt_t)·S_{t−1} + dt_t·B_tᵀx_t, y_t = C_t·S_t —
+run through the shared chunked linear scan (inclusive, scalar decay per
+head); gated RMS-norm output.
+
+Zamba2: a stack of Mamba2 blocks with ONE weight-shared attention+MLP
+block applied every ``attn_every`` layers (each application has its own KV
+cache).  The layer stack is segmented: scan(6 mamba blocks) → shared
+block → scan(...) — segment count is static so the HLO stays small.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from repro.dist.sharding import constrain_residual
+from .layers import blocked_attention, rms_norm, rope, swiglu
+from .linear_scan import chunked_linear_scan, linear_scan_decode
+from .transformer import decode_attention_jnp
+
+EXPAND = 2
+
+
+def _dims(cfg: ModelConfig):
+    d_in = EXPAND * cfg.d_model
+    H = d_in // 64                     # mamba2 head dim 64
+    N = cfg.ssm_state
+    return d_in, H, N
+
+
+def mamba_block_specs(cfg: ModelConfig, L: int) -> dict:
+    d = cfg.d_model
+    d_in, H, N = _dims(cfg)
+    dt = cfg.jdtype
+    S = lambda *shape: jax.ShapeDtypeStruct((L, *shape), dt)
+    conv_ch = d_in + 2 * N
+    return {
+        "ln": S(d),
+        "w_in": S(d, 2 * d_in + 2 * N + H),    # z, x, B, C, dt
+        "conv_w": S(cfg.conv_width, conv_ch),
+        "conv_b": S(conv_ch),
+        "A_log": S(H), "dt_bias": S(H), "D": S(H),
+        "gn_scale": S(d_in),
+        "w_out": S(d_in, d),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, H, N = _dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x (B,T,C); depthwise causal conv width K.  conv_state (B,K−1,C) for
+    decode (returns updated state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(out + b[None, None]), new_state
+
+
+def mamba_forward(cfg, p, x, ssm_state, conv_state, *, chunked=True):
+    """x (B,T,d) → (out, new_ssm_state, new_conv_state)."""
+    B, T, d = x.shape
+    d_in, H, N = _dims(cfg)
+    f32 = jnp.float32
+    proj = rms_norm(x, p["ln"]).astype(f32) @ p["w_in"].astype(f32)
+    z, xc, Bm, Cm, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, Bm, Cm], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"].astype(f32),
+                                      p["conv_b"].astype(f32), conv_state)
+    xc, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(f32)[None, None])  # (B,T,H)
+    a = -jnp.exp(p["A_log"].astype(f32))                             # (H,)
+    logw = (a[None, None] * dt)[..., None]                    # (B,T,H,1)
+    v = xc.reshape(B, T, H, 64) * dt[..., None]               # (B,T,H,64)
+    q = jnp.broadcast_to(Cm[:, :, None, :], (B, T, H, N))
+    k = jnp.broadcast_to(Bm[:, :, None, :], (B, T, H, N))
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    if chunked:
+        y, new_ssm = chunked_linear_scan(tr(q), tr(k), tr(v),
+                                         tr(logw), ssm_state, inclusive=True)
+    else:
+        y, new_ssm = linear_scan_decode(q[:, 0], k[:, 0], v[:, 0],
+                                        logw[:, 0], ssm_state, inclusive=True)
+        y = y[:, :, None, :]
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d_in)           # (B,T,d_in)
+    y = y + xc * (p["D"].astype(f32))[None, None].repeat(64, -1)[..., :d_in]
+    # gated RMS norm (mamba2)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * (1 + p["gn_scale"].astype(f32))
+    out = (y @ p["w_out"].astype(f32)).astype(x.dtype)
+    return x + out, new_ssm, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+def shared_block_specs(cfg: ModelConfig) -> dict:
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.jdtype
+    S = lambda *shape: jax.ShapeDtypeStruct(shape, dt)
+    return {
+        "ln1": S(d), "ln2": S(d),
+        "wq": S(d, Hq * hd), "wk": S(d, Hkv * hd), "wv": S(d, Hkv * hd),
+        "wo": S(Hq * hd, d),
+        "w_gate": S(d, ff), "w_up": S(d, ff), "w_down": S(ff, d),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, d), dt),
+        "unembed": jax.ShapeDtypeStruct((d, cfg.padded_vocab), dt),
+        "final_norm": jax.ShapeDtypeStruct((d,), dt),
+        "blocks": mamba_block_specs(cfg, cfg.n_layers),
+        "shared": shared_block_specs(cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    specs = param_specs(cfg)
+    flat, tree = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(rng, len(flat))
+    out = []
+    for key, (path, s) in zip(keys, flat):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("ln", "ln1", "ln2", "final_norm", "gn_scale", "conv_b"):
+            v = jnp.zeros(s.shape, s.dtype)
+        elif name == "A_log":
+            v = jnp.log(jnp.linspace(0.5, 4.0, s.shape[-1])) * jnp.ones(
+                s.shape, jnp.float32)
+            v = v.astype(s.dtype)
+        elif name == "dt_bias":
+            v = jnp.full(s.shape, -2.0, s.dtype)
+        elif name == "D":
+            v = jnp.ones(s.shape, s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            v = (jax.random.normal(key, s.shape, jnp.float32)
+                 / jnp.sqrt(fan_in)).astype(s.dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def _shared_attn_block(cfg, p, x, positions, cache=None, pos=None):
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    h = rms_norm(x, p["ln1"])
+    q = rope((h @ p["wq"]).reshape(B, S, Hq, hd), positions, cfg.rope_theta)
+    k = rope((h @ p["wk"]).reshape(B, S, Hkv, hd), positions, cfg.rope_theta)
+    v = (h @ p["wv"]).reshape(B, S, Hkv, hd)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    if cache is None:
+        attn = blocked_attention(q, k, v, causal=True)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, pos, 0))
+        attn = decode_attention_jnp(q, ck, cv,
+                                    jnp.full((B,), pos + S, jnp.int32))
+        new_cache = {"k": ck, "v": cv}
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd).astype(x.dtype)
+    x = x + attn @ p["wo"]
+    x = x + swiglu(rms_norm(x, p["ln2"]), p["w_gate"], p["w_up"], p["w_down"])
+    return x, new_cache
+
+
+def _segments(cfg: ModelConfig):
+    """Static segmentation: shared block after every attn_every mamba blocks."""
+    k = cfg.attn_every or cfg.n_layers + 1
+    bounds = list(range(0, cfg.n_layers, k))[1:]
+    segs, prev = [], 0
+    for b in bounds:
+        segs.append((prev, b))
+        prev = b
+    segs.append((prev, cfg.n_layers))
+    return segs  # [(start, end)]; shared block between segments
+
+
+def n_shared_applications(cfg: ModelConfig) -> int:
+    return len(_segments(cfg)) - 1
+
+
+def state_specs(cfg: ModelConfig, batch: int, max_len: int):
+    d_in, H, N = _dims(cfg)
+    L = cfg.n_layers
+    napp = n_shared_applications(cfg)
+    kv = jax.ShapeDtypeStruct(
+        (napp, batch, cfg.n_kv_heads, max_len, cfg.hd), cfg.jdtype)
+    return {
+        "ssm": jax.ShapeDtypeStruct((L, batch, H, N, 64), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (L, batch, cfg.conv_width - 1, d_in + 2 * N), cfg.jdtype),
+        "k": kv, "v": kv,
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        state_specs(cfg, batch, max_len))
+
+
+def _run(cfg, params, tokens, state, pos, *, chunked):
+    x = constrain_residual(params["embed"][tokens])
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(
+        (0 if pos is None else pos) + jnp.arange(S), (B, S))
+    segs = _segments(cfg)
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+
+    def seg_scan(x, blocks, ssm, conv):
+        def body(x, xs):
+            pblk, s_ssm, s_conv = xs
+            x = constrain_residual(x)
+            x, ns, nc = mamba_forward(cfg, pblk, x, s_ssm, s_conv,
+                                      chunked=chunked)
+            return x, (ns, nc)
+        body = jax.checkpoint(body) if (cfg.remat and chunked) else body
+        return jax.lax.scan(body, x, (blocks, ssm, conv))
+
+    for i, (a, b) in enumerate(segs):
+        take = lambda t: jax.tree.map(lambda u: u[a:b], t)
+        x, (ns, nc) = seg_scan(x, take(params["blocks"]),
+                               state["ssm"][a:b], state["conv"][a:b])
+        new_ssm.append(ns)
+        new_conv.append(nc)
+        if i < len(segs) - 1:
+            cache = None if chunked else {"k": state["k"][i], "v": state["v"][i]}
+            x, nc2 = _shared_attn_block(cfg, params["shared"], x, positions,
+                                        cache=cache, pos=pos)
+            if nc2 is not None:
+                new_k.append(nc2["k"])
+                new_v.append(nc2["v"])
+    x = rms_norm(x, params["final_norm"])
+    new_state = {
+        "ssm": jnp.concatenate(new_ssm), "conv": jnp.concatenate(new_conv),
+        "k": jnp.stack(new_k) if new_k else state["k"],
+        "v": jnp.stack(new_v) if new_v else state["v"],
+    }
+    return x, new_state
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    B, S = batch["tokens"].shape
+    st = init_state(cfg, B, 1)
+    hidden, _ = _run(cfg, params, batch["tokens"], st, None, chunked=True)
+    return hidden, 0.0
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    hidden, aux = forward_hidden(cfg, params, batch)
+    return hidden @ params["unembed"], aux
+
+
+def forward_decode(cfg: ModelConfig, params, batch, state, pos):
+    hidden, new_state = _run(cfg, params, batch["tokens"], state, pos,
+                             chunked=False)
+    return hidden @ params["unembed"], new_state

@@ -1,0 +1,299 @@
+"""Unified decoder-only transformer: dense, MoE, gemma2-style, VLM backbone.
+
+Pure-pytree implementation.  Per-layer parameters are stacked on a leading
+axis and the layer stack is a ``lax.scan`` (compile time stays flat in
+depth — essential for 62-layer × 512-device dry-runs), with
+``jax.checkpoint`` around the block body when cfg.remat.
+
+Gemma2's alternating local/global pattern scans over *pairs* of layers so
+the sliding-window mask stays static inside the traced block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from repro.dist.sharding import constrain_residual
+from .layers import (aux_load_balance_loss, blocked_attention, moe_ffn,
+                     rms_norm, rope, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _block_specs(cfg: ModelConfig, L: int) -> dict:
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.jdtype
+    S = lambda *shape: jax.ShapeDtypeStruct((L, *shape), dt)
+    spec = {
+        "ln1": S(d), "ln2": S(d),
+        "wq": S(d, Hq * hd), "wk": S(d, Hkv * hd), "wv": S(d, Hkv * hd),
+        "wo": S(Hq * hd, d),
+    }
+    if cfg.qk_norm:
+        spec["qnorm"] = S(hd)
+        spec["knorm"] = S(hd)
+    if cfg.n_experts:
+        E = cfg.n_experts
+        spec.update({
+            "router": S(d, E),
+            "we_gate": S(E, d, ff), "we_up": S(E, d, ff), "we_down": S(E, ff, d),
+        })
+        if cfg.shared_expert:
+            spec.update({"ws_gate": S(d, ff), "ws_up": S(d, ff),
+                         "ws_down": S(ff, d)})
+    else:
+        spec.update({"w_gate": S(d, ff), "w_up": S(d, ff), "w_down": S(ff, d)})
+    return spec
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    spec = {
+        "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, d), dt),
+        "unembed": jax.ShapeDtypeStruct((d, cfg.padded_vocab), dt),
+        "final_norm": jax.ShapeDtypeStruct((d,), dt),
+        "blocks": _block_specs(cfg, cfg.n_layers),
+    }
+    return spec
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    specs = param_specs(cfg)
+    flat, tree = jax.tree_util.tree_flatten(specs)
+    keys = jax.random.split(rng, len(flat))
+
+    def init_one(key, s):
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        scale = 0.02 if len(s.shape) < 2 else (1.0 / jnp.sqrt(fan_in))
+        return (jax.random.normal(key, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+    leaves = [init_one(k, s) for k, s in zip(keys, flat)]
+    params = jax.tree_util.tree_unflatten(tree, leaves)
+    # norms start at zero offset (rms_norm uses 1+scale)
+    params["final_norm"] = jnp.zeros_like(params["final_norm"])
+    params["blocks"]["ln1"] = jnp.zeros_like(params["blocks"]["ln1"])
+    params["blocks"]["ln2"] = jnp.zeros_like(params["blocks"]["ln2"])
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block body
+# ---------------------------------------------------------------------------
+def _attention(cfg: ModelConfig, p, x, positions, *, window, cache=None,
+               pos=None):
+    """x (B,S,d) → (B,S,d); optional cache {k,v} (B,Hkv,Smax,hd) + pos."""
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, S, Hq, hd)
+    k = (x @ p["wk"]).reshape(B, S, Hkv, hd)
+    v = (x @ p["wv"]).reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = q.transpose(0, 2, 1, 3)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    if cache is None:
+        out = blocked_attention(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_softcap)
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, pos, 0))
+        kv_len = jnp.full((B,), pos + S, jnp.int32)
+        out = decode_attention_jnp(q, ck, cv, kv_len, window=window,
+                                   softcap=cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd)
+    return out.astype(x.dtype) @ p["wo"], new_cache
+
+
+def decode_attention_jnp(q, ck, cv, kv_length, *, window=None, softcap=None):
+    """One-token attention over a padded cache (baseline serve path).
+
+    q (B,Hq,Sq,hd); ck/cv (B,Hkv,Smax,hd).  The cache stays in its storage
+    dtype: QK/PV einsums take bf16 inputs with f32 accumulation
+    (preferred_element_type) and GQA folds the group into the einsum
+    instead of jnp.repeat — upcasting + repeating the cache materialized
+    ~4x the cache bytes per layer (EXPERIMENTS.md §Perf).  Logits live at
+    (B,Hq,Sq,Smax) f32 — fine for decode.
+    """
+    B, Hq, Sq, hd = q.shape
+    Hkv, Smax = ck.shape[1], ck.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    qg = (q.astype(jnp.float32) * scale).astype(ck.dtype)
+    qg = qg.reshape(B, Hkv, group * Sq, hd)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, ck,
+                   preferred_element_type=jnp.float32)
+    s = s.reshape(B, Hq, Sq, Smax)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    k_pos = jnp.arange(Smax)
+    mask = k_pos[None, None, None, :] < kv_length[:, None, None, None]
+    if window is not None:
+        mask &= k_pos[None, None, None, :] > (kv_length[:, None, None, None]
+                                              - 1 - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pv = jnp.einsum("bkgs,bksd->bkgd",
+                    p.reshape(B, Hkv, group * Sq, Smax).astype(cv.dtype), cv,
+                    preferred_element_type=jnp.float32)
+    return pv.reshape(B, Hq, Sq, hd)
+
+
+def _ffn(cfg: ModelConfig, p, x):
+    """Dense or MoE FFN on (B,S,d); returns (out, aux_loss)."""
+    B, S, d = x.shape
+    if not cfg.n_experts:
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"]), 0.0
+    flat = x.reshape(B * S, d)
+    y = moe_ffn(flat, p["router"], p["we_gate"], p["we_up"], p["we_down"],
+                top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+    aux = aux_load_balance_loss(flat, p["router"], cfg.top_k)
+    if cfg.shared_expert:
+        y = y + swiglu(flat, p["ws_gate"], p["ws_up"], p["ws_down"])
+    return y.reshape(B, S, d), aux
+
+
+def _block(cfg: ModelConfig, p, x, positions, *, window, cache=None, pos=None):
+    attn_out, new_cache = _attention(cfg, p, rms_norm(x, p["ln1"]), positions,
+                                     window=window, cache=cache, pos=pos)
+    x = x + attn_out
+    ffn_out, aux = _ffn(cfg, p, rms_norm(x, p["ln2"]))
+    return x + ffn_out, aux, new_cache
+
+
+def _window_for(cfg: ModelConfig, sub: int):
+    """Static per-sublayer window: gemma2 alternates local (even) / global."""
+    if cfg.layer_pattern == "local_global":
+        return cfg.sliding_window if sub == 0 else None
+    return cfg.sliding_window
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def _embed(cfg: ModelConfig, params, batch):
+    tokens = batch["tokens"]
+    x = constrain_residual(params["embed"][tokens])
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # scatter the stub vision-frontend embeddings over image-slot tokens
+        pe = batch["patch_embeds"].astype(x.dtype)      # (B, P, d)
+        pp = batch["patch_positions"]                   # (B, P) int32
+        x = jax.vmap(lambda xi, pi, ei: xi.at[pi].set(ei))(x, pp, pe)
+    return x
+
+
+def _stack_pattern(cfg: ModelConfig):
+    """(#scan steps, sublayers per step)."""
+    if cfg.layer_pattern == "local_global":
+        assert cfg.n_layers % 2 == 0
+        return cfg.n_layers // 2, 2
+    return cfg.n_layers, 1
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """→ (final-normed hidden (B,S,d), aux_loss scalar) — pre-unembed."""
+    x = _embed(cfg, params, batch)
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    steps, subs = _stack_pattern(cfg)
+
+    def scan_body(carry, pblk):
+        x, aux = carry
+        x = constrain_residual(x)
+        for sub in range(subs):
+            psub = jax.tree.map(lambda a: a[sub], pblk) if subs > 1 else pblk
+            x, a, _ = _block(cfg, psub, x, positions,
+                             window=_window_for(cfg, sub))
+            aux = aux + a
+        return (x, aux), None
+
+    body = jax.checkpoint(scan_body) if cfg.remat else scan_body
+    blocks = params["blocks"]
+    if subs > 1:
+        blocks = jax.tree.map(
+            lambda a: a.reshape(steps, subs, *a.shape[1:]), blocks)
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), blocks)
+    return rms_norm(x, params["final_norm"]), aux / cfg.n_layers
+
+
+def unembed(cfg: ModelConfig, params, hidden):
+    logits = hidden @ params["unembed"]
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)
+    return logits
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    """→ (logits (B,S,V), aux_loss scalar)."""
+    hidden, aux = forward_hidden(cfg, params, batch)
+    return unembed(cfg, params, hidden), aux
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    hd, Hkv = cfg.hd, cfg.n_kv_heads
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, batch, Hkv, max_len, hd),
+                              cfg.jdtype)
+    return {"k": kv, "v": kv}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_specs(cfg, batch, max_len))
+
+
+def forward_decode(cfg: ModelConfig, params, batch, cache, pos):
+    """One decode step.  batch.tokens (B,1); cache {k,v} (L,B,Hkv,Smax,hd);
+    pos: scalar int32 current length.  → (logits (B,1,V), new cache)."""
+    x = _embed(cfg, params, batch)
+    B, S, d = x.shape
+    positions = jnp.broadcast_to(pos + jnp.arange(S), (B, S))
+    steps, subs = _stack_pattern(cfg)
+
+    def scan_body(x, xs):
+        pblk, ck, cv = xs
+        x = constrain_residual(x)
+        new_k, new_v = [], []
+        for sub in range(subs):
+            psub = jax.tree.map(lambda a: a[sub], pblk) if subs > 1 else pblk
+            cks = ck[sub] if subs > 1 else ck
+            cvs = cv[sub] if subs > 1 else cv
+            x, _, nc = _block(cfg, psub, x, positions,
+                              window=_window_for(cfg, sub),
+                              cache={"k": cks, "v": cvs}, pos=pos)
+            new_k.append(nc["k"])
+            new_v.append(nc["v"])
+        nk = jnp.stack(new_k) if subs > 1 else new_k[0]
+        nv = jnp.stack(new_v) if subs > 1 else new_v[0]
+        return x, (nk, nv)
+
+    blocks = params["blocks"]
+    ck, cv = cache["k"], cache["v"]
+    if subs > 1:
+        blocks = jax.tree.map(
+            lambda a: a.reshape(steps, subs, *a.shape[1:]), blocks)
+        ck = ck.reshape(steps, subs, *ck.shape[1:])
+        cv = cv.reshape(steps, subs, *cv.shape[1:])
+    x, (nk, nv) = jax.lax.scan(scan_body, x, (blocks, ck, cv))
+    if subs > 1:
+        nk = nk.reshape(cfg.n_layers, *nk.shape[2:])
+        nv = nv.reshape(cfg.n_layers, *nv.shape[2:])
+    x = rms_norm(x, params["final_norm"])
+    logits = x @ params["unembed"]
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,203 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Backbone only: the conv audio frontend is a STUB — ``input_specs`` feeds
+precomputed frame embeddings (B, n_frames, d) straight into the encoder
+(bidirectional attention); the decoder is a causal LM with cross-attention
+into the encoder output.  Decode carries the self-attention cache plus the
+precomputed encoder K/V.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from repro.dist.sharding import constrain_residual
+from .layers import blocked_attention, rms_norm, swiglu
+from .transformer import decode_attention_jnp
+
+
+def _enc_block_specs(cfg, L):
+    d, ff, hd = cfg.d_model, cfg.d_ff, cfg.hd
+    H = cfg.n_heads
+    dt = cfg.jdtype
+    S = lambda *s: jax.ShapeDtypeStruct((L, *s), dt)
+    return {"ln1": S(d), "ln2": S(d),
+            "wq": S(d, H * hd), "wk": S(d, H * hd), "wv": S(d, H * hd),
+            "wo": S(H * hd, d),
+            "w_gate": S(d, ff), "w_up": S(d, ff), "w_down": S(ff, d)}
+
+
+def _dec_block_specs(cfg, L):
+    spec = _enc_block_specs(cfg, L)
+    d, hd = cfg.d_model, cfg.hd
+    H = cfg.n_heads
+    dt = cfg.jdtype
+    S = lambda *s: jax.ShapeDtypeStruct((L, *s), dt)
+    spec.update({"ln_x": S(d),
+                 "xq": S(d, H * hd), "xk": S(d, H * hd), "xv": S(d, H * hd),
+                 "xo": S(H * hd, d)})
+    return spec
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.jdtype
+    return {
+        "embed": jax.ShapeDtypeStruct((cfg.padded_vocab, d), dt),
+        "unembed": jax.ShapeDtypeStruct((d, cfg.padded_vocab), dt),
+        "pos_dec": jax.ShapeDtypeStruct((4096, d), dt),
+        "pos_enc": jax.ShapeDtypeStruct((max(cfg.n_frames, 1), d), dt),
+        "final_norm": jax.ShapeDtypeStruct((d,), dt),
+        "enc_blocks": _enc_block_specs(cfg, cfg.encoder_layers),
+        "dec_blocks": _dec_block_specs(cfg, cfg.n_layers),
+        "enc_final_norm": jax.ShapeDtypeStruct((d,), dt),
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    specs = param_specs(cfg)
+    flat, tree = jax.tree_util.tree_flatten_with_path(specs)
+    keys = jax.random.split(rng, len(flat))
+    out = []
+    for key, (path, s) in zip(keys, flat):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name.startswith(("ln", "final", "enc_final")):
+            v = jnp.zeros(s.shape, s.dtype)
+        elif name.startswith("pos"):
+            v = (0.02 * jax.random.normal(key, s.shape, jnp.float32)).astype(s.dtype)
+        else:
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            v = (jax.random.normal(key, s.shape, jnp.float32)
+                 / jnp.sqrt(fan_in)).astype(s.dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(tree, out)
+
+
+def _self_attn(cfg, p, x, *, causal, cache=None, pos=None):
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    if cache is None:
+        out = blocked_attention(q, k, v, causal=causal)
+        nc = None
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, 0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, 0, pos, 0))
+        out = decode_attention_jnp(q, ck, cv, jnp.full((B,), pos + S, jnp.int32))
+        nc = {"k": ck, "v": cv}
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * hd).astype(x.dtype) \
+        @ p["wo"], nc
+
+
+def _cross_attn(cfg, p, x, enc_k, enc_v):
+    """enc_k/enc_v (B,H,F,hd) precomputed from encoder output."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["xq"]).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    out = blocked_attention(q, enc_k, enc_v, causal=False)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, H * hd).astype(x.dtype) \
+        @ p["xo"]
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames (B, F, d) — stub frontend output."""
+    x = frames.astype(cfg.jdtype) + params["pos_enc"][None, :frames.shape[1]]
+
+    def body(x, pblk):
+        x = constrain_residual(x)
+        a, _ = _self_attn(cfg, pblk, rms_norm(x, pblk["ln1"]), causal=False)
+        x = x + a
+        x = x + swiglu(rms_norm(x, pblk["ln2"]), pblk["w_gate"], pblk["w_up"],
+                       pblk["w_down"])
+        return x, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_final_norm"])
+
+
+def _enc_kv(cfg, params, enc_out):
+    """Precompute cross-attention K/V per decoder layer (stacked on L)."""
+    B, F, d = enc_out.shape
+    H, hd = cfg.n_heads, cfg.hd
+
+    def one(pblk):
+        k = (enc_out @ pblk["xk"]).reshape(B, F, H, hd).transpose(0, 2, 1, 3)
+        v = (enc_out @ pblk["xv"]).reshape(B, F, H, hd).transpose(0, 2, 1, 3)
+        return k, v
+
+    return jax.vmap(one)(params["dec_blocks"])   # (L,B,H,F,hd) ×2
+
+
+def _decoder(cfg, params, tokens, enc_kv, pos, cache=None):
+    x = constrain_residual(params["embed"][tokens])
+    B, S, d = x.shape
+    x = x + params["pos_dec"][(0 if pos is None else pos) + jnp.arange(S)][None]
+    ek, ev = enc_kv
+
+    def body(x, xs):
+        x = constrain_residual(x)
+        if cache is None:
+            pblk, eki, evi = xs
+            c = None
+        else:
+            pblk, eki, evi, ck, cv = xs
+            c = {"k": ck, "v": cv}
+        a, nc = _self_attn(cfg, pblk, rms_norm(x, pblk["ln1"]), causal=True,
+                           cache=c, pos=pos)
+        x = x + a
+        x = x + _cross_attn(cfg, pblk, rms_norm(x, pblk["ln_x"]), eki, evi)
+        x = x + swiglu(rms_norm(x, pblk["ln2"]), pblk["w_gate"], pblk["w_up"],
+                       pblk["w_down"])
+        return x, (nc["k"], nc["v"]) if nc is not None else None
+
+    if cache is None:
+        wrapped = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(wrapped, x, (params["dec_blocks"], ek, ev))
+        new_cache = None
+    else:
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_blocks"], ek, ev, cache["k"], cache["v"]))
+        new_cache = {"k": nk, "v": nv}
+    return rms_norm(x, params["final_norm"]), new_cache
+
+
+def forward_hidden(cfg: ModelConfig, params, batch):
+    """batch: frames (B,F,d) + tokens (B,S) → (hidden, aux)."""
+    enc = encode(cfg, params, batch["frames"])
+    hidden, _ = _decoder(cfg, params, batch["tokens"],
+                         _enc_kv(cfg, params, enc), pos=None)
+    return hidden, 0.0
+
+
+def forward_train(cfg: ModelConfig, params, batch):
+    hidden, aux = forward_hidden(cfg, params, batch)
+    return hidden @ params["unembed"], aux
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    H, hd, L = cfg.n_heads, cfg.hd, cfg.n_layers
+    kv = jax.ShapeDtypeStruct((L, batch, H, max_len, hd), cfg.jdtype)
+    ekv = jax.ShapeDtypeStruct((L, batch, H, cfg.n_frames, hd), cfg.jdtype)
+    return {"k": kv, "v": kv, "enc_k": ekv, "enc_v": ekv}
+
+
+def init_cache(cfg: ModelConfig, params, frames, batch: int, max_len: int):
+    enc = encode(cfg, params, frames)
+    ek, ev = _enc_kv(cfg, params, enc)
+    kv = jnp.zeros((cfg.n_layers, batch, cfg.n_heads, max_len, cfg.hd),
+                   cfg.jdtype)
+    return {"k": kv, "v": kv.copy(), "enc_k": ek, "enc_v": ev}
+
+
+def forward_decode(cfg: ModelConfig, params, batch, cache, pos):
+    hidden, nc = _decoder(cfg, params, batch["tokens"],
+                          (cache["enc_k"], cache["enc_v"]), pos,
+                          cache={"k": cache["k"], "v": cache["v"]})
+    logits = hidden @ params["unembed"]
+    return logits, {**nc, "enc_k": cache["enc_k"], "enc_v": cache["enc_v"]}

@@ -1,0 +1,53 @@
+"""Serving steps: prefill (full-sequence forward) and decode (one token
+against the KV cache / recurrent state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+
+
+def make_prefill_step(cfg):
+    """prefill(params, batch) → last-position logits (B, V).
+
+    Unembeds only the final position — full-sequence logits at 32k would
+    be hundreds of GB and no server needs them.
+    """
+
+    def prefill(params, batch):
+        hidden, _ = api.forward_hidden(cfg, params, batch)
+        return api.apply_unembed(cfg, params, hidden[:, -1, :])
+
+    return prefill
+
+
+def make_decode_step(cfg):
+    """decode(params, batch, state, pos) → (next_token_logits (B,V), state)."""
+
+    def decode(params, batch, state, pos):
+        logits, new_state = api.forward_decode(cfg, params, batch, state, pos)
+        logits = logits[:, -1, :]
+        if cfg.padded_vocab != cfg.vocab:   # mask padded vocab columns
+            iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            logits = jnp.where(iota < cfg.vocab, logits, -1e30)
+        return logits, new_state
+
+    return decode
+
+
+def greedy_generate(cfg, params, prompt_tokens, n_steps, max_len, frames=None):
+    """Simple greedy decoding loop (examples/tests); prompt (B, S0)."""
+    B, S0 = prompt_tokens.shape
+    state = api.init_decode_state(cfg, params, B, max_len, frames=frames)
+    decode = make_decode_step(cfg)
+    # feed prompt one token at a time (no separate prefill graph needed here)
+    tok = None
+    for t in range(S0):
+        tok, state = decode(params, {"tokens": prompt_tokens[:, t:t + 1]},
+                            state, t)
+    out = [jnp.argmax(tok, -1)]
+    for t in range(S0, S0 + n_steps - 1):
+        tok, state = decode(params, {"tokens": out[-1][:, None]}, state, t)
+        out.append(jnp.argmax(tok, -1))
+    return jnp.stack(out, axis=1)

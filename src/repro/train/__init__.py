@@ -1,0 +1,2 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_specs
+from .train_step import TrainConfig, loss_fn, make_train_step

@@ -1,0 +1,123 @@
+"""Checkpointing with an AirIndex manifest (DESIGN.md §3).
+
+A checkpoint is one packed blob of raw leaf bytes plus an AirTune-built
+index over ``slice_id → byte range`` tuned for the checkpoint storage
+tier.  Restore-after-failure reads the manifest root (one small read) and
+then exactly the byte ranges of the slices a host needs — on a 1000-node
+cluster each host restores only its own shards, O(Σ T(Δ_slice)) instead of
+O(T(whole checkpoint)).
+
+Leaves are split into fixed-grain slices (default 4 MiB) so partial
+restore granularity is independent of tensor size.  Every slice carries a
+crc32 for integrity; a corrupted slice fails loudly at restore.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+
+import jax
+import numpy as np
+
+from repro.core import (KeyPositions, SerializedIndex, airtune, write_index)
+from repro.core.storage import PROFILES, StorageProfile
+
+SLICE_BYTES = 4 << 20
+
+
+def _leaf_paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        out.append(("/".join(str(getattr(p, "key", p)) for p in path), leaf))
+    return out
+
+
+def save_checkpoint(path: str, tree, *, profile: StorageProfile | str =
+                    "object_store", step: int = 0) -> dict:
+    """Write blob + AirIndex manifest; returns the meta dict."""
+    os.makedirs(path, exist_ok=True)
+    if isinstance(profile, str):
+        profile = PROFILES[profile]
+    blob_path = os.path.join(path, f"ckpt-{step}.blob")
+    slices = []       # (key, offset, size, crc, leaf_idx, slice_idx)
+    leaves = _leaf_paths(tree)
+    off = 0
+    with open(blob_path, "wb") as f:
+        for li, (name, leaf) in enumerate(leaves):
+            raw = np.asarray(leaf).tobytes()
+            for si in range(0, max(len(raw), 1), SLICE_BYTES):
+                chunk = raw[si:si + SLICE_BYTES]
+                f.write(chunk)
+                slices.append({"leaf": li, "name": name, "off": off,
+                               "size": len(chunk),
+                               "crc": zlib.crc32(chunk)})
+                off += len(chunk)
+    # AirIndex over slice_id → byte range
+    keys = np.arange(len(slices), dtype=np.uint64)
+    offs = np.asarray([s["off"] for s in slices] + [off], dtype=np.int64)
+    D = KeyPositions.from_offsets(keys, offs)
+    tune = airtune(D, profile, k=3)
+    write_index(os.path.join(path, f"ckpt-{step}.air"), tune.design)
+    meta = {
+        "step": step,
+        "blob_bytes": off,
+        "slices": slices,
+        "leaves": [{"name": n, "shape": list(np.asarray(l).shape),
+                    "dtype": str(np.asarray(l).dtype)} for n, l in leaves],
+        "index_cost_us": tune.cost * 1e6,
+        "index_design": tune.design.describe(),
+    }
+    with open(os.path.join(path, f"ckpt-{step}.json"), "w") as f:
+        json.dump(meta, f)
+    return meta
+
+
+def restore_checkpoint(path: str, tree_like, *, step: int = 0,
+                       leaf_filter=None) -> tuple:
+    """Restore (a subset of) leaves via manifest-indexed partial reads.
+
+    ``leaf_filter(name) → bool`` selects which leaves this host needs
+    (None = all).  Returns (tree, stats) where stats records bytes read —
+    the partial-restore win is visible there.
+    """
+    with open(os.path.join(path, f"ckpt-{step}.json")) as f:
+        meta = json.load(f)
+    idx = SerializedIndex(os.path.join(path, f"ckpt-{step}.air"))
+    blob_fd = os.open(os.path.join(path, f"ckpt-{step}.blob"), os.O_RDONLY)
+    stats = {"bytes_read": idx.bytes_read, "reads": idx.reads,
+             "slices_read": 0}
+    try:
+        leaves_meta = meta["leaves"]
+        by_leaf: dict[int, list] = {}
+        for sid, s in enumerate(meta["slices"]):
+            by_leaf.setdefault(s["leaf"], []).append((sid, s))
+        flat, tree_def = jax.tree_util.tree_flatten_with_path(tree_like)
+        out = []
+        for li, (path_k, leaf) in enumerate(flat):
+            name = "/".join(str(getattr(p, "key", p)) for p in path_k)
+            lm = leaves_meta[li]
+            assert lm["name"] == name, (lm["name"], name)
+            if leaf_filter is not None and not leaf_filter(name):
+                out.append(None)
+                continue
+            raw = b""
+            for sid, s in by_leaf[li]:
+                lo, hi = idx.lookup(sid)          # Alg. 1 on the manifest
+                lo = max(min(lo, s["off"]), 0)
+                hi = max(hi, s["off"] + s["size"])
+                window = os.pread(blob_fd, hi - lo, lo)
+                chunk = window[s["off"] - lo: s["off"] - lo + s["size"]]
+                assert zlib.crc32(chunk) == s["crc"], f"corrupt slice {sid}"
+                stats["bytes_read"] += hi - lo
+                stats["reads"] += 1
+                stats["slices_read"] += 1
+                raw += chunk
+            arr = np.frombuffer(raw, dtype=lm["dtype"]).reshape(lm["shape"])
+            out.append(arr)
+        stats["bytes_read"] += idx.bytes_read
+        return jax.tree_util.tree_unflatten(tree_def, out), stats
+    finally:
+        idx.close()
+        os.close(blob_fd)

@@ -1,0 +1,87 @@
+"""AdamW — pure-pytree, ZeRO-friendly.
+
+Moments live in a configurable dtype (fp32 default; bf16 for grok-1 so the
+fully-sharded state fits 16 GB/chip — DESIGN.md §5) and are sharded exactly
+like their parameters, which under FSDP means the optimizer state is fully
+sharded across the whole mesh (ZeRO-3-equivalent memory).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def opt_state_specs(param_specs, ocfg: AdamWConfig):
+    dt = jnp.dtype(ocfg.moment_dtype)
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt), param_specs)
+    return {"m": mom, "v": mom,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def adamw_init(params, ocfg: AdamWConfig):
+    dt = jnp.dtype(ocfg.moment_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(step, ocfg: AdamWConfig):
+    warm = jnp.minimum(step / max(ocfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - ocfg.warmup_steps)
+                    / max(ocfg.total_steps - ocfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return ocfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, state, ocfg: AdamWConfig):
+    """→ (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+    lr = _schedule(step, ocfg)
+    b1, b2 = ocfg.b1, ocfg.b2
+    mdt = jnp.dtype(ocfg.moment_dtype)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + ocfg.eps) + \
+            ocfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,117 @@
+"""Training step: CE loss (+z-loss, +MoE aux), grad accumulation, remat.
+
+The step is a pure function suitable for jax.jit with in/out shardings;
+gradient accumulation scans over microbatches (sequential, activations
+freed between microbatches) and the optimizer update runs once per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from .optimizer import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1          # grad-accumulation steps
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 1e-2
+    optimizer: AdamWConfig = AdamWConfig()
+
+
+LOSS_CHUNK = 512  # sequence positions unembedded at a time
+
+
+def _ce_chunk(cfg, unemb, hidden_c, labels_c):
+    """CE + z-loss sums for one sequence chunk; never keeps full logits."""
+    logits = hidden_c @ unemb
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap)
+    logits = logits.astype(jnp.float32)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    # vocab is padded to a shardable multiple (ModelConfig.padded_vocab);
+    # padded columns are excluded from the partition function
+    logits = jnp.where(vocab_iota < cfg.vocab, logits, -1e30)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    # label log-prob via masked sum (not take_along_axis): keeps the vocab
+    # dim shardable — SPMD reduces a partial sum instead of gathering logits
+    ll = jnp.sum(jnp.where(vocab_iota == labels_c[..., None], logits, 0.0),
+                 axis=-1)
+    return jnp.sum(logz - ll), jnp.sum(jnp.square(logz))
+
+
+def loss_fn(cfg, params, batch, tcfg: TrainConfig):
+    """Chunked-softmax CE: the (B,S,V) logits tensor is never materialized —
+    hidden states are unembedded LOSS_CHUNK positions at a time inside a
+    rematerialized scan (memory ≈ B·chunk·V_shard instead of B·S·V_shard)."""
+    hidden, aux = api.forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    B, S, d = hidden.shape
+    chunk = min(LOSS_CHUNK, S)
+    if S % chunk:
+        chunk = S          # odd lengths: single chunk (tests/smoke only)
+    n_tok = B * S
+    nc = S // chunk
+    hc = hidden.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+    unemb = params["unembed"]
+
+    def step(carry, xs):
+        ce_s, z_s = carry
+        h, l = xs
+        dce, dz = jax.checkpoint(
+            lambda hh, ll_: _ce_chunk(cfg, unemb, hh, ll_))(h, l)
+        return (ce_s + dce, z_s + dz), None
+
+    (ce_sum, z_sum), _ = jax.lax.scan(step, (0.0, 0.0), (hc, lc))
+    ce = ce_sum / n_tok
+    z = z_sum / n_tok
+    total = ce + tcfg.z_loss * z + tcfg.aux_loss_weight * aux
+    return total, {"ce": ce, "aux": aux, "z": z}
+
+
+def _split_microbatches(batch, n):
+    def split(x):
+        B = x.shape[0]
+        assert B % n == 0, f"batch {B} not divisible by microbatches {n}"
+        return x.reshape(n, B // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg, tcfg: TrainConfig):
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics)."""
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, tcfg), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        n = tcfg.microbatches
+        if n == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            micro = _split_microbatches(batch, n)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                loss, _, grads = grads_of(params, mb)
+                return (jax.tree.map(jnp.add, g_acc, grads), l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(accum, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss / n
+            metrics = {}
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer)
+        return params, opt_state, {"loss": loss, **opt_metrics}
+
+    return step

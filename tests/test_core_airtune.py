@@ -1,0 +1,121 @@
+"""AirTune search: optimality vs brute force, paper-claim validations."""
+import numpy as np
+import pytest
+
+from repro.core import (AffineProfile, KeyPositions, PROFILES, airtune,
+                        brute_force, expected_latency, ideal_latency_with_index,
+                        make_builders, mean_read_volume, step_index_complexity,
+                        tau_hat, verify_lookup)
+from repro.core.baselines import (build_fixed_btree, data_calculator,
+                                  homogeneous_airtune, tune_pgm, tune_rmi)
+
+from conftest import make_keys
+
+
+SMALL_BUILDERS = make_builders(lam_low=2**8, lam_high=2**16, base=4.0)
+
+
+def _data(kind="gmm", n=20_000, seed=3):
+    return KeyPositions.fixed_record(make_keys(kind, n, seed), 16)
+
+
+def test_airtune_cost_matches_eq6_evaluator():
+    D = _data()
+    for pname in ("azure_ssd", "azure_nfs", "cloud_ex"):
+        res = airtune(D, PROFILES[pname], SMALL_BUILDERS, k=3)
+        ev = expected_latency(res.design, PROFILES[pname])
+        assert ev == pytest.approx(res.cost, rel=1e-9)
+
+
+def test_airtune_matches_brute_force_small():
+    """Top-k pruning must not lose the optimum on a tractable space."""
+    D = _data(n=3_000)
+    builders = make_builders(lam_low=2**10, lam_high=2**16, base=8.0)
+    for pname in ("azure_ssd", "azure_nfs"):
+        prof = PROFILES[pname]
+        bf = brute_force(D, prof, builders, max_layers=3)
+        at = airtune(D, prof, builders, k=len(builders))  # k = |F|: no pruning
+        assert at.cost == pytest.approx(bf.cost, rel=1e-9)
+        pruned = airtune(D, prof, builders, k=3)
+        # pruned search may differ but never by much on these spaces
+        assert pruned.cost <= bf.cost * 1.05
+
+
+def test_airtune_beats_or_matches_baselines():
+    """§7.2-analog under the storage model (the paper's Eq. 6 objective)."""
+    for kind in ("gmm", "books", "uniform"):
+        D = _data(kind)
+        for pname in ("azure_ssd", "azure_nfs"):
+            prof = PROFILES[pname]
+            ours = airtune(D, prof, k=5).cost
+            for name, base_cost in [
+                ("btree", expected_latency(build_fixed_btree(D), prof)),
+                ("rmi", tune_rmi(D, prof).cost),
+                ("pgm", tune_pgm(D, prof).cost),
+                ("datacalc", data_calculator(D, prof).cost),
+            ]:
+                assert ours <= base_cost * 1.0001, (kind, pname, name)
+
+
+def test_heterogeneous_beats_homogeneous():
+    """§2.2: tuned heterogeneous ≤ best homogeneous (step-only, band-only)."""
+    D = _data("gmm", n=30_000)
+    prof = PROFILES["azure_ssd"]
+    full = airtune(D, prof, k=5).cost
+    step_only = homogeneous_airtune(D, prof, "step", k=5).cost
+    band_only = homogeneous_airtune(D, prof, "band", k=5).cost
+    assert full <= step_only * 1.0001
+    assert full <= band_only * 1.0001
+
+
+def test_adaptivity_trend():
+    """Fig. 13: higher latency/bandwidth ⇒ fewer layers & more read volume;
+    the extreme ⇒ no index at all."""
+    D = _data(n=10_000)
+    # latency-dominated extreme (Fig. 13 top-right): fetching everything in
+    # one read beats paying the per-read latency of any index traversal
+    slow = AffineProfile(10.0, 1e9)
+    res = airtune(D, slow, SMALL_BUILDERS, k=3)
+    assert res.design.n_layers == 0
+
+    fast = AffineProfile(1e-7, 1e9)       # very fast: tall index pays off
+    res_fast = airtune(D, fast, SMALL_BUILDERS, k=3)
+    res_nfs = airtune(D, PROFILES["azure_nfs"], SMALL_BUILDERS, k=3)
+    assert res_fast.design.n_layers >= res_nfs.design.n_layers
+    assert mean_read_volume(res_fast.design) <= mean_read_volume(res_nfs.design)
+
+
+def test_stopping_criterion():
+    D = _data(n=50)  # tiny collection: ideal layer can't beat direct read
+    prof = PROFILES["azure_nfs"]
+    assert float(prof(D.size_bytes)) < ideal_latency_with_index(prof)
+    res = airtune(D, prof, SMALL_BUILDERS, k=3)
+    assert res.design.n_layers == 0
+
+
+def test_tau_hat_is_lower_bound_to_achieved():
+    """τ̂ bounds the best achievable cost from below? No — it upper-bounds
+    the *ideal* index complexity τ; any REAL design costs ≥ τ.  We check the
+    usable property: achieved cost ≥ τ̂'s ideal-step value at L chosen with
+    real node sizes is consistent, and τ̂ ≤ cost of every built design."""
+    D = _data(n=20_000)
+    for pname in ("azure_ssd", "azure_nfs"):
+        prof = PROFILES[pname]
+        res = airtune(D, prof, SMALL_BUILDERS, k=5)
+        assert tau_hat(D, prof) <= res.cost * (1 + 1e-9)
+
+
+def test_tau_hat_monotone_in_size():
+    prof = PROFILES["azure_ssd"]
+    sizes = [2**s for s in range(8, 34, 2)]
+    vals = [step_index_complexity(s, prof) for s in sizes]
+    assert all(a <= b + 1e-12 for a, b in zip(vals, vals[1:]))
+
+
+def test_end_to_end_lookup_valid():
+    rng = np.random.default_rng(0)
+    for kind in ("gmm", "fb"):
+        D = _data(kind)
+        res = airtune(D, PROFILES["azure_ssd"], k=5)
+        qs = rng.choice(D.keys, 2_000)
+        assert verify_lookup(res.design, qs)

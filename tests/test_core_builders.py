@@ -1,0 +1,116 @@
+"""Unit + property tests: layer builders and the Eq.(1) validity invariant."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KeyPositions, build_eband, build_gband, build_gstep,
+                        build_partitioned, greedy_partition, make_builders,
+                        outline)
+from repro.core.builders import LayerBuilder
+
+from conftest import make_keys
+
+
+# ---------------------------------------------------------------------------
+# greedy_partition: exactness against the sequential definition
+# ---------------------------------------------------------------------------
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_greedy_partition_matches_sequential(data):
+    n = data.draw(st.integers(2, 500))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    widths = rng.integers(1, 40, n)
+    lo = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int64)
+    hi = (lo + widths).astype(np.int64)
+    lam = float(data.draw(st.integers(1, 2000)))
+    got = greedy_partition(lo, hi, lam)
+    ref, s = [0], 0
+    for i in range(1, n):
+        if hi[i] - lo[s] > lam:
+            ref.append(i)
+            s = i
+    assert np.array_equal(got, np.asarray(ref, dtype=np.int64))
+
+
+def test_greedy_partition_group_extent_bound():
+    keys = make_keys("gmm", 20_000)
+    D = KeyPositions.fixed_record(keys, 16)
+    lam = 512.0
+    starts = greedy_partition(D.lo, D.hi, lam)
+    ends = np.append(starts[1:], D.n)
+    extent = D.hi[ends - 1] - D.lo[starts]
+    # every greedy group (except forced single-item groups) is within λ
+    multi = (ends - starts) > 1
+    assert np.all(extent[multi] <= lam)
+
+
+# ---------------------------------------------------------------------------
+# builder validity: Eq. (1) must hold on every dataset shape
+# ---------------------------------------------------------------------------
+BUILDERS = [
+    ("gstep", lambda D: build_gstep(D, p=16, lam=1024)),
+    ("gstep-small", lambda D: build_gstep(D, p=4, lam=64)),
+    ("eband", lambda D: build_eband(D, lam=1024)),
+    ("gband", lambda D: build_gband(D, lam=1024)),
+]
+
+
+@pytest.mark.parametrize("kind", ["uniform", "gmm", "books", "fb"])
+@pytest.mark.parametrize("bname,build", BUILDERS)
+def test_builder_validity(kind, bname, build):
+    keys = make_keys(kind, 5_000, seed=7)
+    D = KeyPositions.fixed_record(keys, 16)
+    layer = build(D)
+    layer.validate_against(D)          # asserts ŷ(x) ⊇ y for all pairs
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_builder_validity_property(data):
+    """Adversarial: arbitrary sorted keys, arbitrary record sizes."""
+    n = data.draw(st.integers(2, 300))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    keys = np.unique(rng.integers(0, 2**48, n).astype(np.uint64))
+    widths = rng.integers(1, 1000, len(keys))
+    offs = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+    D = KeyPositions.from_offsets(keys, offs)
+    lam = float(data.draw(st.sampled_from([64, 256, 4096, 1 << 20])))
+    kind = data.draw(st.sampled_from(["gstep", "gband", "eband"]))
+    layer = LayerBuilder(kind=kind, lam=lam, p=8)(D)
+    layer.validate_against(D)
+
+
+def test_gband_width_bound():
+    """GBand: every multi-pair node's width 2δ ≤ λ (+fit slack)."""
+    keys = make_keys("uniform", 20_000)
+    D = KeyPositions.fixed_record(keys, 16)
+    lam = 2048.0
+    layer = build_gband(D, lam)
+    # nodes that cover >1 pair obey the bound by the greedy feasibility test
+    node_of = np.searchsorted(layer.node_keys, D.keys, side="right") - 1
+    counts = np.bincount(np.maximum(node_of, 0), minlength=layer.n_nodes)
+    multi = counts > 1
+    assert np.all(2 * layer.delta[multi] <= lam + 8.0)
+
+
+def test_outline_weights_conserved(gmm_small):
+    layer = build_gstep(gmm_small, p=16, lam=4096)
+    out = outline(layer, gmm_small)
+    assert out.total_weight == pytest.approx(gmm_small.total_weight)
+    assert out.size_bytes == layer.size_bytes
+    out.validate()
+
+
+def test_partitioned_build_equals_merged_validity(gmm_small):
+    for b in (LayerBuilder("gstep", 2048, 16), LayerBuilder("eband", 2048),
+              LayerBuilder("gband", 2048)):
+        layer = build_partitioned(b, gmm_small, partition_pairs=7_000)
+        layer.validate_against(gmm_small)
+
+
+def test_make_builders_grid_matches_eq8():
+    F = make_builders(lam_low=2**8, lam_high=2**20, base=2.0, p=16)
+    # 13 λ values × 3 kinds (Eq. 8 example: 39 builders)
+    assert len(F) == 39
+    lams = sorted({f.lam for f in F})
+    assert lams[0] == 2**8 and lams[-1] == 2**20

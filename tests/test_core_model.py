@@ -1,0 +1,101 @@
+"""Latency model, storage profiles, paper §2.1 worked-example arithmetic."""
+import numpy as np
+import pytest
+
+from repro.core import (AffineProfile, AffineUniformProfile, KeyPositions,
+                        MeasuredProfile, PROFILES, IndexDesign,
+                        expected_latency, latency_breakdown, lookup_batch)
+from repro.core.nodes import StepLayer
+from repro.core.keyset import POS_DTYPE
+
+
+def test_affine_profile():
+    p = AffineProfile(100e-6, 1e9)
+    assert p(4096) == pytest.approx(100e-6 + 4096 / 1e9)
+    deltas = np.array([1.0, 10.0, 100.0])
+    assert np.all(np.diff(p(deltas)) > 0)
+
+
+def test_affine_uniform_profile_reduces_to_affine():
+    p = AffineUniformProfile(1e-3, 1e-3, 1e8, 1e8)
+    q = AffineProfile(1e-3, 1e8)
+    assert p(12345.0) == pytest.approx(q(12345.0), rel=1e-6)
+
+
+def test_affine_uniform_closed_form():
+    # paper §3.2: T = (ℓ0+ℓ1)/2 + Δ(lnB1−lnB0)/(B1−B0)
+    p = AffineUniformProfile(1e-3, 3e-3, 1e8, 4e8)
+    expected = 2e-3 + 1e6 * (np.log(4e8) - np.log(1e8)) / 3e8
+    assert p(1e6) == pytest.approx(expected, rel=1e-9)
+
+
+def test_measured_profile_monotone_and_fit():
+    mp = MeasuredProfile(deltas=(256, 4096, 65536, 1 << 20),
+                         seconds=(1e-4, 1.2e-4, 3e-4, 1.3e-3))
+    d = np.array([100, 1000, 10000, 1 << 21])
+    assert np.all(np.diff(mp(d)) >= 0)
+    aff = mp.fit_affine()
+    assert aff.latency > 0 and aff.bandwidth > 0
+
+
+def _example_btree(n_keys, fanout, node_bytes, page_bytes):
+    """Construct the §2.1 B-tree shapes: uniform pieces of `page` width."""
+    keys = np.arange(1, n_keys + 1, dtype=np.uint64) * 1000
+    D = KeyPositions.fixed_record(keys, page_bytes // (n_keys // n_keys))
+    return D
+
+
+def test_paper_2_1_example_numbers():
+    """§2.1: B200 vs B5000 on SSD(100µs,1GB/s) vs Cloud(100ms,100MB/s).
+
+    The paper computes per-lookup times from the formula
+    latency + size/bandwidth per fetch: B200 = 3 nodes + 1 page;
+    B5000 = 2 nodes + 1 page.  Validate L_SM reproduces its numbers.
+    """
+    ssd = PROFILES["ssd_ex"]
+    cloud = PROFILES["cloud_ex"]
+    KB = 1024.0
+
+    def lookup_time(profile, n_nodes, node_bytes, page_bytes):
+        return n_nodes * float(profile(node_bytes)) + float(profile(page_bytes))
+
+    b200_ssd = lookup_time(ssd, 3, 4 * KB, 4 * KB)
+    b5000_ssd = lookup_time(ssd, 2, 100 * KB, 4 * KB)
+    # paper: 416 µs vs 504 µs (21% slower)
+    assert b200_ssd == pytest.approx(416e-6, rel=0.02)
+    assert b5000_ssd == pytest.approx(504e-6, rel=0.02)
+    assert b5000_ssd > b200_ssd
+
+    b200_cloud = lookup_time(cloud, 3, 4 * KB, 4 * KB)
+    b5000_cloud = lookup_time(cloud, 2, 100 * KB, 4 * KB)
+    # paper: 400.16 ms vs 302.04 ms (B200 32% slower)
+    assert b200_cloud == pytest.approx(400.16e-3, rel=0.02)
+    assert b5000_cloud == pytest.approx(302.04e-3, rel=0.02)
+    assert b200_cloud > b5000_cloud
+
+
+def test_expected_latency_composition():
+    """L_SM = T(s_root) + Σ E[T(Δ_l)] — check against a hand-built 2-layer."""
+    keys = np.arange(0, 1024, dtype=np.uint64)
+    D = KeyPositions.fixed_record(keys, 16)
+    # layer 1: 64 pieces of 16 keys → width 256 B; 4 nodes of 16 pieces
+    pk = keys[::16]
+    pp = np.arange(65, dtype=POS_DTYPE) * 256
+    l1 = StepLayer(piece_keys=pk, piece_pos=pp,
+                   node_piece_off=np.arange(0, 65, 16, dtype=np.int64))
+    # layer 2: 4 pieces (one per node below, 16*16=256 B each), 1 node
+    pk2 = pk[::16]
+    pp2 = np.arange(5, dtype=POS_DTYPE) * (16 * 16)
+    l2 = StepLayer(piece_keys=pk2, piece_pos=pp2,
+                   node_piece_off=np.array([0, 4], dtype=np.int64))
+    design = IndexDesign(layers=(l1, l2), data=D)
+    prof = AffineProfile(1e-4, 1e8)
+    got = expected_latency(design, prof)
+    want = float(prof(4 * 16)) + float(prof(256)) + float(prof(256))
+    assert got == pytest.approx(want, rel=1e-12)
+    bd = latency_breakdown(design, prof)
+    assert bd["total"] == pytest.approx(got, rel=1e-12)
+    assert len(bd["layers"]) == 2
+
+    res = lookup_batch(design, keys[17:18], prof)
+    assert res.lo[0] == 16 * 16 and res.hi[0] == 2 * 16 * 16  # covers key 17

@@ -1,0 +1,51 @@
+"""Serialization round-trip + real partial-read lookup (Alg. 1 on files)."""
+import numpy as np
+import pytest
+
+from repro.core import (KeyPositions, PROFILES, SerializedIndex, airtune,
+                        load_index, make_builders, verify_lookup, write_index)
+
+from conftest import make_keys
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    keys = make_keys("gmm", 30_000, seed=11)
+    D = KeyPositions.fixed_record(keys, 16)
+    res = airtune(D, PROFILES["azure_ssd"],
+                  make_builders(lam_low=2**8, lam_high=2**16, base=4.0), k=3)
+    path = str(tmp_path_factory.mktemp("idx") / "index.air")
+    meta = write_index(path, res.design)
+    return D, res.design, path, meta
+
+
+def test_serialized_sizes_match_model(built):
+    D, design, path, meta = built
+    for layer, lm in zip(design.layers, meta.layers):
+        assert lm.size == layer.size_bytes
+
+
+def test_roundtrip_predictions_match(built):
+    D, design, path, meta = built
+    rng = np.random.default_rng(0)
+    qs = rng.choice(D.keys, 500)
+    loaded = load_index(path, D)
+    assert verify_lookup(loaded, qs)
+
+
+def test_partial_read_lookup_valid_and_partial(built):
+    D, design, path, meta = built
+    rng = np.random.default_rng(1)
+    qs = rng.choice(D.keys, 300)
+    idx = SerializedIndex(path)
+    try:
+        kidx = np.searchsorted(D.keys, qs)
+        for q, i in zip(qs, kidx):
+            lo, hi = idx.lookup(int(q))
+            assert lo <= D.lo[i] and hi >= D.hi[i], "file lookup violates Eq.(1)"
+        # partial reads only: far less than one full-file read per query
+        total_index_bytes = sum(lm.size for lm in meta.layers)
+        if design.n_layers > 1:
+            assert idx.bytes_read < total_index_bytes + 300 * 64 * 1024
+    finally:
+        idx.close()

@@ -1,0 +1,49 @@
+"""shard_map flash-decode over a sequence-sharded cache == full attention.
+
+Runs in a subprocess with 8 forced host devices so the main test session
+keeps its single-device view (conftest contract).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.serve.attention import flash_decode_sharded
+from repro.kernels.decode_attention import ref
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+B, Hq, Hkv, S, hd = 2, 8, 2, 256, 64
+q = jnp.asarray(rng.normal(size=(B, Hq, hd)), jnp.float32)
+k = jnp.asarray(rng.normal(size=(B, Hkv, S, hd)), jnp.float32)
+v = jnp.asarray(rng.normal(size=(B, Hkv, S, hd)), jnp.float32)
+errs = []
+with mesh:
+    fd = jax.jit(flash_decode_sharded(mesh, "model"))
+    for L in (S, S - 17, 64, 1):
+        lengths = jnp.full((B,), L, jnp.int32)
+        got = fd(q, k, v, lengths)
+        want, _, _ = ref.decode_attention_ref(q, k, v, lengths)
+        errs.append(float(jnp.max(jnp.abs(got - want))))
+print("ERRS", json.dumps(errs)) if False else None
+import json as j
+print("RESULT " + j.dumps(errs))
+"""
+
+
+def test_flash_decode_sharded_matches_ref():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env={"PYTHONPATH": "src",
+                                          "PATH": "/usr/bin:/bin"},
+                         cwd="/root/repo", timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
+    errs = json.loads(line.split(" ", 1)[1])
+    assert max(errs) < 3e-5, errs

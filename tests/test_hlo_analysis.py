@@ -1,0 +1,83 @@
+"""Trip-count-aware HLO analysis: validated against known-FLOPs fixtures."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, top_dots
+
+
+def _scan_matmul(n, size=128, nested=0):
+    def f(x, w):
+        def body(c, _):
+            if nested:
+                def inner(ci, __):
+                    return jnp.tanh(ci @ w), None
+                c, _ = jax.lax.scan(inner, c, None, length=nested)
+                return c, None
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=n)
+        return out
+    x = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    w = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    return jax.jit(f).lower(x, w).compile().as_text()
+
+
+@pytest.mark.parametrize("n", [1, 4, 16])
+def test_scan_flops_exact(n):
+    a = analyze(_scan_matmul(n))
+    assert a["dot_flops"] == 2 * 128**3 * n
+
+
+def test_nested_scan_flops_exact():
+    a = analyze(_scan_matmul(4, nested=3))
+    assert a["dot_flops"] == 2 * 128**3 * 12
+
+
+def test_xla_cost_analysis_undercounts_loops():
+    """The reason this module exists: XLA counts while bodies once."""
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        return jax.lax.scan(body, x, None, length=16)[0]
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    ca = c.cost_analysis()
+    xla_flops = ca.get("flops") if isinstance(ca, dict) else ca[0]["flops"]
+    assert xla_flops < 2 * 128**3 * 2          # ≈ single iteration
+    assert analyze(c.as_text())["dot_flops"] == 2 * 128**3 * 16
+
+
+def test_collective_bytes_counted():
+    from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+    devs = np.array(jax.devices()[:1]).reshape(1)
+    mesh = Mesh(devs, ("x",))
+
+    def f(a):
+        return jax.lax.with_sharding_constraint(
+            a.sum(0, keepdims=True), NamedSharding(mesh, P()))
+
+    # single-device: no collectives expected — the counter must return 0,
+    # not crash (the multi-device path is exercised by the dry-run sweep)
+    with mesh:
+        c = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    a = analyze(c.as_text())
+    assert a["collective_bytes"]["total"] >= 0
+
+
+def test_top_dots_ordering():
+    dots = top_dots(_scan_matmul(8), 5)
+    assert dots and dots[0]["flops"] == 2 * 128**3 * 8
+    assert all(a["flops"] >= b["flops"] for a, b in zip(dots, dots[1:]))
+
+
+def test_dus_traffic_counts_update_slice_only():
+    def f(cache, upd):
+        return jax.lax.dynamic_update_slice(cache, upd, (0, 0))
+    cache = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    upd = jax.ShapeDtypeStruct((1, 1024), jnp.float32)
+    c = jax.jit(f, donate_argnums=(0,)).lower(cache, upd).compile()
+    a = analyze(c.as_text())
+    # 2× update bytes (read + write), NOT the 4 MB target buffer
+    assert a["dus_traffic_bytes"] <= 4 * 2 * 1024 * 4
