@@ -233,6 +233,25 @@ def bench_lookup_throughput():
 
 
 # ---------------------------------------------------------------------------
+# Serving engine (batched lookups + tiered block cache) — BENCH_serve.json
+# ---------------------------------------------------------------------------
+SERVE_JSON_PATH = None     # set by main() via --serve-json
+
+
+def bench_serve():
+    try:
+        from benchmarks import serve_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import serve_bench
+    results = serve_bench.run_serve_bench()
+    if SERVE_JSON_PATH:
+        import json
+        with open(SERVE_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {SERVE_JSON_PATH}", flush=True)
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run
 # ---------------------------------------------------------------------------
 def bench_roofline():
@@ -262,12 +281,27 @@ BENCHES = [
     bench_fig20_topk,
     bench_sec22_heterogeneous,
     bench_lookup_throughput,
+    bench_serve,
     bench_roofline,
 ]
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    global SERVE_JSON_PATH
+    argv = list(sys.argv[1:])
+    for i, arg in enumerate(argv):   # emit BENCH_serve.json (perf trajectory)
+        if arg == "--serve-json" or arg.startswith("--serve-json="):
+            if "=" in arg:
+                SERVE_JSON_PATH = arg.split("=", 1)[1]
+                del argv[i]
+            elif i + 1 < len(argv) and argv[i + 1].endswith(".json"):
+                SERVE_JSON_PATH = argv[i + 1]      # space-separated PATH
+                del argv[i:i + 2]
+            else:
+                SERVE_JSON_PATH = "BENCH_serve.json"
+                del argv[i]
+            break
+    only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:
         if only and only not in bench.__name__:

@@ -1,0 +1,200 @@
+"""Serving-engine benchmark: queries/sec vs cache size vs storage tier.
+
+Exercises :class:`repro.serve.IndexService` against a paged index file:
+
+  * **cold vs warm** — the same batch served twice; the warm pass must
+    fetch strictly fewer bytes from storage and complete faster in modeled
+    seconds (Eq. 5 under the tier profile) on every tier (the ISSUE's
+    acceptance gate);
+  * **cache sweep** — hit rate and modeled time for a skewed (Zipf-ish)
+    query stream as the tiered cache grows;
+  * **throughput** — wall-clock queries/sec of the batched engine vs the
+    one-query-at-a-time ``lookup_serialized`` walk.
+
+Prints the repo's ``name,us_per_call,derived`` CSV; ``--json PATH`` also
+dumps a machine-readable ``BENCH_serve.json`` so later PRs have a perf
+trajectory to compare against (``benchmarks/run.py --serve-json`` wires
+this into the main harness).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.core import (KeyPositions, PROFILES, expected_latency, write_index)
+from repro.core.serialize import lookup_serialized
+from repro.serve.index_service import IndexService, demo_serving_design
+from repro.data.datasets import sosd_like
+
+N_KEYS = 200_000
+RECORD = 16
+PAGE = 4096
+TIERS = ("azure_nfs", "azure_ssd")
+CACHE_SIZES = (32 << 10, 256 << 10, 2 << 20)
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.2f},{derived}")
+
+
+build_serving_design = demo_serving_design
+
+
+_HOT_ORDER = None       # fixed random rank→key map, shared by all sweeps
+
+
+def _skewed_queries(keys: np.ndarray, n: int, rng) -> np.ndarray:
+    """Zipf-ish rank sampling — the hot-key regime block caches live for.
+    Ranks map through a fixed random permutation so the hot set is spread
+    across the key space (not the physically-clustered smallest keys)."""
+    global _HOT_ORDER
+    if _HOT_ORDER is None or len(_HOT_ORDER) != len(keys):
+        _HOT_ORDER = np.random.default_rng(123).permutation(len(keys))
+    ranks = (rng.zipf(1.2, n) - 1) % len(keys)
+    return keys[_HOT_ORDER[ranks]]
+
+
+def bench_cold_warm(path: str, tier: str, queries: np.ndarray) -> dict:
+    svc = IndexService(path, profile=tier, cache_bytes=(256 << 10, 2 << 20))
+    base = svc.stats.snapshot()
+    t0 = time.perf_counter()
+    svc.lookup(queries)
+    cold_wall = time.perf_counter() - t0
+    mid = svc.stats.snapshot()
+    t0 = time.perf_counter()
+    svc.lookup(queries)
+    warm_wall = time.perf_counter() - t0
+    end = svc.stats.snapshot()
+    svc.close()
+    cold = {k: mid[k] - base[k] for k in ("bytes_fetched", "modeled_seconds",
+                                          "preads")}
+    warm = {k: end[k] - mid[k] for k in ("bytes_fetched", "modeled_seconds",
+                                         "preads")}
+    return {
+        "tier": tier,
+        "cold": {**cold, "wall_s": cold_wall,
+                 "qps": len(queries) / max(cold_wall, 1e-9)},
+        "warm": {**warm, "wall_s": warm_wall,
+                 "qps": len(queries) / max(warm_wall, 1e-9)},
+        "hit_rate_final": end["hit_rate"],
+        "warm_fewer_bytes": warm["bytes_fetched"] < cold["bytes_fetched"],
+        "warm_faster_modeled":
+            warm["modeled_seconds"] < cold["modeled_seconds"],
+    }
+
+
+def bench_cache_sweep(path: str, tier: str, keys: np.ndarray, *,
+                      n_batches: int = 8, batch: int = 1024) -> list:
+    rng = np.random.default_rng(7)
+    stream = [_skewed_queries(keys, batch, rng) for _ in range(n_batches)]
+    rows = []
+    for cap in CACHE_SIZES:
+        svc = IndexService(path, profile=tier,
+                           cache_bytes=(cap // 4, cap - cap // 4))
+        base = svc.stats.snapshot()
+        t0 = time.perf_counter()
+        for qs in stream:
+            svc.lookup(qs)
+        wall = time.perf_counter() - t0
+        end = svc.stats.snapshot()
+        svc.close()
+        rows.append({
+            "tier": tier, "cache_bytes": cap,
+            "hit_rate": end["hit_rate"],
+            "bytes_fetched": end["bytes_fetched"] - base["bytes_fetched"],
+            "bytes_from_cache": end["bytes_from_cache"],
+            "modeled_seconds": end["modeled_seconds"] - base["modeled_seconds"],
+            "qps": n_batches * batch / max(wall, 1e-9),
+        })
+    return rows
+
+
+def bench_engine_vs_scalar(path: str, queries: np.ndarray) -> dict:
+    svc = IndexService(path, profile=None, cache_bytes=(2 << 20,))
+    svc.lookup(queries[:64])                      # touch pages / warm python
+    t0 = time.perf_counter()
+    svc.lookup(queries)
+    engine_wall = time.perf_counter() - t0
+    svc.close()
+    t0 = time.perf_counter()
+    lookup_serialized(path, None, queries)
+    scalar_wall = time.perf_counter() - t0
+    return {"engine_qps": len(queries) / max(engine_wall, 1e-9),
+            "scalar_qps": len(queries) / max(scalar_wall, 1e-9),
+            "speedup": scalar_wall / max(engine_wall, 1e-9)}
+
+
+def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
+    keys = sosd_like("gmm", n_keys)
+    D = KeyPositions.fixed_record(keys, RECORD)
+    design = build_serving_design(D)
+    path = os.path.join(tempfile.mkdtemp(prefix="serve_bench_"), "index.air")
+    write_index(path, design, page_bytes=PAGE)
+    rng = np.random.default_rng(0)
+    queries = rng.choice(D.keys, n_queries)
+
+    results = {"design": design.describe(), "page_bytes": PAGE,
+               "n_keys": int(D.n), "n_queries": int(n_queries),
+               "cold_warm": [], "cache_sweep": [],
+               "expected_latency_us": {
+                   t: expected_latency(design, PROFILES[t]) * 1e6
+                   for t in TIERS}}
+    for tier in TIERS:
+        cw = bench_cold_warm(path, tier, queries)
+        results["cold_warm"].append(cw)
+        emit(f"serve_cold_{tier}", cw["cold"]["modeled_seconds"] * 1e6,
+             f"bytes={cw['cold']['bytes_fetched']} preads={cw['cold']['preads']}"
+             f" qps={cw['cold']['qps']:.0f}")
+        emit(f"serve_warm_{tier}", cw["warm"]["modeled_seconds"] * 1e6,
+             f"bytes={cw['warm']['bytes_fetched']} preads={cw['warm']['preads']}"
+             f" qps={cw['warm']['qps']:.0f}"
+             f" fewer_bytes={cw['warm_fewer_bytes']}"
+             f" faster_modeled={cw['warm_faster_modeled']}")
+        for row in bench_cache_sweep(path, tier, D.keys):
+            results["cache_sweep"].append(row)
+            emit(f"serve_sweep_{tier}_{row['cache_bytes'] >> 10}KiB",
+                 row["modeled_seconds"] * 1e6,
+                 f"hit_rate={row['hit_rate']:.3f} qps={row['qps']:.0f} "
+                 f"bytes={row['bytes_fetched']}")
+    results["engine_vs_scalar"] = bench_engine_vs_scalar(path, queries)
+    ev = results["engine_vs_scalar"]
+    emit("serve_engine_vs_scalar", 0.0,
+         f"engine={ev['engine_qps']:.0f}q/s scalar={ev['scalar_qps']:.0f}q/s "
+         f"speedup={ev['speedup']:.1f}x")
+    ok = all(cw["warm_fewer_bytes"] and cw["warm_faster_modeled"]
+             for cw in results["cold_warm"])
+    results["acceptance_warm_beats_cold_all_tiers"] = ok
+    emit("serve_acceptance", 0.0,
+         f"warm_beats_cold_on_{len(results['cold_warm'])}_tiers={ok}")
+    os.unlink(path)
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump results as JSON (e.g. BENCH_serve.json)")
+    ap.add_argument("--n-keys", type=int, default=N_KEYS)
+    ap.add_argument("--n-queries", type=int, default=4096)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run_serve_bench(args.n_keys, args.n_queries)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
+    if not results["acceptance_warm_beats_cold_all_tiers"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,14 @@ Public surface:
   step_index_complexity / tau_hat   — τ̂ (Eq. 12)
   airtune / brute_force             — the search (Alg. 2)
   lookup_batch / verify_lookup      — batched Alg. 1
-  write_index / SerializedIndex     — on-disk format + partial-read lookup
+  descend_*_layer / coalesce_ranges — shared per-layer descent + read planner
+  write_index / SerializedIndex     — on-disk format (optionally paged) +
+                                      partial-read lookup
+  CachedProfile                     — T(Δ) through a block cache (serving)
   baselines                         — B-TREE / RMI / PGM / Data Calculator
+
+The batched serving engine on top of this surface lives in
+``repro.serve.index_service``.
 """
 from .airtune import TuneResult, airtune, brute_force
 from .builders import (LayerBuilder, build_eband, build_gband, build_gstep,
@@ -21,12 +27,16 @@ from .complexity import (S_STEP, step_index_complexity,
 from .keyset import KeyPositions
 from .latency import (IndexDesign, expected_latency, ideal_latency_with_index,
                       latency_breakdown, mean_read_volume)
+from .descent import (coalesce_ranges, covering_index, descend_band_layer,
+                      descend_step_layer)
 from .lookup import LookupResult, last_mile_search, lookup_batch, verify_lookup
 from .nodes import (BAND_NODE_BYTES, STEP_PIECE_BYTES, BandLayer, StepLayer,
                     mean_width, outline)
-from .serialize import SerializedIndex, load_index, write_index
-from .storage import (AffineProfile, AffineUniformProfile, MeasuredProfile,
-                      PROFILES, StorageProfile, profile_local_storage)
+from .serialize import (SerializedIndex, load_index, page_span,
+                        record_aligned_range, write_index)
+from .storage import (AffineProfile, AffineUniformProfile, CachedProfile,
+                      MeasuredProfile, PROFILES, StorageProfile,
+                      profile_local_storage)
 from . import baselines  # noqa: F401
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,77 @@
+"""Per-layer descent primitives shared by every lookup path (Alg. 1 line 3–5).
+
+One traversal step = find the covering piece/node for each query key, then
+evaluate its prediction.  The same two vectorized functions back
+
+  * the in-memory batched traversal (:func:`repro.core.lookup.lookup_batch`
+    via :class:`~repro.core.nodes.StepLayer` / ``BandLayer.predict``),
+  * the partial-read file traversal (:mod:`repro.core.serialize`), and
+  * the serving engine (:mod:`repro.serve.index_service`),
+
+so modeled, on-disk, and served predictions agree bit-for-bit (the band
+midpoint is evaluated with the identical float64 expression everywhere —
+the validity guarantee of Eq. 1 established at build time must survive
+every path).
+
+Also here: :func:`coalesce_ranges`, the batched-read planner — overlapping
+or near-adjacent byte ranges requested by one query batch are merged into
+maximal runs before any ``pread`` is issued.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def covering_index(sorted_keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Rightmost i with ``sorted_keys[i] <= q`` per query, clipped to range."""
+    idx = np.searchsorted(sorted_keys, queries, side="right") - 1
+    return np.clip(idx, 0, len(sorted_keys) - 1)
+
+
+def descend_step_layer(piece_keys: np.ndarray, pos_lo: np.ndarray,
+                       pos_hi: np.ndarray,
+                       queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One step-layer descent: piece ``i`` covering each query predicts
+    ``[pos_lo[i], pos_hi[i])``.  All arrays vectorized over queries."""
+    i = covering_index(piece_keys, queries)
+    return pos_lo[i], pos_hi[i]
+
+
+def descend_band_layer(node_keys: np.ndarray, x1: np.ndarray, y1: np.ndarray,
+                       m: np.ndarray, delta: np.ndarray,
+                       queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """One band-layer descent → unclamped integer ``[⌊mid−δ⌋, ⌈mid+δ⌉)``.
+
+    ``mid`` is evaluated in node-local float64 coordinates (``q − x1``) —
+    the exact expression used at fit time; callers apply their own clamps
+    (layer clamp bounds in memory, data extent at the end of a file walk).
+    """
+    j = covering_index(node_keys, queries)
+    dx = (queries - x1[j]).astype(np.float64)
+    mid = y1[j].astype(np.float64) + np.asarray(m)[j] * dx
+    d = np.asarray(delta)[j]
+    return np.floor(mid - d), np.ceil(mid + d)
+
+
+def coalesce_ranges(starts, ends, gap: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Merge byte ranges ``[starts[i], ends[i])`` that overlap or sit within
+    ``gap`` bytes of each other into maximal runs.
+
+    Returns ``(run_starts, run_ends)`` sorted ascending.  ``gap > 0`` trades
+    a few wasted bytes for fewer storage round-trips — profitable whenever
+    ``T(gap) − T(0) < ℓ`` on the target tier (one extra seek costs ℓ).
+    """
+    s = np.asarray(starts, dtype=np.int64)
+    e = np.asarray(ends, dtype=np.int64)
+    if len(s) == 0:
+        return s, e
+    order = np.argsort(s, kind="stable")
+    s, e = s[order], e[order]
+    reach = np.maximum.accumulate(e)              # furthest byte seen so far
+    new_run = np.empty(len(s), dtype=bool)
+    new_run[0] = True
+    new_run[1:] = s[1:] > reach[:-1] + gap
+    first = np.flatnonzero(new_run)
+    run_starts = s[first]
+    run_ends = np.maximum.reduceat(e, first)
+    return run_starts, run_ends

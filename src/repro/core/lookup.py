@@ -7,6 +7,10 @@ piece/node search plus a prediction, which is exactly what the Pallas
 kernel in ``repro.kernels.index_lookup`` implements on-device.  This module
 provides:
 
+  * :func:`descend_step_layer` / :func:`descend_band_layer` — one layer of
+    descent (re-exported from :mod:`repro.core.descent`); the single
+    implementation shared by every path below and by the serving engine
+    (:mod:`repro.serve.index_service`);
   * :func:`lookup_batch` — in-memory traversal returning predicted data
     ranges + the modeled per-query latency (Eq. 5 terms), used by tests,
     benchmarks, and the storage-model evaluation;
@@ -19,9 +23,9 @@ import dataclasses
 
 import numpy as np
 
-from .keyset import KeyPositions
+from .descent import (coalesce_ranges, descend_band_layer,  # noqa: F401
+                      descend_step_layer)
 from .latency import IndexDesign
-from .nodes import BandLayer, StepLayer
 from .storage import StorageProfile
 
 

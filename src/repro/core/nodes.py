@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from .descent import descend_band_layer, descend_step_layer
 from .keyset import KeyPositions, POS_DTYPE
 
 STEP_PIECE_BYTES = 16   # 8 B partition key + 8 B partition position
@@ -29,10 +30,6 @@ BAND_NODE_BYTES = 40    # x1, y1, x2, y2, delta  (5 × 8 B)
 LAYER_KINDS = ("step", "band")
 
 
-def _searchsorted_u64(sorted_keys: np.ndarray, queries: np.ndarray) -> np.ndarray:
-    """Index of the piece/node covering each query: rightmost i with keys[i] <= q."""
-    idx = np.searchsorted(sorted_keys, queries, side="right") - 1
-    return np.clip(idx, 0, len(sorted_keys) - 1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,8 +69,8 @@ class StepLayer:
 
     def predict(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
         """ŷ(x) for a batch of keys → (lo, hi) arrays."""
-        i = _searchsorted_u64(self.piece_keys, queries)
-        return self.piece_pos[i], self.piece_pos[i + 1]
+        return descend_step_layer(self.piece_keys, self.piece_pos[:-1],
+                                  self.piece_pos[1:], queries)
 
     def widths_at(self, queries: np.ndarray) -> np.ndarray:
         """Δ(x; Θ_l) = |ŷ(x)| per query (paper §4.3)."""
@@ -118,16 +115,9 @@ class BandLayer:
     def size_bytes(self) -> int:
         return int(BAND_NODE_BYTES * self.n_nodes)
 
-    def _mid(self, j: np.ndarray, queries: np.ndarray) -> np.ndarray:
-        # node-local coordinates keep float64 exact for realistic key spans
-        dx = (queries - self.x1[j]).astype(np.float64)
-        return self.y1[j].astype(np.float64) + self.m[j] * dx
-
     def predict(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        j = _searchsorted_u64(self.node_keys, queries)
-        mid = self._mid(j, queries)
-        lo = np.floor(mid - self.delta[j])
-        hi = np.ceil(mid + self.delta[j])
+        lo, hi = descend_band_layer(self.node_keys, self.x1, self.y1, self.m,
+                                    self.delta, queries)
         lo = np.clip(lo, self.clamp_lo, self.clamp_hi).astype(POS_DTYPE)
         hi = np.clip(hi, self.clamp_lo, self.clamp_hi).astype(POS_DTYPE)
         return lo, np.maximum(hi, lo + 1)

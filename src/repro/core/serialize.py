@@ -15,6 +15,19 @@ equal real read sizes:
 Readers fetch *ranges* (``pread``), never whole layers (except the root,
 per Alg. 1), align to record boundaries, and for step layers extend by one
 record to obtain the next piece's position (fence-pointer style).
+
+**Paged layout** (``write_index(..., page_bytes=N)``): every layer offset
+is aligned up to a multiple of ``page_bytes`` (gaps are file holes), so
+the file is a sequence of fixed-size pages and each page belongs to
+exactly one layer.  Pages are the caching unit of the serving engine's
+tiered block cache (:mod:`repro.serve.index_service`); the per-layer page
+table is recoverable from the meta via :func:`page_span`.  ``page_bytes=0``
+(the default) keeps the original densely-packed format — readers accept
+both.
+
+Layer descent math is shared with the in-memory path via
+:mod:`repro.core.descent`, so file lookups and ``lookup_batch`` agree
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ import os
 
 import numpy as np
 
+from .descent import descend_band_layer, descend_step_layer
 from .keyset import KeyPositions
 from .latency import IndexDesign
 from .nodes import BandLayer, StepLayer
@@ -47,11 +61,13 @@ class IndexFileMeta:
     layers: list          # bottom-up LayerMeta
     data_size: int        # extent of the data layer (for clamping)
     data_record: int      # fixed record size of the data layer (0 = varlen)
+    page_bytes: int = 0   # fixed page size (0 = densely packed, unpaged)
 
     def to_json(self) -> str:
         return json.dumps({
             "layers": [dataclasses.asdict(l) for l in self.layers],
             "data_size": self.data_size, "data_record": self.data_record,
+            "page_bytes": self.page_bytes,
         })
 
     @staticmethod
@@ -59,7 +75,32 @@ class IndexFileMeta:
         d = json.loads(s)
         return IndexFileMeta(
             layers=[LayerMeta(**l) for l in d["layers"]],
-            data_size=d["data_size"], data_record=d["data_record"])
+            data_size=d["data_size"], data_record=d["data_record"],
+            page_bytes=d.get("page_bytes", 0))
+
+
+RECORD_BYTES = {"step": 16, "band": 40}
+
+
+def page_span(offset: int, size: int, page_bytes: int) -> tuple[int, int]:
+    """File-global page ids [first, last) covering bytes [offset, offset+size)."""
+    return offset // page_bytes, -(-(offset + size) // page_bytes)
+
+
+def record_aligned_range(kind: str, lo, hi, layer_size: int):
+    """Byte range of a layer to fetch for predicted positions ``[lo, hi)``.
+
+    Vectorized over queries.  Aligns down/up to record boundaries; step
+    layers extend by one record so the *next* piece's position (the range
+    end, fence-pointer style) is always present.  Degenerate ``hi <= lo``
+    predictions still fetch one record.
+    """
+    rsz = RECORD_BYTES[kind]
+    a = (np.maximum(lo, 0) // rsz) * rsz
+    b = -(-np.asarray(hi) // rsz) * rsz + (rsz if kind == "step" else 0)
+    b = np.minimum(np.maximum(b, a + rsz), layer_size)
+    a = np.minimum(a, b - rsz)
+    return a.astype(np.int64), b.astype(np.int64)
 
 
 def _layer_bytes(layer) -> bytes:
@@ -77,7 +118,11 @@ def _layer_bytes(layer) -> bytes:
     return rec.tobytes()
 
 
-def write_index(path: str, design: IndexDesign, data_record: int = 0) -> IndexFileMeta:
+def write_index(path: str, design: IndexDesign, data_record: int = 0,
+                page_bytes: int = 0) -> IndexFileMeta:
+    """Serialize a design.  ``page_bytes > 0`` aligns every layer to page
+    boundaries (paged layout — the serving engine's cache unit); 0 keeps
+    the densely-packed layout."""
     metas = []
     blobs = []
     for layer in design.layers:
@@ -89,26 +134,31 @@ def write_index(path: str, design: IndexDesign, data_record: int = 0) -> IndexFi
                                end_pos=end_pos))
         blobs.append(b)
     meta = IndexFileMeta(layers=metas, data_size=design.data.size_bytes,
-                         data_record=data_record)
+                         data_record=data_record, page_bytes=page_bytes)
+
+    def _align(off: int) -> int:
+        return off if page_bytes == 0 else -(-off // page_bytes) * page_bytes
+
+    def _place(base: int) -> None:
+        off = base
+        for m, b in zip(metas, blobs):
+            m.offset = _align(off)
+            off = m.offset + len(b)
+
     hdr = meta.to_json().encode()
     base = 16 + len(hdr)
-    off = base
-    for m, b in zip(metas, blobs):
-        m.offset = off
-        off += len(b)
+    _place(base)
     hdr = meta.to_json().encode()  # re-encode with final offsets
     # json length changes offsets only if digit counts change; fix-point it
     while 16 + len(hdr) != base:
         base = 16 + len(hdr)
-        off = base
-        for m, b in zip(metas, blobs):
-            m.offset = off
-            off += len(b)
+        _place(base)
         hdr = meta.to_json().encode()
     with open(path, "wb") as f:
         f.write(np.asarray([MAGIC, len(hdr)], dtype="<u8").tobytes())
         f.write(hdr)
-        for b in blobs:
+        for m, b in zip(metas, blobs):
+            f.seek(m.offset)      # alignment gaps become file holes (zeros)
             f.write(b)
     return meta
 
@@ -151,22 +201,54 @@ def load_index(path: str, data: KeyPositions) -> IndexDesign:
 # ---------------------------------------------------------------------------
 # real partial-read lookup (Alg. 1 against the file)
 # ---------------------------------------------------------------------------
-def _predict_from_bytes(kind: str, raw: bytes, base_off: int, lo: int,
-                        query: int, end_pos: int) -> tuple[int, int]:
-    """Parse fetched records, find the covering one, predict (Alg.1 l.3–5)."""
+def predict_from_records(kind: str, raw: bytes, queries: np.ndarray,
+                         end_pos: int) -> tuple[np.ndarray, np.ndarray]:
+    """Parse fetched records and run one layer of descent for a query batch
+    (Alg. 1 l. 3–5) — the same :mod:`repro.core.descent` step as the
+    in-memory path.  ``end_pos`` caps the last fetched step record's range
+    (its fence pointer is the next record, absent at the layer end)."""
+    q = np.asarray(queries, dtype=np.uint64)
     if kind == "step":
         rec = np.frombuffer(raw, dtype=_STEP_DT)
-        i = int(np.searchsorted(rec["key"], np.uint64(query), side="right")) - 1
-        i = max(i, 0)
-        nxt = int(rec["pos"][i + 1]) if i + 1 < len(rec) else end_pos
-        return int(rec["pos"][i]), nxt
+        pos = rec["pos"].astype(np.int64)
+        pos_hi = np.append(pos[1:], np.int64(end_pos))
+        return descend_step_layer(rec["key"], pos, pos_hi, q)
     rec = np.frombuffer(raw, dtype=_BAND_DT)
-    i = int(np.searchsorted(rec["x1"], np.uint64(query), side="right")) - 1
-    i = max(i, 0)
-    mid = float(rec["y1"][i]) + float(rec["m"][i]) * float(
-        np.float64(np.uint64(query) - rec["x1"][i]))
-    d = float(rec["delta"][i])
-    return int(np.floor(mid - d)), int(np.ceil(mid + d))
+    return descend_band_layer(rec["x1"], rec["x1"], rec["y1"], rec["m"],
+                              rec["delta"], q)
+
+
+def record_keys(kind: str, raw: bytes) -> np.ndarray:
+    """Sorted partition keys of fetched records (covering-search domain)."""
+    return np.frombuffer(raw, dtype=_STEP_DT if kind == "step" else _BAND_DT)[
+        "key" if kind == "step" else "x1"]
+
+
+def window_misses(kind: str, raw: bytes, a: int, b: int, layer_size: int,
+                  queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-query check that a fetched window ``[a, b)`` contains the true
+    covering record.
+
+    A *band* upper layer predicts a range for the exact query key, but its
+    containment guarantee (Eq. 1) is established at the outline's boundary
+    keys — for keys strictly between boundaries the window can land next to
+    the covering record.  (Step upper layers are piecewise-constant, so
+    their windows never miss.)  Misses are detectable without extra I/O:
+
+      * left miss  — every fetched key > q and bytes exist before the
+        window: the covering record is earlier;
+      * right miss — every guard fails the other way (last fetched key ≤ q)
+        and bytes exist after: the covering record (or its fence pointer)
+        may be later.
+
+    Callers extend the window in the indicated direction and re-check
+    (galloping — doubles per round, terminates at the layer bounds).
+    """
+    keys = record_keys(kind, raw)
+    q = np.asarray(queries, dtype=np.uint64)
+    left = (keys[0] > q) & (a > 0)
+    right = (keys[-1] <= q) & (b < layer_size)
+    return left, right
 
 
 class SerializedIndex:
@@ -191,20 +273,27 @@ class SerializedIndex:
         metas = self.meta.layers
         if not metas:
             return 0, self.meta.data_size
-        lo, hi = _predict_from_bytes(
-            metas[-1].kind, self._root_raw, 0, 0, query, metas[-1].end_pos)
+        q1 = np.asarray([query], dtype=np.uint64)
+        lo, hi = predict_from_records(metas[-1].kind, self._root_raw, q1,
+                                      metas[-1].end_pos)
         for lm in reversed(metas[:-1]):
-            rsz = 16 if lm.kind == "step" else 40
-            a = (max(lo, 0) // rsz) * rsz
-            b = min(-(-hi // rsz) * rsz + (rsz if lm.kind == "step" else 0),
-                    lm.size)
-            raw = os.pread(self.fd, b - a, lm.offset + a)
-            self.bytes_read += b - a
-            self.reads += 1
-            lo, hi = _predict_from_bytes(lm.kind, raw, lm.offset, a, query,
-                                         lm.end_pos)
-        lo = max(lo, 0)
-        hi = min(max(hi, lo + 1), self.meta.data_size)
+            a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
+            a, b = int(a[0]), int(b[0])
+            while True:
+                raw = os.pread(self.fd, b - a, lm.offset + a)
+                self.bytes_read += b - a
+                self.reads += 1
+                left, right = window_misses(lm.kind, raw, a, b, lm.size, q1)
+                if not (left[0] or right[0]):
+                    break
+                w = b - a        # gallop toward the covering record
+                if left[0]:
+                    a = max(a - w, 0)
+                else:
+                    b = min(b + w, lm.size)
+            lo, hi = predict_from_records(lm.kind, raw, q1, lm.end_pos)
+        lo = max(int(lo[0]), 0)
+        hi = min(max(int(hi[0]), lo + 1), self.meta.data_size)
         return lo, hi
 
 

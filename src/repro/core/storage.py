@@ -104,6 +104,35 @@ class MeasuredProfile(StorageProfile):
         return AffineProfile(latency=ell, bandwidth=bw, name=f"{self.name}-affine")
 
 
+@dataclasses.dataclass(frozen=True)
+class CachedProfile(StorageProfile):
+    """``T(Δ)`` seen *through* a block cache in front of a backing tier.
+
+    A fraction ``hit_rate`` of reads is served by the cache tier (DRAM by
+    default), the rest by the backing tier:
+
+        ``T(Δ) = h · T_cache(Δ) + (1 − h) · T_backing(Δ)``
+
+    Monotone whenever both component profiles are, so AirTune can tune an
+    index *for* a cached deployment unchanged — with a hot cache the
+    effective tier is fat-and-fast and the optimum shifts toward fewer,
+    larger layers (paper Fig. 1 intuition).  The serving engine's observed
+    hit rate (``IndexService.cached_profile``) closes the loop: serve →
+    measure → re-tune.
+    """
+
+    backing: StorageProfile
+    cache: StorageProfile | None = None   # default: host-DRAM constants
+    hit_rate: float = 0.0
+    name: str = "cached"
+
+    def read_time(self, delta):
+        h = min(max(float(self.hit_rate), 0.0), 1.0)
+        cache = self.cache or AffineProfile(150e-9, 50e9, name="host_dram")
+        return (h * np.asarray(cache(delta), dtype=np.float64)
+                + (1.0 - h) * np.asarray(self.backing(delta), dtype=np.float64))
+
+
 def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
                           file_bytes: int = 1 << 26, rng=None) -> MeasuredProfile:
     """Measure ``T(Δ)`` of the filesystem hosting ``path`` (paper §3.2).

@@ -1,0 +1,138 @@
+"""Sharding rules shared by the models, the serving path, and the dry-run
+launcher.
+
+One convention everywhere (mesh axes ``("data", "model")`` per pod, plus a
+leading ``"pod"`` axis multi-pod):
+
+  * parameters    — tensor-parallel over ``"model"``: the largest trailing
+    dim divisible by the axis size is sharded; ZeRO-1 optimizer moments are
+    additionally sharded over the data-parallel axes;
+  * batches       — leading (batch) dim over the data-parallel axes;
+  * decode state  — KV caches / recurrent states are ``(L, B, …)``; the
+    batch dim (axis 1) is sharded over the data-parallel axes;
+  * activations   — the residual stream is constrained to batch-sharded via
+    :func:`constrain_residual`, a no-op until the launcher installs a mesh
+    with :func:`set_activation_mesh` (models stay importable and testable
+    on a single device).
+
+All helpers degrade to fully-replicated specs when a dim does not divide
+the axis size, so the same rules lower on a 1×1 test mesh and the 16×16
+production mesh.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVATION_MESH: Mesh | None = None
+
+
+def set_activation_mesh(mesh: Mesh | None) -> None:
+    """Install the mesh used by :func:`constrain_residual` (None to clear)."""
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def _data_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axes_size(mesh: Mesh, axes: tuple) -> int:
+    return math.prod(mesh.shape[a] for a in axes) if axes else 1
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain_residual(x):
+    """Constrain a residual-stream activation (B, …) to batch sharding.
+
+    Identity when no mesh is installed, the mesh is trivial, or the batch
+    dim does not divide the data-parallel extent (e.g. unit-batch decode).
+    """
+    mesh = _ACTIVATION_MESH
+    if mesh is None or mesh.size == 1 or x.ndim < 1:
+        return x
+    daxes = _data_axes(mesh)
+    dp = _axes_size(mesh, daxes)
+    if dp <= 1 or x.shape[0] % dp != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = daxes if len(daxes) > 1 else daxes[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _shard_one_dim(shape, axis_n, *, reverse=True, taken=()):
+    """Pick the dim to shard over an axis of size ``axis_n`` (or None)."""
+    if axis_n <= 1:
+        return None
+    dims = range(len(shape) - 1, -1, -1) if reverse else range(len(shape))
+    for i in dims:
+        if i not in taken and shape[i] % axis_n == 0 and shape[i] >= axis_n:
+            return i
+    return None
+
+
+def param_shardings(cfg, specs, mesh: Mesh, *, zero: bool = False):
+    """NamedSharding tree for a param (or moment) spec tree.
+
+    Tensor-parallel over ``"model"`` on the largest-index divisible dim
+    (skipping the leading layer-stack dim of scanned block params); with
+    ``zero=True`` (ZeRO-1 moments) an additional dim is sharded over the
+    data-parallel axes.
+    """
+    model_n = mesh.shape.get("model", 1)
+    daxes = _data_axes(mesh)
+    dp = _axes_size(mesh, daxes)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        # never shard the scanned layer-stack dim (dim 0 of >=2D block
+        # params equals n_layers); trailing dims are the matmul dims
+        mi = _shard_one_dim(s.shape, model_n,
+                            taken=(0,) if len(s.shape) > 2 else ())
+        if mi is not None:
+            spec[mi] = "model"
+        if zero and dp > 1:
+            zi = _shard_one_dim(s.shape, dp, reverse=False,
+                                taken=() if mi is None else (mi,))
+            if zi is not None:
+                spec[zi] = daxes if len(daxes) > 1 else daxes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+def batch_sharding(mesh: Mesh, specs):
+    """Shard the leading (batch) dim of every input leaf over data axes."""
+    daxes = _data_axes(mesh)
+    dp = _axes_size(mesh, daxes)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if s.shape and dp > 1 and s.shape[0] % dp == 0:
+            spec[0] = daxes if len(daxes) > 1 else daxes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+def decode_state_shardings(cfg, specs, mesh: Mesh):
+    """Decode-state leaves are (L, B, …): shard batch (axis 1) over data
+    axes and, when divisible, the head dim (axis 2) over ``"model"``."""
+    model_n = mesh.shape.get("model", 1)
+    daxes = _data_axes(mesh)
+    dp = _axes_size(mesh, daxes)
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if len(s.shape) > 1 and dp > 1 and s.shape[1] % dp == 0:
+            spec[1] = daxes if len(daxes) > 1 else daxes[0]
+        if len(s.shape) > 2 and model_n > 1 and s.shape[2] % model_n == 0:
+            spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)

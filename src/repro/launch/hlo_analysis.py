@@ -86,7 +86,17 @@ class Instruction:
                 if depth == 0:
                     end = i
                     break
-            self.operands = re.findall(r"%?([\w.\-]+)", inner[:end])
+            group = inner[:end]
+            if "%" in group:
+                # modern printers emit typed operands:
+                #   dot(f32[128,128]{1,0} %lhs.4, f32[128,128]{1,0} %rhs.8)
+                # — the references are exactly the %-prefixed tokens
+                self.operands = re.findall(r"%([\w.\-]+)", group)
+            else:
+                # untyped operand lists: every bare token is a reference
+                self.operands = [t for t in re.findall(r"([\w.\-]+)", group)
+                                 if not re.fullmatch(r"[\d.\-]+", t)
+                                 and t not in _DTYPE_BYTES]
 
 
 def parse_computations(hlo: str) -> dict:

@@ -1,1 +1,5 @@
+from .index_service import IndexService, ServeStats, TieredBlockCache
 from .serve_step import make_prefill_step, make_decode_step
+
+__all__ = ["IndexService", "ServeStats", "TieredBlockCache",
+           "make_prefill_step", "make_decode_step"]

@@ -1,0 +1,419 @@
+"""Batched index-serving engine with a tiered block cache (ROADMAP: the
+production-serving path).
+
+``lookup_serialized`` walks the file once per query; under heavy traffic
+that wastes exactly the structure AirIndex tunes for — hot upper-layer
+pages are re-fetched from storage again and again, and per-query ``pread``s
+of overlapping ranges each pay the tier's latency ℓ.  :class:`IndexService`
+serves *batches* against one serialized index through three mechanisms:
+
+  1. **page cache** — the file is read in fixed-size pages (the paged
+     layout of :mod:`repro.core.serialize`); pages pass through a tiered
+     LRU (:class:`TieredBlockCache`, e.g. a small L1 over a larger L2), so
+     a skewed or repeated workload stops touching storage at all;
+  2. **read coalescing** — all pages a batch misses are merged into maximal
+     runs (:func:`repro.core.descent.coalesce_ranges`) before any
+     ``pread`` is issued: one seek per run, not per query;
+  3. **resident layers** — the top ``resident_layers`` index layers are
+     pinned in memory at open (the root is always read in full, per
+     Alg. 1) and descended fully vectorized; with ``use_device=True`` the
+     descent of resident layers routes through the Pallas
+     ``index_lookup`` kernels when keys/positions fit int32, with the
+     numpy :mod:`repro.core.descent` path as fallback.
+
+Per-layer descent is the same :mod:`repro.core.descent` step used by
+``lookup_batch`` and ``SerializedIndex``, so all three paths agree
+bit-for-bit.  Observed hit rates feed back into tuning via
+:meth:`IndexService.cached_profile` (→ :class:`repro.core.CachedProfile`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core.descent import coalesce_ranges
+from repro.core.serialize import (_BAND_DT, _STEP_DT, page_span,
+                                  predict_from_records, read_meta,
+                                  record_aligned_range, window_misses)
+from repro.core.storage import CachedProfile, PROFILES, StorageProfile
+
+DEFAULT_PAGE_BYTES = 4096
+
+
+def demo_serving_design(D):
+    """Canonical 3-layer stack (step <- band <- step root) used by the
+    serving benchmark, example, and tests: two disk layers below a
+    resident root, so the block cache actually has something to do.
+    (AirTune picks 1-layer designs at container scale — optimal for
+    latency, useless for exercising a cache.)"""
+    from repro.core import IndexDesign
+    from repro.core.builders import build_gband, build_gstep
+    from repro.core.nodes import outline
+    l1 = build_gstep(D, 8, 2**10)
+    o1 = outline(l1, D)
+    l2 = build_gband(o1, 2**9)
+    l3 = build_gstep(outline(l2, o1), 8, 2**7)
+    return IndexDesign(layers=(l1, l2, l3), data=D)
+
+
+# ---------------------------------------------------------------------------
+# tiered LRU block cache
+# ---------------------------------------------------------------------------
+class TieredBlockCache:
+    """LRU page cache with N capacity tiers (tier 0 = hottest).
+
+    ``get`` probes tiers in order and promotes hits to tier 0; inserts
+    cascade evictions downward (tier i's LRU page demotes to tier i+1, the
+    last tier evicts to nothing) — i.e. an exclusive multi-level cache, the
+    software mirror of a DRAM-over-SSD-over-object-store hierarchy.
+    """
+
+    def __init__(self, capacities_bytes, page_bytes: int):
+        caps = tuple(int(c) for c in capacities_bytes)
+        assert caps and all(c >= 0 for c in caps), caps
+        self.page_bytes = int(page_bytes)
+        self.cap_pages = [c // self.page_bytes for c in caps]
+        self.tiers = [OrderedDict() for _ in caps]
+        self.hits = [0] * len(caps)
+        self.misses = 0
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    def __contains__(self, page_id) -> bool:
+        return any(page_id in t for t in self.tiers)
+
+    def get(self, page_id):
+        """→ page bytes (promoting to tier 0) or None on a full miss."""
+        for ti, tier in enumerate(self.tiers):
+            if page_id in tier:
+                data = tier.pop(page_id)
+                self.hits[ti] += 1
+                self._insert(page_id, data)
+                return data
+        self.misses += 1
+        return None
+
+    def put(self, page_id, data) -> None:
+        for tier in self.tiers:
+            tier.pop(page_id, None)
+        self._insert(page_id, data)
+
+    def _insert(self, page_id, data) -> None:
+        ti = 0
+        while ti < len(self.tiers):
+            tier = self.tiers[ti]
+            tier[page_id] = data
+            tier.move_to_end(page_id)
+            if len(tier) <= self.cap_pages[ti]:
+                return
+            page_id, data = tier.popitem(last=False)   # demote the LRU page
+            ti += 1
+
+    def stats(self) -> dict:
+        return {"hits_per_tier": list(self.hits), "hits": sum(self.hits),
+                "misses": self.misses,
+                "pages_resident": [len(t) for t in self.tiers]}
+
+
+# ---------------------------------------------------------------------------
+# serving statistics
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ServeStats:
+    queries: int = 0
+    batches: int = 0
+    preads: int = 0             # coalesced reads actually issued
+    ranges_requested: int = 0   # per-query per-layer ranges before merging
+    pages_fetched: int = 0
+    pages_hit: int = 0
+    bytes_fetched: int = 0      # from storage, excluding open-time reads
+    bytes_from_cache: int = 0
+    open_bytes: int = 0         # root + resident layers read at open
+    retries: int = 0            # window extensions (band inter-key misses)
+    device_batches: int = 0
+    modeled_seconds: float = 0.0   # Σ T(Δ) under the configured profile
+
+    @property
+    def hit_rate(self) -> float:
+        touched = self.pages_hit + self.pages_fetched
+        return self.pages_hit / touched if touched else 0.0
+
+    @property
+    def bytes_saved(self) -> int:
+        return self.bytes_from_cache
+
+    def snapshot(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+class IndexService:
+    """Serve batched lookups against a serialized index file.
+
+    Parameters
+    ----------
+    path:            index file written by :func:`repro.core.write_index`.
+    profile:         storage tier of the file (name in ``PROFILES`` or a
+                     :class:`StorageProfile`); drives ``modeled_seconds``.
+    cache_bytes:     per-tier capacities of the block cache, hottest first.
+    cache_profile:   tier the cache lives in (modeled hit cost; host DRAM).
+    page_bytes:      cache unit; defaults to the file's paged layout, or
+                     ``DEFAULT_PAGE_BYTES`` for densely-packed files.
+    resident_layers: top layers pinned in memory at open (≥ 1: the root is
+                     always read in full, per Alg. 1).
+    use_device:      descend resident layers on the Pallas index-lookup
+                     kernels when keys/positions fit int32.
+    coalesce_gap:    merge missing-page runs separated by ≤ this many bytes
+                     (profitable when ``T(gap) − T(0) < ℓ``).
+    """
+
+    def __init__(self, path: str, *, profile="azure_ssd",
+                 cache_bytes=(1 << 20,), cache_profile="host_dram",
+                 page_bytes: int | None = None, resident_layers: int = 1,
+                 use_device: bool = False, interpret: bool = True,
+                 coalesce_gap: int = 0):
+        self.fd = os.open(path, os.O_RDONLY)
+        self.meta = read_meta(self.fd)
+        self.profile = PROFILES[profile] if isinstance(profile, str) else profile
+        self.cache_profile = (PROFILES[cache_profile]
+                              if isinstance(cache_profile, str) else cache_profile)
+        self.page_bytes = int(self.meta.page_bytes or page_bytes
+                              or DEFAULT_PAGE_BYTES)
+        self.cache = TieredBlockCache(cache_bytes, self.page_bytes)
+        self.coalesce_gap = int(coalesce_gap)
+        self.interpret = interpret
+        self.stats = ServeStats()
+
+        L = len(self.meta.layers)
+        n_res = min(max(int(resident_layers), 1), L) if L else 0
+        self._resident: dict[int, dict] = {}
+        for li in range(L - n_res, L):
+            lm = self.meta.layers[li]
+            raw = os.pread(self.fd, lm.size, lm.offset)
+            self._resident[li] = self._parse_layer(lm, raw)
+            self.stats.open_bytes += lm.size
+            if self.profile is not None:
+                self.stats.modeled_seconds += float(self.profile(lm.size))
+        self._device: dict[int, dict] = {}
+        self.device_active = False
+        if use_device:
+            self._device = self._to_device(self._resident)
+            self.device_active = bool(self._device)
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        if self.fd is not None:
+            os.close(self.fd)
+            self.fd = None
+
+    def __enter__(self) -> "IndexService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- layer materialization ---------------------------------------------
+    @staticmethod
+    def _parse_layer(lm, raw: bytes) -> dict:
+        if lm.kind == "step":
+            rec = np.frombuffer(raw, dtype=_STEP_DT)
+            pos = rec["pos"].astype(np.int64)
+            return {"kind": "step", "keys": rec["key"].copy(), "pos_lo": pos,
+                    "pos_hi": np.append(pos[1:], np.int64(lm.end_pos))}
+        rec = np.frombuffer(raw, dtype=_BAND_DT)
+        return {"kind": "band", "x1": rec["x1"].copy(),
+                "y1": rec["y1"].astype(np.float64), "m": rec["m"].copy(),
+                "delta": rec["delta"].copy()}
+
+    def _to_device(self, resident: dict) -> dict:
+        """Kernel-ready int32/f32 arrays for resident layers; {} when jax is
+        unavailable or any layer overflows int32 (numpy path then serves)."""
+        try:
+            import jax.numpy as jnp  # noqa: F401  (gated: CPU-only containers)
+        except Exception:
+            return {}
+        dev = {}
+        for li, lay in resident.items():
+            if lay["kind"] == "step":
+                if (int(lay["keys"].max(initial=0)) >= 2**31
+                        or int(lay["pos_hi"].max(initial=0)) >= 2**31):
+                    return {}
+                dev[li] = {
+                    "kind": "step",
+                    "piece_keys": jnp.asarray(lay["keys"], jnp.int32),
+                    "piece_pos": jnp.asarray(
+                        np.append(lay["pos_lo"], lay["pos_hi"][-1]), jnp.int32),
+                }
+            else:
+                if int(lay["x1"].max(initial=0)) >= 2**31:
+                    return {}
+                # widen δ by the worst-case f32 rounding (same slack as
+                # kernels.index_lookup.ops.device_arrays_from_design)
+                slack = (8.0 + np.abs(lay["y1"]) * 4e-6
+                         + np.abs(lay["m"]) * lay["x1"].astype(np.float64) * 4e-6)
+                dev[li] = {
+                    "kind": "band",
+                    "node_keys": jnp.asarray(lay["x1"], jnp.int32),
+                    "x1": jnp.asarray(lay["x1"], jnp.float32),
+                    "y1": jnp.asarray(lay["y1"], jnp.float32),
+                    "m": jnp.asarray(lay["m"], jnp.float32),
+                    "delta": jnp.asarray(lay["delta"] + slack, jnp.float32),
+                }
+        return dev
+
+    # -- descent ------------------------------------------------------------
+    def _descend_resident(self, li: int, q: np.ndarray):
+        if self.device_active and li in self._device \
+                and int(q.max(initial=0)) < 2**31:
+            from repro.kernels.index_lookup import ops
+            import jax.numpy as jnp
+            lay = self._device[li]
+            qd = jnp.asarray(q, jnp.int32)
+            if lay["kind"] == "step":
+                lo, hi = ops.lookup_step_layer(qd, lay["piece_keys"],
+                                               lay["piece_pos"],
+                                               interpret=self.interpret)
+            else:
+                lo, hi = ops.lookup_band_layer(qd, lay["node_keys"],
+                                               lay["x1"], lay["y1"], lay["m"],
+                                               lay["delta"],
+                                               interpret=self.interpret)
+            self.stats.device_batches += 1
+            return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
+        lay = self._resident[li]
+        if lay["kind"] == "step":
+            from repro.core.descent import descend_step_layer
+            return descend_step_layer(lay["keys"], lay["pos_lo"],
+                                      lay["pos_hi"], q)
+        from repro.core.descent import descend_band_layer
+        return descend_band_layer(lay["x1"], lay["x1"], lay["y1"], lay["m"],
+                                  lay["delta"], q)
+
+    def _ensure_pages(self, page_ids: list) -> dict:
+        """All requested pages → bytes, via cache then coalesced preads."""
+        P = self.page_bytes
+        pages, missing = {}, []
+        for pid in page_ids:
+            data = self.cache.get(pid)
+            if data is None:
+                missing.append(pid)
+            else:
+                pages[pid] = data
+                self.stats.pages_hit += 1
+                self.stats.bytes_from_cache += len(data)
+        if self.cache_profile is not None and pages:
+            self.stats.modeled_seconds += len(pages) * float(
+                self.cache_profile(P))
+        if not missing:
+            return pages
+        ms = np.asarray(missing, dtype=np.int64) * P
+        run_s, run_e = coalesce_ranges(ms, ms + P, gap=self.coalesce_gap)
+        for rs, re_ in zip(run_s, run_e):
+            raw = os.pread(self.fd, int(re_ - rs), int(rs))
+            self.stats.preads += 1
+            self.stats.bytes_fetched += len(raw)
+            if self.profile is not None:
+                self.stats.modeled_seconds += float(self.profile(re_ - rs))
+            for k in range(-(-len(raw) // P)):
+                pid = int(rs) // P + k
+                chunk = raw[k * P:(k + 1) * P]
+                pages[pid] = chunk
+                self.cache.put(pid, chunk)
+                self.stats.pages_fetched += 1
+        return pages
+
+    def _descend_disk(self, lm, lo, hi, q: np.ndarray):
+        P = self.page_bytes
+        a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
+        a, b = a.copy(), b.copy()       # per-query windows, grown on misses
+        self.stats.ranges_requested += len(q)
+        out_lo = np.empty(len(q), dtype=np.float64)
+        out_hi = np.empty(len(q), dtype=np.float64)
+        pending = np.arange(len(q))
+        while len(pending):
+            ab, inv = np.unique(np.stack([a[pending], b[pending]], axis=1),
+                                axis=0, return_inverse=True)
+            inv = inv.reshape(-1)   # numpy 2.1 briefly returned (n, 1) here
+            fa, fb = lm.offset + ab[:, 0], lm.offset + ab[:, 1]
+            pa, pb = page_span(fa, fb - fa, P)      # elementwise over ranges
+            need: set = set()
+            for x, y in zip(pa.tolist(), pb.tolist()):
+                need.update(range(x, y))
+            pages = self._ensure_pages(sorted(need))
+            still = []
+            for ui in range(len(ab)):
+                base = int(pa[ui]) * P
+                buf = b"".join(pages[p]
+                               for p in range(int(pa[ui]), int(pb[ui])))
+                raw = buf[int(fa[ui]) - base:int(fb[ui]) - base]
+                sub = pending[inv == ui]
+                left, right = window_misses(lm.kind, raw, int(ab[ui, 0]),
+                                            int(ab[ui, 1]), lm.size, q[sub])
+                ok = sub[~(left | right)]
+                if len(ok):
+                    l_, h_ = predict_from_records(lm.kind, raw, q[ok],
+                                                  lm.end_pos)
+                    out_lo[ok] = l_
+                    out_hi[ok] = h_
+                # gallop the missed windows toward the covering record
+                # (same rule as SerializedIndex.lookup — parity preserved)
+                w = int(ab[ui, 1] - ab[ui, 0])
+                lmiss, rmiss = sub[left], sub[right & ~left]
+                a[lmiss] = max(int(ab[ui, 0]) - w, 0)
+                b[rmiss] = min(int(ab[ui, 1]) + w, lm.size)
+                still.extend([lmiss, rmiss])
+                self.stats.retries += len(lmiss) + len(rmiss)
+            pending = (np.concatenate(still) if still
+                       else np.empty(0, dtype=np.int64))
+        return out_lo, out_hi
+
+    # -- public API ---------------------------------------------------------
+    def lookup(self, queries) -> np.ndarray:
+        """Batched Alg. 1 → (q, 2) int64 array of data-layer byte ranges.
+
+        On the numpy path the results are bit-identical to
+        ``lookup_serialized`` on the same file — the cache and coalescing
+        only change *how* bytes are obtained.  The device path widens
+        resident *band* layers by the f32-rounding slack (ranges stay
+        valid but may be strictly wider).
+        """
+        q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
+        self.stats.queries += len(q)
+        self.stats.batches += 1
+        metas = self.meta.layers
+        if len(q) == 0:
+            return np.empty((0, 2), dtype=np.int64)
+        if not metas:
+            out = np.empty((len(q), 2), dtype=np.int64)
+            out[:, 0] = 0
+            out[:, 1] = self.meta.data_size
+            return out
+        lo = hi = None
+        for li in range(len(metas) - 1, -1, -1):
+            if li in self._resident:
+                lo, hi = self._descend_resident(li, q)
+            else:
+                lo, hi = self._descend_disk(metas[li], lo, hi, q)
+        lo = np.maximum(np.asarray(lo, dtype=np.int64), 0)
+        hi = np.minimum(np.maximum(np.asarray(hi, dtype=np.int64), lo + 1),
+                        self.meta.data_size)
+        return np.stack([lo, hi], axis=1)
+
+    def cached_profile(self, backing: StorageProfile | None = None) -> CachedProfile:
+        """Effective ``T(Δ)`` at the observed hit rate — hand this back to
+        ``airtune`` to re-tune the index *for* this cache deployment."""
+        backing = backing or self.profile
+        if backing is None:
+            raise ValueError("no backing profile: the service was opened "
+                             "with profile=None — pass one explicitly")
+        return CachedProfile(backing=backing, cache=self.cache_profile,
+                             hit_rate=self.stats.hit_rate)

@@ -1,6 +1,7 @@
 """Unit + property tests: layer builders and the Eq.(1) validity invariant."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="optional test dep (pip install -e .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (KeyPositions, build_eband, build_gband, build_gstep,

@@ -4,10 +4,13 @@ Runs in a subprocess with 8 forced host devices so the main test session
 keeps its single-device view (conftest contract).
 """
 import json
+import os
 import subprocess
 import sys
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r"""
 import os
@@ -41,8 +44,9 @@ print("RESULT " + j.dumps(errs))
 def test_flash_decode_sharded_matches_ref():
     out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, env={"PYTHONPATH": "src",
-                                          "PATH": "/usr/bin:/bin"},
-                         cwd="/root/repo", timeout=600)
+                                          "PATH": "/usr/bin:/bin",
+                                          "JAX_PLATFORMS": "cpu"},
+                         cwd=REPO_ROOT, timeout=600)
     assert out.returncode == 0, out.stderr[-2000:]
     line = [l for l in out.stdout.splitlines() if l.startswith("RESULT")][0]
     errs = json.loads(line.split(" ", 1)[1])

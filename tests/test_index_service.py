@@ -1,0 +1,228 @@
+"""Serving engine: parity with both lookup paths, cache behavior, read
+coalescing, tiered LRU mechanics, CachedProfile, paged serialization."""
+import numpy as np
+import pytest
+
+from repro.core import (CachedProfile, IndexDesign, KeyPositions, PROFILES,
+                        airtune, build_gstep, coalesce_ranges, lookup_batch,
+                        make_builders, outline, page_span, write_index)
+from repro.core.serialize import lookup_serialized
+from repro.serve.index_service import (IndexService, TieredBlockCache,
+                                       demo_serving_design)
+
+from conftest import make_keys
+
+# step <- band <- step root: exercises the disk path AND the band
+# inter-key window-miss galloping
+_band_stack = demo_serving_design
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    keys = make_keys("books", 120_000, seed=3)
+    D = KeyPositions.fixed_record(keys, 16)
+    design = _band_stack(D)
+    path = str(tmp_path_factory.mktemp("svc") / "index.air")
+    write_index(path, design, page_bytes=1024)
+    rng = np.random.default_rng(0)
+    qs = rng.choice(D.keys, 600)
+    return D, design, path, qs
+
+
+# ---------------------------------------------------------------------------
+# parity: engine == file walk == in-memory batch, and all are valid
+# ---------------------------------------------------------------------------
+def test_engine_matches_file_and_memory(served):
+    D, design, path, qs = served
+    want_file = lookup_serialized(path, None, qs)
+    mem = lookup_batch(design, qs)
+    with IndexService(path, profile="azure_ssd",
+                      cache_bytes=(64 << 10, 512 << 10)) as svc:
+        got = svc.lookup(qs)
+        assert np.array_equal(got, want_file)
+        assert np.array_equal(got[:, 0], mem.lo)
+        assert np.array_equal(got[:, 1], mem.hi)
+        idx = np.searchsorted(D.keys, qs)
+        assert np.all((got[:, 0] <= D.lo[idx]) & (got[:, 1] >= D.hi[idx])), \
+            "engine violates Eq. (1)"
+        # the band stack forces inter-key window misses; galloping must
+        # have kicked in (and still produced exact parity above)
+        assert svc.stats.retries > 0
+
+
+def test_engine_matches_on_airtuned_design(tmp_path):
+    keys = make_keys("gmm", 30_000, seed=11)
+    D = KeyPositions.fixed_record(keys, 16)
+    res = airtune(D, PROFILES["azure_ssd"],
+                  make_builders(lam_low=2**8, lam_high=2**16, base=4.0), k=3)
+    path = str(tmp_path / "index.air")
+    write_index(path, res.design, page_bytes=1024)
+    qs = np.random.default_rng(1).choice(D.keys, 400)
+    with IndexService(path, profile="azure_ssd") as svc:
+        got = svc.lookup(qs)
+    assert np.array_equal(got, lookup_serialized(path, None, qs))
+    mem = lookup_batch(res.design, qs)
+    assert np.array_equal(got[:, 0], mem.lo)
+    assert np.array_equal(got[:, 1], mem.hi)
+
+
+def test_engine_serves_unpaged_legacy_files(served):
+    D, design, path_unused, qs = served
+    import tempfile, os
+    path = os.path.join(tempfile.mkdtemp(), "legacy.air")
+    write_index(path, design)                      # page_bytes=0 layout
+    with IndexService(path, profile="azure_ssd") as svc:
+        assert svc.meta.page_bytes == 0 and svc.page_bytes > 0
+        got = svc.lookup(qs)
+    assert np.array_equal(got, lookup_serialized(path, None, qs))
+
+
+# ---------------------------------------------------------------------------
+# cache: a repeated batch reads strictly fewer bytes than the cold batch
+# ---------------------------------------------------------------------------
+def test_warm_batch_reads_strictly_fewer_bytes(served):
+    D, design, path, qs = served
+    with IndexService(path, profile="azure_nfs",
+                      cache_bytes=(64 << 10, 512 << 10)) as svc:
+        svc.lookup(qs)
+        cold = svc.stats.snapshot()
+        assert cold["bytes_fetched"] > 0 and cold["preads"] > 0
+        got2 = svc.lookup(qs)
+        warm_bytes = svc.stats.bytes_fetched - cold["bytes_fetched"]
+        warm_modeled = svc.stats.modeled_seconds - cold["modeled_seconds"]
+        assert warm_bytes < cold["bytes_fetched"]
+        assert warm_modeled < cold["modeled_seconds"]
+        assert svc.stats.hit_rate > 0
+        assert np.array_equal(got2, lookup_serialized(path, None, qs))
+
+
+def test_tiny_cache_still_correct(served):
+    D, design, path, qs = served
+    with IndexService(path, profile=None, cache_bytes=(0,)) as svc:
+        got = svc.lookup(qs)
+    assert np.array_equal(got, lookup_serialized(path, None, qs))
+
+
+# ---------------------------------------------------------------------------
+# read coalescing
+# ---------------------------------------------------------------------------
+def test_coalesce_ranges_merges_overlaps():
+    s, e = coalesce_ranges([0, 8, 30], [10, 20, 40])
+    assert s.tolist() == [0, 30] and e.tolist() == [20, 40]
+
+
+def test_coalesce_ranges_gap_and_order():
+    s, e = coalesce_ranges([30, 0, 12], [40, 10, 20], gap=2)
+    assert s.tolist() == [0, 30] and e.tolist() == [20, 40]
+    s, e = coalesce_ranges([30, 0, 12], [40, 10, 20], gap=0)
+    assert s.tolist() == [0, 12, 30] and e.tolist() == [10, 20, 40]
+
+
+def test_coalesce_ranges_contained_and_empty():
+    s, e = coalesce_ranges([0, 2], [100, 4])
+    assert s.tolist() == [0] and e.tolist() == [100]
+    s, e = coalesce_ranges([], [])
+    assert len(s) == 0 and len(e) == 0
+
+
+def test_batch_coalesces_to_few_preads(served):
+    D, design, path, qs = served
+    with IndexService(path, profile=None, cache_bytes=(4 << 20,)) as svc:
+        svc.lookup(qs)
+        # 600 queries x 2 disk layers, but contiguous pages merge into runs
+        assert svc.stats.preads < svc.stats.ranges_requested / 10
+
+
+# ---------------------------------------------------------------------------
+# tiered LRU block cache mechanics
+# ---------------------------------------------------------------------------
+def test_tiered_cache_promote_demote_evict():
+    c = TieredBlockCache((2 * 64, 2 * 64), page_bytes=64)   # 2 pages per tier
+    for pid in (1, 2, 3, 4):
+        c.put(pid, bytes(64))
+    # tier0 holds {3,4}; {1,2} demoted to tier1
+    assert 3 in c.tiers[0] and 4 in c.tiers[0]
+    assert 1 in c.tiers[1] and 2 in c.tiers[1]
+    assert c.get(1) is not None           # tier-1 hit promotes to tier 0...
+    assert 1 in c.tiers[0]
+    assert c.hits == [0, 1]
+    c.put(5, bytes(64))                   # ...and 5 displaces the tier-0 LRU
+    assert len(c.tiers[0]) == 2 and len(c.tiers[1]) == 2
+    assert c.get(2) is None               # 2 fell off the last tier
+    assert c.misses == 1
+
+
+def test_tiered_cache_zero_capacity_tier():
+    c = TieredBlockCache((0,), page_bytes=64)
+    c.put(1, bytes(64))
+    assert c.get(1) is None               # nothing sticks, nothing crashes
+
+
+# ---------------------------------------------------------------------------
+# CachedProfile
+# ---------------------------------------------------------------------------
+def test_cached_profile_between_tiers_and_monotone():
+    backing = PROFILES["azure_nfs"]
+    cache = PROFILES["host_dram"]
+    deltas = np.array([64.0, 4096.0, 1 << 20])
+    for h in (0.0, 0.5, 0.95, 1.0):
+        p = CachedProfile(backing=backing, cache=cache, hit_rate=h)
+        t = p(deltas)
+        assert np.all(np.diff(t) >= 0), "T(Δ) must stay monotone"
+        assert np.all(t <= backing(deltas) + 1e-15)
+        assert np.all(t >= cache(deltas) - 1e-15)
+    hot = CachedProfile(backing=backing, cache=cache, hit_rate=0.99)
+    cold = CachedProfile(backing=backing, cache=cache, hit_rate=0.01)
+    assert float(hot(4096)) < float(cold(4096))
+
+
+def test_observed_cached_profile_retunes(served):
+    D, design, path, qs = served
+    with IndexService(path, profile="azure_nfs",
+                      cache_bytes=(1 << 20,)) as svc:
+        svc.lookup(qs)
+        svc.lookup(qs)
+        eff = svc.cached_profile()
+    assert 0.0 < eff.hit_rate <= 1.0
+    assert float(eff(4096)) < float(PROFILES["azure_nfs"](4096))
+
+
+# ---------------------------------------------------------------------------
+# paged serialization
+# ---------------------------------------------------------------------------
+def test_paged_layout_aligns_layers(served):
+    D, design, path, qs = served
+    import os
+    from repro.core.serialize import read_meta
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        meta = read_meta(fd)
+    finally:
+        os.close(fd)
+    assert meta.page_bytes == 1024
+    for lm in meta.layers:
+        assert lm.offset % meta.page_bytes == 0
+        p0, p1 = page_span(lm.offset, lm.size, meta.page_bytes)
+        assert p0 * meta.page_bytes == lm.offset
+        assert (p1 - p0) == -(-lm.size // meta.page_bytes)
+
+
+# ---------------------------------------------------------------------------
+# device (Pallas kernel) routing for resident layers
+# ---------------------------------------------------------------------------
+def test_device_resident_descend_matches_numpy(tmp_path):
+    rng = np.random.default_rng(0)
+    keys = np.unique(rng.integers(1, 2**30, 40_000).astype(np.uint64))
+    D = KeyPositions.fixed_record(keys, 16)
+    l1 = build_gstep(D, 8, 2**9)
+    l2 = build_gstep(outline(l1, D), 8, 2**6)
+    design = IndexDesign(layers=(l1, l2), data=D)
+    path = str(tmp_path / "dev.air")
+    write_index(path, design, page_bytes=1024)
+    qs = rng.choice(D.keys, 256)
+    want = lookup_serialized(path, None, qs)
+    with IndexService(path, use_device=True, resident_layers=2) as svc:
+        assert svc.device_active
+        got = svc.lookup(qs)
+        assert svc.stats.device_batches > 0
+    assert np.array_equal(got, want)
