@@ -236,6 +236,7 @@ def bench_lookup_throughput():
 # Serving engine (batched lookups + tiered block cache) — BENCH_serve.json
 # ---------------------------------------------------------------------------
 SERVE_JSON_PATH = None     # set by main() via --serve-json
+TUNE_JSON_PATH = None      # set by main() via --tune-json
 
 
 def bench_serve():
@@ -249,6 +250,22 @@ def bench_serve():
         with open(SERVE_JSON_PATH, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {SERVE_JSON_PATH}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Tuner speed per search strategy (repro.api facade) — BENCH_tune.json
+# ---------------------------------------------------------------------------
+def bench_tune():
+    try:
+        from benchmarks import tune_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import tune_bench
+    results = tune_bench.run_tune_bench()
+    if TUNE_JSON_PATH:
+        import json
+        with open(TUNE_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {TUNE_JSON_PATH}", flush=True)
 
 
 # ---------------------------------------------------------------------------
@@ -282,25 +299,35 @@ BENCHES = [
     bench_sec22_heterogeneous,
     bench_lookup_throughput,
     bench_serve,
+    bench_tune,
     bench_roofline,
 ]
 
 
-def main() -> None:
-    global SERVE_JSON_PATH
-    argv = list(sys.argv[1:])
-    for i, arg in enumerate(argv):   # emit BENCH_serve.json (perf trajectory)
-        if arg == "--serve-json" or arg.startswith("--serve-json="):
+def _take_json_flag(argv: list, flag: str, default_path: str):
+    """Parse ``--flag[=PATH]`` / ``--flag PATH`` out of argv (in place)."""
+    for i, arg in enumerate(argv):
+        if arg == flag or arg.startswith(flag + "="):
             if "=" in arg:
-                SERVE_JSON_PATH = arg.split("=", 1)[1]
+                path = arg.split("=", 1)[1]
                 del argv[i]
-            elif i + 1 < len(argv) and argv[i + 1].endswith(".json"):
-                SERVE_JSON_PATH = argv[i + 1]      # space-separated PATH
+            elif i + 1 < len(argv) and argv[i + 1].endswith(".json") \
+                    and not argv[i + 1].startswith("-"):
+                path = argv[i + 1]                 # space-separated PATH
                 del argv[i:i + 2]
             else:
-                SERVE_JSON_PATH = "BENCH_serve.json"
+                path = default_path
                 del argv[i]
-            break
+            return path
+    return None
+
+
+def main() -> None:
+    global SERVE_JSON_PATH, TUNE_JSON_PATH
+    argv = list(sys.argv[1:])
+    # emit BENCH_serve.json / BENCH_tune.json (perf trajectories)
+    SERVE_JSON_PATH = _take_json_flag(argv, "--serve-json", "BENCH_serve.json")
+    TUNE_JSON_PATH = _take_json_flag(argv, "--tune-json", "BENCH_tune.json")
     only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:

@@ -30,9 +30,10 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
-from repro.core import (KeyPositions, PROFILES, expected_latency, write_index)
+from repro.api import Index, TuneSpec
+from repro.core import KeyPositions, PROFILES, expected_latency
 from repro.core.serialize import lookup_serialized
-from repro.serve.index_service import IndexService, demo_serving_design
+from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
 
 N_KEYS = 200_000
@@ -63,8 +64,8 @@ def _skewed_queries(keys: np.ndarray, n: int, rng) -> np.ndarray:
     return keys[_HOT_ORDER[ranks]]
 
 
-def bench_cold_warm(path: str, tier: str, queries: np.ndarray) -> dict:
-    svc = IndexService(path, profile=tier, cache_bytes=(256 << 10, 2 << 20))
+def bench_cold_warm(idx: Index, tier: str, queries: np.ndarray) -> dict:
+    svc = idx.serve(profile=tier, cache_bytes=(256 << 10, 2 << 20))
     base = svc.stats.snapshot()
     t0 = time.perf_counter()
     svc.lookup(queries)
@@ -92,14 +93,14 @@ def bench_cold_warm(path: str, tier: str, queries: np.ndarray) -> dict:
     }
 
 
-def bench_cache_sweep(path: str, tier: str, keys: np.ndarray, *,
+def bench_cache_sweep(idx: Index, tier: str, keys: np.ndarray, *,
                       n_batches: int = 8, batch: int = 1024) -> list:
     rng = np.random.default_rng(7)
     stream = [_skewed_queries(keys, batch, rng) for _ in range(n_batches)]
     rows = []
     for cap in CACHE_SIZES:
-        svc = IndexService(path, profile=tier,
-                           cache_bytes=(cap // 4, cap - cap // 4))
+        svc = idx.serve(profile=tier,
+                        cache_bytes=(cap // 4, cap - cap // 4))
         base = svc.stats.snapshot()
         t0 = time.perf_counter()
         for qs in stream:
@@ -118,8 +119,9 @@ def bench_cache_sweep(path: str, tier: str, keys: np.ndarray, *,
     return rows
 
 
-def bench_engine_vs_scalar(path: str, queries: np.ndarray) -> dict:
-    svc = IndexService(path, profile=None, cache_bytes=(2 << 20,))
+def bench_engine_vs_scalar(idx: Index, queries: np.ndarray) -> dict:
+    path = idx.path
+    svc = idx.serve(profile=None, cache_bytes=(2 << 20,))
     svc.lookup(queries[:64])                      # touch pages / warm python
     t0 = time.perf_counter()
     svc.lookup(queries)
@@ -138,7 +140,8 @@ def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
     D = KeyPositions.fixed_record(keys, RECORD)
     design = build_serving_design(D)
     path = os.path.join(tempfile.mkdtemp(prefix="serve_bench_"), "index.air")
-    write_index(path, design, page_bytes=PAGE)
+    idx = Index.from_design(design, spec=TuneSpec(page_bytes=PAGE))
+    idx.save(path)
     rng = np.random.default_rng(0)
     queries = rng.choice(D.keys, n_queries)
 
@@ -149,7 +152,7 @@ def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
                    t: expected_latency(design, PROFILES[t]) * 1e6
                    for t in TIERS}}
     for tier in TIERS:
-        cw = bench_cold_warm(path, tier, queries)
+        cw = bench_cold_warm(idx, tier, queries)
         results["cold_warm"].append(cw)
         emit(f"serve_cold_{tier}", cw["cold"]["modeled_seconds"] * 1e6,
              f"bytes={cw['cold']['bytes_fetched']} preads={cw['cold']['preads']}"
@@ -159,13 +162,13 @@ def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
              f" qps={cw['warm']['qps']:.0f}"
              f" fewer_bytes={cw['warm_fewer_bytes']}"
              f" faster_modeled={cw['warm_faster_modeled']}")
-        for row in bench_cache_sweep(path, tier, D.keys):
+        for row in bench_cache_sweep(idx, tier, D.keys):
             results["cache_sweep"].append(row)
             emit(f"serve_sweep_{tier}_{row['cache_bytes'] >> 10}KiB",
                  row["modeled_seconds"] * 1e6,
                  f"hit_rate={row['hit_rate']:.3f} qps={row['qps']:.0f} "
                  f"bytes={row['bytes_fetched']}")
-    results["engine_vs_scalar"] = bench_engine_vs_scalar(path, queries)
+    results["engine_vs_scalar"] = bench_engine_vs_scalar(idx, queries)
     ev = results["engine_vs_scalar"]
     emit("serve_engine_vs_scalar", 0.0,
          f"engine={ev['engine_qps']:.0f}q/s scalar={ev['scalar_qps']:.0f}q/s "

@@ -1,0 +1,107 @@
+"""Tuning benchmark: cost + wall-clock per search strategy.
+
+The serving benchmark tracks how fast a tuned index *serves*; this one
+tracks how fast (and how well) the tuner itself *searches*.  Every
+registered strategy runs through the ``repro.api`` facade on a fixed
+dataset × storage-profile grid with one shared :class:`TuneSpec`, so the
+numbers are comparable across PRs:
+
+  * ``cost_us``       — L_SM (Eq. 6) of the returned design,
+  * ``wall_s``        — strategy wall-clock (TuneStats.wall_seconds),
+  * ``layers_built``  — candidate layers constructed (the search's work),
+  * ``pruned``        — candidates discarded without exact evaluation.
+
+The λ-grid is kept small enough that ``brute_force`` stays tractable and
+certifies the guided strategies' costs on every run (``within_brute`` in
+the JSON; >1.05 means a guided search lost the optimum).
+
+Prints the repo's ``name,us_per_call,derived`` CSV; ``--json PATH`` also
+dumps ``BENCH_tune.json`` so the perf trajectory tracks tuner speed
+(``benchmarks/run.py --tune-json`` wires this into the main harness).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.api import Index, TuneSpec
+from repro.core import KeyPositions
+from repro.data.datasets import sosd_like
+
+N_KEYS = 50_000
+RECORD = 16
+DATASETS = ("gmm", "books")
+TIERS = ("azure_ssd", "azure_nfs")
+STRATEGIES = ("airtune", "beam", "brute_force")
+
+# small Eq.(8) grid: 4 λ values × 3 families keeps brute_force tractable
+SPEC = TuneSpec(lam_low=2.0**10, lam_high=2.0**16, lam_base=4.0,
+                k=3, max_layers=4)
+
+
+def emit(name, us, derived):
+    print(f"{name},{us:.2f},{derived}")
+
+
+def run_tune_bench(n_keys: int = N_KEYS,
+                   strategies=STRATEGIES) -> dict:
+    results = {"n_keys": n_keys, "spec": SPEC.to_dict(), "rows": []}
+    for ds in DATASETS:
+        D = KeyPositions.fixed_record(sosd_like(ds, n_keys), RECORD)
+        for tier in TIERS:
+            per_strategy = {}
+            for strat in strategies:
+                res = Index.tune(D, tier, SPEC, strategy=strat).result
+                row = {
+                    "dataset": ds, "tier": tier, "strategy": strat,
+                    "cost_us": res.cost * 1e6,
+                    "wall_s": res.stats.wall_seconds,
+                    "layers_built": res.stats.layers_built,
+                    "pruned": res.stats.candidates_pruned,
+                    "n_layers": res.design.n_layers,
+                    "builder_names": list(res.builder_names),
+                }
+                per_strategy[strat] = row
+                results["rows"].append(row)
+                emit(f"tune_{ds}_{tier}_{strat}", res.stats.wall_seconds * 1e6,
+                     f"cost={res.cost * 1e6:.1f}us built={res.stats.layers_built} "
+                     f"pruned={res.stats.candidates_pruned} "
+                     f"layers={res.design.n_layers}")
+            if "brute_force" in per_strategy:
+                ref = per_strategy["brute_force"]["cost_us"]
+                for strat, row in per_strategy.items():
+                    row["within_brute"] = row["cost_us"] / max(ref, 1e-12)
+    guided = [r for r in results["rows"] if r["strategy"] != "brute_force"
+              and "within_brute" in r]
+    ok = all(r["within_brute"] <= 1.05 for r in guided)
+    results["acceptance_guided_within_5pct_of_brute"] = ok
+    emit("tune_acceptance", 0.0,
+         f"guided_within_5pct_of_brute_on_{len(guided)}_cells={ok}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also dump results as JSON (e.g. BENCH_tune.json)")
+    ap.add_argument("--n-keys", type=int, default=N_KEYS)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    results = run_tune_bench(args.n_keys)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
+    if not results["acceptance_guided_within_5pct_of_brute"]:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

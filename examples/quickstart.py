@@ -1,9 +1,10 @@
 """Quickstart: tune an index for YOUR storage and data (paper Alg. 2).
 
 1. profiles the local filesystem (T(Δ), §3.2),
-2. tunes an index for a gmm dataset with AirTune,
-3. compares the modeled latency against B-tree / RMI / PGM / DataCalc,
-4. serializes the index and serves real partial-read lookups (Alg. 1).
+2. tunes an index for a gmm dataset through the ``repro.api`` facade,
+3. compares the modeled latency against B-tree / RMI / PGM,
+4. serializes the index (spec recorded on disk) and serves real
+   partial-read lookups (Alg. 1) from the reopened file.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,8 +17,8 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (KeyPositions, PROFILES, SerializedIndex, airtune,
-                        expected_latency, profile_local_storage, write_index)
+from repro.api import Index, TuneSpec
+from repro.core import KeyPositions, expected_latency, profile_local_storage
 from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
 from repro.data.datasets import sosd_like
 
@@ -33,10 +34,10 @@ print("== dataset: gmm, 400k keys ==")
 keys = sosd_like("gmm", 400_000)
 D = KeyPositions.fixed_record(keys, 16)
 
-print("== AirTune (Alg. 2) ==")
+print("== AirTune (Alg. 2) through the facade ==")
 t0 = time.perf_counter()
-res = airtune(D, prof, k=5)
-print(f"tuned in {time.perf_counter() - t0:.2f}s -> {res.describe()}")
+idx = Index.tune(D, prof, TuneSpec(k=5)).build()
+print(f"tuned in {time.perf_counter() - t0:.2f}s -> {idx.describe()}")
 
 for name, design in [
     ("B-TREE(255,4K)", build_fixed_btree(D)),
@@ -45,20 +46,19 @@ for name, design in [
 ]:
     c = expected_latency(design, prof)
     print(f"  vs {name:16s}: {c * 1e6:9.1f}us  "
-          f"({c / res.cost:.2f}x slower than AirIndex)")
+          f"({c / idx.cost:.2f}x slower than AirIndex)")
 
 print("== serialized, real partial-read lookups ==")
 idx_path = os.path.join(workdir, "index.air")
-write_index(idx_path, res.design)
-idx = SerializedIndex(idx_path)
+idx.save(idx_path)
 rng = np.random.default_rng(0)
 qs = rng.choice(keys, 1000)
-t0 = time.perf_counter()
-for q in qs:
-    lo, hi = idx.lookup(int(q))
-dt = (time.perf_counter() - t0) / len(qs)
+with Index.open(idx_path) as reopened:       # disk walk, no data needed
+    assert reopened.spec == idx.spec         # the file remembers its spec
+    t0 = time.perf_counter()
+    ranges = reopened.lookup(qs)
+    dt = (time.perf_counter() - t0) / len(qs)
 print(f"1000 file lookups: {dt * 1e6:.1f}us each, "
-      f"{idx.bytes_read / idx.reads:.0f}B/read avg, index file "
-      f"{os.path.getsize(idx_path)}B")
-idx.close()
+      f"mean range {float(np.mean(ranges[:, 1] - ranges[:, 0])):.0f}B, "
+      f"index file {os.path.getsize(idx_path)}B")
 print("OK")

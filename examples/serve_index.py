@@ -1,14 +1,17 @@
-"""Serving an index under heavy traffic: the batched engine walkthrough.
+"""Serving an index under heavy traffic: the facade + batched-engine walkthrough.
 
-1. builds a 3-layer index over a gmm dataset and serializes it *paged*
-   (fixed-size pages = the cache unit),
-2. opens an :class:`repro.serve.IndexService` with a two-tier LRU block
-   cache and serves a skewed query stream,
+1. wraps a 3-layer design over a gmm dataset in the :class:`repro.api.Index`
+   facade and saves it *paged* (fixed-size pages = the cache unit) with its
+   :class:`repro.api.TuneSpec` recorded in the file meta,
+2. reopens the file and serves a skewed query stream through
+   :meth:`Index.serve` — the spec's two-tier LRU cache config applies
+   automatically,
 3. shows what the engine saves: coalesced preads, bytes served from
    cache, warm-vs-cold modeled latency,
 4. closes the loop with AirTune: the observed hit rate becomes a
-   :class:`repro.core.CachedProfile` and the index is re-tuned *for* the
-   cache (paper Fig. 1: a hotter tier wants a shallower index).
+   :class:`repro.core.CachedProfile` and :meth:`Index.retune` re-tunes the
+   index *for* the cache (paper Fig. 1: a hotter tier wants a shallower
+   index) using the spec the file remembers.
 
 Run:  PYTHONPATH=src python examples/serve_index.py
 """
@@ -20,28 +23,31 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import (KeyPositions, PROFILES, airtune, expected_latency,
-                        write_index)
-from repro.serve import IndexService
+from repro.api import Index, PROFILES, TuneSpec
+from repro.core import KeyPositions, expected_latency
 from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
 
 workdir = tempfile.mkdtemp(prefix="airindex-serve-")
 path = os.path.join(workdir, "index.air")
+tier = "azure_ssd"
 
-print("== build + serialize (paged) ==")
+print("== build + save (paged, spec recorded) ==")
 keys = sosd_like("gmm", 200_000)
 D = KeyPositions.fixed_record(keys, 16)
-design = demo_serving_design(D)      # 3 layers: two disk + resident root
-meta = write_index(path, design, page_bytes=4096)
-print(f"design: {design.describe()}")
-print(f"file: {os.path.getsize(path)} B in 4096 B pages; "
-      f"layer offsets {[lm.offset for lm in meta.layers]}")
+spec = TuneSpec(page_bytes=4096, cache_bytes=(64 << 10, 1 << 20))
+idx = Index.from_design(demo_serving_design(D),   # 3 layers: 2 disk + root
+                        spec=spec, profile=tier)
+idx.save(path)
+print(f"design: {idx.design.describe()}")
+print(f"file: {os.path.getsize(path)} B in {spec.page_bytes} B pages; "
+      f"layer offsets {[lm.offset for lm in idx.file_meta.layers]}")
 
 print("== serve a skewed stream (hot keys repeat) ==")
 rng = np.random.default_rng(0)
-tier = "azure_ssd"
-svc = IndexService(path, profile=tier, cache_bytes=(64 << 10, 1 << 20))
+reopened = Index.open(path)              # remembers spec + profile
+assert reopened.spec == spec
+svc = reopened.serve()                   # cache tiers from the spec
 hot = rng.choice(D.keys, 512)                      # the working set
 for step in range(6):
     qs = np.concatenate([rng.choice(hot, 768), rng.choice(D.keys, 256)])
@@ -52,7 +58,7 @@ for step in range(6):
           f"bytes_from_cache={s.bytes_from_cache}")
 
 print("== what the cache buys (cold vs warm, modeled) ==")
-cold = IndexService(path, profile=tier, cache_bytes=(1 << 20,))
+cold = reopened.serve(cache_bytes=(1 << 20,))
 base = cold.stats.modeled_seconds
 cold.lookup(hot)
 cold_s = cold.stats.modeled_seconds - base
@@ -64,16 +70,14 @@ print(f"cold batch: {cold_s * 1e6:.1f}us modeled   "
       f"({cold_s / max(warm_s, 1e-12):.0f}x)")
 cold.close()
 
-print("== re-tune FOR the cache (CachedProfile) ==")
+print("== re-tune FOR the cache (CachedProfile via Index.retune) ==")
 eff = svc.cached_profile()           # T(Δ) at the observed hit rate
-retuned = airtune(D, eff, k=3)
-plain = airtune(D, PROFILES[tier], k=3)
+retuned = idx.retune(eff, k=3).build()    # recorded spec, new effective tier
+plain = idx.retune(PROFILES[tier], k=3).build()
 print(f"observed hit rate: {eff.hit_rate:.3f}")
-print(f"tuned for raw {tier}:  {plain.design.describe()} "
-      f"-> {plain.cost * 1e6:.1f}us")
-print(f"tuned for cached {tier}: {retuned.design.describe()} "
-      f"-> {retuned.cost * 1e6:.1f}us")
+print(f"tuned for raw {tier}:  {plain.describe()}")
+print(f"tuned for cached {tier}: {retuned.describe()}")
 print(f"(current 3-layer design under cached profile: "
-      f"{expected_latency(design, eff) * 1e6:.1f}us)")
+      f"{expected_latency(idx.design, eff) * 1e6:.1f}us)")
 svc.close()
 print("done.")

@@ -1,0 +1,40 @@
+"""``repro.api`` — the single public entry point for AirIndex.
+
+One object carries the whole lifecycle::
+
+    from repro.api import Index, TuneSpec
+
+    spec = TuneSpec(strategy="beam", k=4, page_bytes=4096,
+                    cache_bytes=(256 << 10, 2 << 20))
+    idx = Index.tune(D, "azure_ssd", spec).build()
+    idx.save("index.air")                  # records the spec on disk
+    svc = Index.open("index.air").serve()  # spec defaults drive the engine
+
+Extensibility (the paper's open-ended builder family, arXiv:2208.03823)::
+
+    from repro.api import register_builder, register_strategy
+
+    @register_builder("myfamily")          # participates in Alg. 2
+    def build_my_layer(D, lam, p): ...
+
+    @register_strategy("mysearch")         # SearchStrategy protocol
+    def my_search(D, profile, builders=None, *, k=5, max_layers=12): ...
+
+The engine layer stays importable (``repro.core``, ``repro.serve``) —
+this package is a facade, not a wall.
+"""
+from repro.core.airtune import SearchStrategy, TuneResult, TuneStats
+from repro.core.registry import (BUILDER_FAMILIES, SEARCH_STRATEGIES,
+                                 Registry, register_builder,
+                                 register_strategy)
+from repro.core.storage import PROFILES, StorageProfile
+
+from .index import Index, resolve_profile
+from .spec import TuneSpec
+
+__all__ = [
+    "Index", "TuneSpec", "SearchStrategy", "TuneResult", "TuneStats",
+    "BUILDER_FAMILIES", "SEARCH_STRATEGIES", "Registry",
+    "register_builder", "register_strategy",
+    "PROFILES", "StorageProfile", "resolve_profile",
+]

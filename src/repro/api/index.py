@@ -1,0 +1,327 @@
+"""The :class:`Index` facade — one object from tune → disk → serve.
+
+Old lifecycle (scattered):   ``airtune(D, prof)`` → ``write_index(path,
+design)`` → ``SerializedIndex(path)`` / ``IndexService(path, ...)`` with
+nothing carrying the design, its stats, and its serialized form together.
+
+New lifecycle (one handle)::
+
+    idx = Index.tune(D, "azure_ssd", TuneSpec(strategy="beam", k=4,
+                                              page_bytes=4096))
+    idx.build()                   # run the search (implicit on first use)
+    idx.save("index.air")         # paged layout + TuneSpec provenance
+    ranges = idx.lookup(keys)     # in-memory batched Alg. 1
+
+    idx2 = Index.open("index.air")        # remembers its TuneSpec
+    svc = idx2.serve()                    # IndexService, spec defaults
+    idx3 = idx2.retune(new_profile, data=D)   # same spec, new tier
+
+All lookup paths return bit-identical ``(q, 2)`` data-layer byte ranges
+(shared per-layer descent, see :mod:`repro.core.descent`).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core.keyset import KeyPositions
+from repro.core.latency import IndexDesign, expected_latency
+from repro.core.lookup import lookup_batch
+from repro.core.registry import SEARCH_STRATEGIES
+from repro.core.airtune import TuneResult, TuneStats
+from repro.core.serialize import (SerializedIndex, materialize_design,
+                                  read_meta, write_index)
+from repro.core.storage import (PROFILES, StorageProfile, profile_from_dict,
+                                profile_to_dict)
+
+from .spec import TuneSpec
+
+
+def resolve_profile(profile) -> tuple[StorageProfile | None, str | None]:
+    """Accept a profile name, a StorageProfile, or None → (profile, name)."""
+    if profile is None:
+        return None, None
+    if isinstance(profile, str):
+        try:
+            return PROFILES[profile], profile
+        except KeyError:
+            raise KeyError(
+                f"unknown storage profile {profile!r}; named profiles: "
+                f"{', '.join(sorted(PROFILES))}") from None
+    if isinstance(profile, StorageProfile):
+        return profile, getattr(profile, "name", None)
+    raise TypeError(f"profile must be a name, StorageProfile, or None; "
+                    f"got {type(profile).__name__}")
+
+
+class Index:
+    """Facade over the full index lifecycle; construct via
+    :meth:`tune`, :meth:`from_design`, or :meth:`open`."""
+
+    def __init__(self, *, data=None, profile=None, profile_name=None,
+                 spec=None, result=None, path=None, file_meta=None):
+        self._data: KeyPositions | None = data
+        self._profile: StorageProfile | None = profile
+        self._profile_name: str | None = profile_name
+        self._spec: TuneSpec | None = spec
+        self._result: TuneResult | None = result
+        self._path: str | None = path
+        self._file_meta = file_meta
+        # opened from disk (vs declared via tune/from_design): the file IS
+        # the design — never silently re-search on attribute access
+        self._from_disk = file_meta is not None and result is None
+        self._disk_design: IndexDesign | None = None
+        self._handle: SerializedIndex | None = None
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def tune(cls, data: KeyPositions, profile, spec: TuneSpec | None = None,
+             **overrides) -> "Index":
+        """Declare a tuning problem: Θ* = argmin L_SM(X; Θ, T) under
+        ``spec``.  The search runs on :meth:`build` (implicitly triggered
+        by ``design`` / ``save`` / ``lookup``).  ``overrides`` are
+        TuneSpec field replacements, e.g. ``strategy="beam"``."""
+        spec = spec if spec is not None else TuneSpec()
+        if overrides:
+            spec = spec.replace(**overrides)
+        prof, pname = resolve_profile(profile)
+        if prof is None:
+            raise ValueError("Index.tune requires a storage profile")
+        return cls(data=data, profile=prof, profile_name=pname, spec=spec)
+
+    @classmethod
+    def from_design(cls, design: IndexDesign, spec: TuneSpec | None = None,
+                    profile=None) -> "Index":
+        """Wrap an explicitly-built design (manual stacks, demo designs)
+        in the facade lifecycle.  ``cost`` is evaluated via Eq. (6) when a
+        profile is given, else NaN."""
+        prof, pname = resolve_profile(profile)
+        cost = expected_latency(design, prof) if prof is not None \
+            else float("nan")
+        result = TuneResult(design=design, cost=cost, stats=TuneStats(),
+                            strategy="manual", builder_names=())
+        return cls(data=design.data, profile=prof, profile_name=pname,
+                   spec=spec, result=result)
+
+    @classmethod
+    def open(cls, path: str, data: KeyPositions | None = None) -> "Index":
+        """Open a serialized index.  The recorded :class:`TuneSpec` (if the
+        file was written by :meth:`save`) is restored; pass ``data`` to
+        enable full materialization (``.design``) and :meth:`retune`."""
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            meta = read_meta(fd)
+        finally:
+            os.close(fd)
+        spec = prof = pname = None
+        if meta.tune:
+            if meta.tune.get("spec") is not None:
+                try:
+                    spec = TuneSpec.from_dict(meta.tune["spec"])
+                except (TypeError, ValueError):
+                    spec = None   # forward/hand-edited provenance must not
+                    #               make a readable file unopenable; the raw
+                    #               dict stays available via file_meta.tune
+            pname = meta.tune.get("profile")
+            # full parameters first (measured/custom tiers), name fallback
+            prof = profile_from_dict(meta.tune.get("profile_params"))
+            if prof is None and pname in PROFILES:
+                prof = PROFILES[pname]
+        return cls(path=path, file_meta=meta, data=data, spec=spec,
+                   profile=prof, profile_name=pname)
+
+    # -- lifecycle ----------------------------------------------------------
+    def build(self) -> "Index":
+        """Run the configured search strategy (idempotent).  For an Index
+        opened from disk this is a no-op — the file already holds the
+        design; use :meth:`retune` to search again."""
+        if self._from_disk:
+            return self
+        if self._result is None:
+            if self._data is None:
+                raise ValueError("no data to build from")
+            if self._profile is None:
+                raise ValueError("no storage profile to tune for")
+            if self._spec is None:
+                self._spec = TuneSpec()
+            spec = self._spec.validate()
+            strategy = SEARCH_STRATEGIES.get(spec.strategy)
+            self._result = strategy(self._data, self._profile,
+                                    spec.builders(), k=spec.k,
+                                    max_layers=spec.max_layers)
+        return self
+
+    def save(self, path: str, *, data_record: int = 0,
+             page_bytes: int | None = None) -> "Index":
+        """Serialize (building first if needed) with TuneSpec provenance.
+
+        ``page_bytes`` defaults to the spec's; the recorded meta lets
+        :meth:`open` restore the spec and :class:`repro.serve.IndexService`
+        pick up the spec's cache configuration."""
+        self.build()
+        if self._result is None:       # disk-opened: nothing new to write
+            raise ValueError(
+                "save() needs an in-memory design: this Index was opened "
+                "from disk; the file already exists (use retune() to search "
+                "again, then save the result)")
+        if page_bytes is None:
+            pb = self._spec.page_bytes if self._spec is not None else 0
+        else:
+            pb = page_bytes
+        # provenance must describe the file as written: a page_bytes
+        # override is recorded into the spec, not silently dropped
+        spec = self._spec.replace(page_bytes=pb) \
+            if self._spec is not None else None
+        cost = float(self._result.cost)
+        tune_meta = {
+            "spec": spec.to_dict() if spec is not None else None,
+            "strategy": self._result.strategy,
+            # NaN is not valid strict JSON — null out unknown costs
+            "cost": cost if np.isfinite(cost) else None,
+            "builder_names": list(self._result.builder_names),
+            "profile": self._profile_name,
+            "profile_params": profile_to_dict(self._profile),
+        }
+        self._file_meta = write_index(path, self.design,
+                                      data_record=data_record,
+                                      page_bytes=pb, tune=tune_meta)
+        self._path = path
+        return self
+
+    def serve(self, **engine_opts):
+        """Open a batched :class:`repro.serve.IndexService` on the saved
+        file.  Defaults flow from the facade: the tuned-for profile and the
+        spec's cache configuration apply unless overridden."""
+        if self._path is None:
+            raise ValueError(
+                "serve() needs an on-disk index: call save(path) first "
+                "(or open an existing file with Index.open)")
+        from repro.serve.index_service import IndexService
+        if "profile" not in engine_opts and self._profile is not None:
+            engine_opts["profile"] = self._profile
+        return IndexService(self._path, **engine_opts)
+
+    def retune(self, profile=None, data: KeyPositions | None = None,
+               **spec_overrides) -> "Index":
+        """Re-tune with the recorded spec — e.g. when the storage profile
+        changed (new tier, or an observed ``CachedProfile``).  Returns a
+        fresh unsaved :class:`Index`; the original is untouched."""
+        data = data if data is not None else self._data
+        if data is None and self._result is not None:
+            data = self._result.design.data
+        if data is None:
+            raise ValueError(
+                "retune needs the data layer: pass data= (an Index opened "
+                "from disk does not store it)")
+        prof = profile if profile is not None else self._profile
+        if prof is None:
+            raise ValueError("retune needs a storage profile")
+        spec = self._spec if self._spec is not None else TuneSpec()
+        if spec_overrides:
+            spec = spec.replace(**spec_overrides)
+        return Index.tune(data, prof, spec)
+
+    def close(self) -> None:
+        if self._handle is not None:
+            self._handle.close()
+            self._handle = None
+
+    def __enter__(self) -> "Index":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        # disk lookups cache a SerializedIndex fd; don't leak it when the
+        # caller skips the context-manager form
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    # -- queries ------------------------------------------------------------
+    def lookup(self, keys) -> np.ndarray:
+        """Batched Alg. 1 → ``(q, 2)`` int64 data-layer byte ranges.
+
+        In-memory designs use :func:`repro.core.lookup_batch`; disk-opened
+        indexes use the partial-read :class:`SerializedIndex` walk.  Both
+        share the same per-layer descent and agree bit-for-bit."""
+        q = np.atleast_1d(np.asarray(keys, dtype=np.uint64))
+        if not self._from_disk:
+            res = lookup_batch(self.design, q)
+            return np.stack([np.asarray(res.lo, dtype=np.int64),
+                             np.asarray(res.hi, dtype=np.int64)], axis=1)
+        if self._handle is None:
+            self._handle = SerializedIndex(self._path)
+        return np.array([self._handle.lookup(int(x)) for x in q],
+                        dtype=np.int64).reshape(len(q), 2)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def design(self) -> IndexDesign:
+        """The built :class:`IndexDesign` (searches / materializes lazily)."""
+        if self._from_disk:
+            if self._data is None:
+                raise ValueError(
+                    "cannot materialize the design without the data layer; "
+                    "pass data= to Index.open")
+            if self._disk_design is None:
+                self._disk_design = materialize_design(self._path, self._data)
+            return self._disk_design
+        return self.build()._result.design
+
+    @property
+    def result(self) -> TuneResult:
+        if self._from_disk:
+            raise ValueError(
+                "no in-memory tune result: this Index was opened from disk "
+                "(see file_meta.tune for the recorded strategy/cost, or "
+                "retune() to search again)")
+        return self.build()._result
+
+    @property
+    def cost(self) -> float:
+        """L_SM of the design; for a disk-opened Index, the recorded cost
+        from the file meta (NaN when the file has no provenance)."""
+        if self._from_disk:
+            c = (self._file_meta.tune or {}).get("cost")
+            return float(c) if c is not None else float("nan")
+        return self.result.cost
+
+    @property
+    def stats(self) -> TuneStats:
+        return self.result.stats
+
+    @property
+    def spec(self) -> TuneSpec | None:
+        """The originating TuneSpec (None for files without provenance)."""
+        return self._spec
+
+    @property
+    def profile(self) -> StorageProfile | None:
+        return self._profile
+
+    @property
+    def path(self) -> str | None:
+        return self._path
+
+    @property
+    def file_meta(self):
+        return self._file_meta
+
+    def describe(self) -> str:
+        if self._from_disk:
+            t = self._file_meta.tune or {}
+            cost = t.get("cost")
+            return (f"Index(open: {self._path}, "
+                    f"strategy={t.get('strategy') or 'unknown'}, "
+                    f"recorded_cost="
+                    f"{f'{cost * 1e6:.1f}us' if cost is not None else 'n/a'}, "
+                    f"spec={'recorded' if self._spec is not None else 'none'})")
+        if self._result is not None:
+            loc = f" @ {self._path}" if self._path else ""
+            return self._result.describe() + loc
+        # never launch the search just to format a status string
+        return f"Index(unbuilt, spec={self._spec!r})"

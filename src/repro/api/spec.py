@@ -1,0 +1,113 @@
+"""Declarative tuning specification — the "how" of an index, as data.
+
+A :class:`TuneSpec` names everything Alg. 2 needs beyond the data and the
+storage profile: which builder families compete (registry names), the
+λ-grid they are instantiated on (Eq. 8), the search strategy and its
+knobs, and the serving-side layout/cache configuration.  It is a frozen
+value object that round-trips through JSON losslessly, so the facade can
+record it into the on-disk index meta — a reopened index remembers how it
+was tuned and can be re-tuned when the storage profile changes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core.builders import DEFAULT_FAMILIES, LayerBuilder, make_builders
+from repro.core.registry import BUILDER_FAMILIES, SEARCH_STRATEGIES
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpec:
+    """Everything needed to (re)produce a tuned index from (data, profile).
+
+    Fields
+    ------
+    families:    builder-family names resolved through the registry; any
+                 family registered via ``repro.api.register_builder``
+                 participates in the search.
+    lam_low/lam_high/lam_base: the Eq. (8) granularity grid
+                 ``λ_low · lam_base^j ≤ λ_high``.
+    p:           pieces per step node (gstep-family parameter).
+    k:           search width (top-k selection / beam width).
+    max_layers:  index depth bound.
+    strategy:    search-strategy name resolved through the registry
+                 (``airtune`` | ``brute_force`` | ``beam`` | registered).
+    page_bytes:  on-disk layout page size used by ``Index.save`` (0 =
+                 densely packed; >0 = paged, the serving cache unit).
+    cache_bytes: default tiered-cache capacities (hottest first) that
+                 ``Index.serve()`` / ``IndexService`` use when the caller
+                 does not override them; () = engine default.
+    """
+
+    families: tuple = DEFAULT_FAMILIES
+    lam_low: float = 2.0**8
+    lam_high: float = 2.0**20
+    lam_base: float = 2.0
+    p: int = 16
+    k: int = 5
+    max_layers: int = 12
+    strategy: str = "airtune"
+    page_bytes: int = 0
+    cache_bytes: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "families", tuple(self.families))
+        object.__setattr__(self, "cache_bytes",
+                           tuple(int(c) for c in self.cache_bytes))
+
+    # -- validation ---------------------------------------------------------
+    def validate(self) -> "TuneSpec":
+        """Resolve all registry names (KeyError lists what is registered)
+        and sanity-check the numeric knobs.  Returns self for chaining."""
+        for fam in self.families:
+            BUILDER_FAMILIES.get(fam)
+        SEARCH_STRATEGIES.get(self.strategy)
+        # real raises, not asserts: user input must stay checked under -O
+        if not self.families:
+            raise ValueError("at least one builder family required")
+        if not (self.lam_base > 1.0 and 0 < self.lam_low <= self.lam_high):
+            raise ValueError(
+                f"bad λ grid: need lam_base > 1 and 0 < lam_low <= lam_high, "
+                f"got base={self.lam_base} low={self.lam_low} "
+                f"high={self.lam_high}")
+        if self.p < 1 or self.k < 1 or self.max_layers < 0:
+            raise ValueError(f"bad knobs: p={self.p} k={self.k} "
+                             f"max_layers={self.max_layers}")
+        if self.page_bytes < 0 or any(c < 0 for c in self.cache_bytes):
+            raise ValueError(f"negative sizes: page_bytes={self.page_bytes} "
+                             f"cache_bytes={self.cache_bytes}")
+        return self
+
+    # -- materialization ----------------------------------------------------
+    def builders(self) -> list[LayerBuilder]:
+        """Instantiate the candidate set 𝓕 on the Eq. (8) grid."""
+        return make_builders(lam_low=self.lam_low, lam_high=self.lam_high,
+                             base=self.lam_base, p=self.p, kinds=self.families)
+
+    def replace(self, **changes) -> "TuneSpec":
+        return dataclasses.replace(self, **changes)
+
+    # -- JSON round-trip ----------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["families"] = list(self.families)
+        d["cache_bytes"] = list(self.cache_bytes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuneSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown TuneSpec fields {sorted(unknown)}; "
+                f"allowed: {sorted(known)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "TuneSpec":
+        return cls.from_dict(json.loads(s))

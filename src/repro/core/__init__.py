@@ -1,13 +1,19 @@
 """AirIndex core — the paper's contribution as a composable library.
 
-Public surface:
+This is the *engine* layer.  The recommended public entry point is the
+``repro.api`` facade (``Index`` / ``TuneSpec``), which drives everything
+below through one object and records tuning provenance on disk.
+
+Engine surface:
   KeyPositions                      — key→position collections (``D``)
   StorageProfile / PROFILES         — ``T(Δ)`` models (§3.2)
   StepLayer / BandLayer / outline   — unified index model layers (§4)
-  LayerBuilder / make_builders      — GStep/GBand/EBand on the Eq.(8) grid
+  LayerBuilder / make_builders      — registered families on the Eq.(8) grid
+  BUILDER_FAMILIES / SEARCH_STRATEGIES — pluggable registries (repro.api
+                                      re-exports the register decorators)
   IndexDesign / expected_latency    — ``L_SM`` (Eq. 5/6)
   step_index_complexity / tau_hat   — τ̂ (Eq. 12)
-  airtune / brute_force             — the search (Alg. 2)
+  airtune / brute_force / beam_search — SearchStrategy implementations (Alg. 2)
   lookup_batch / verify_lookup      — batched Alg. 1
   descend_*_layer / coalesce_ranges — shared per-layer descent + read planner
   write_index / SerializedIndex     — on-disk format (optionally paged) +
@@ -16,12 +22,16 @@ Public surface:
   baselines                         — B-TREE / RMI / PGM / Data Calculator
 
 The batched serving engine on top of this surface lives in
-``repro.serve.index_service``.
+``repro.serve.index_service``.  ``load_index`` and ``lookup.lookup_file``
+remain as deprecation shims onto the facade.
 """
-from .airtune import TuneResult, airtune, brute_force
-from .builders import (LayerBuilder, build_eband, build_gband, build_gstep,
-                       build_partitioned, greedy_partition, make_builders,
-                       merge_layers)
+from .airtune import (SearchStrategy, TuneResult, TuneStats, airtune,
+                      beam_search, brute_force)
+from .builders import (DEFAULT_FAMILIES, LayerBuilder, build_eband,
+                       build_gband, build_gstep, build_partitioned,
+                       greedy_partition, make_builders, merge_layers)
+from .registry import (BUILDER_FAMILIES, SEARCH_STRATEGIES, Registry,
+                       register_builder, register_strategy)
 from .complexity import (S_STEP, step_index_complexity,
                          step_index_complexity_layers, tau_hat)
 from .keyset import KeyPositions
@@ -32,11 +42,13 @@ from .descent import (coalesce_ranges, covering_index, descend_band_layer,
 from .lookup import LookupResult, last_mile_search, lookup_batch, verify_lookup
 from .nodes import (BAND_NODE_BYTES, STEP_PIECE_BYTES, BandLayer, StepLayer,
                     mean_width, outline)
-from .serialize import (SerializedIndex, load_index, page_span,
-                        record_aligned_range, write_index)
+from .serialize import (IndexFileMeta, SerializedIndex, load_index,
+                        materialize_design, page_span, record_aligned_range,
+                        write_index)
 from .storage import (AffineProfile, AffineUniformProfile, CachedProfile,
                       MeasuredProfile, PROFILES, StorageProfile,
-                      profile_local_storage)
+                      profile_from_dict, profile_local_storage,
+                      profile_to_dict)
 from . import baselines  # noqa: F401
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -19,11 +19,22 @@ Exactness of the expectation: step widths are constant per piece and band
 widths constant per node, and piece/node boundaries are drawn from the
 collection's keys, so evaluating widths at outline keys with aggregated
 weights equals evaluating at the original query keys (see latency.py).
+
+Three :class:`SearchStrategy` implementations share this machinery and are
+registered in :data:`repro.core.registry.SEARCH_STRATEGIES` (the public
+facade ``repro.api`` resolves strategy *names* through that registry):
+
+  * :func:`airtune`     — the paper's guided depth-first search (Alg. 2);
+  * :func:`brute_force` — exhaustive reference (no pruning, no τ̂);
+  * :func:`beam_search` — breadth-first with a width-``k`` frontier; same
+    stopping criterion and Eq. 9 score, but total layer builds bounded by
+    ``max_layers · k · |𝓕|`` (predictable tuning cost on huge 𝓕).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Protocol
 
 import numpy as np
 
@@ -32,6 +43,7 @@ from .complexity import tau_hat
 from .keyset import KeyPositions
 from .latency import IndexDesign, expected_latency, ideal_latency_with_index
 from .nodes import Layer, outline
+from .registry import register_strategy
 from .storage import StorageProfile
 
 
@@ -39,7 +51,8 @@ from .storage import StorageProfile
 class TuneStats:
     vertices_visited: int = 0
     layers_built: int = 0
-    candidates_pruned: int = 0
+    candidates_pruned: int = 0   # discarded without recursion: non-shrinking
+    #                              outlines + beyond-top-k (guided searches)
     wall_seconds: float = 0.0
 
 
@@ -48,12 +61,31 @@ class TuneResult:
     design: IndexDesign
     cost: float               # L_SM(X; Θ*, T), Eq. (6)
     stats: TuneStats
+    strategy: str = "airtune"          # which SearchStrategy produced this
+    builder_names: tuple = ()          # provenance: F.name per layer, bottom-up
 
     def describe(self) -> str:
-        return (f"{self.design.describe()}  cost={self.cost * 1e6:.1f}us  "
+        return (f"[{self.strategy}] {self.design.describe()}  "
+                f"cost={self.cost * 1e6:.1f}us  "
                 f"(visited={self.stats.vertices_visited}, "
                 f"built={self.stats.layers_built}, "
+                f"pruned={self.stats.candidates_pruned}, "
                 f"{self.stats.wall_seconds:.2f}s)")
+
+
+class SearchStrategy(Protocol):
+    """Protocol every registered search strategy implements.
+
+    ``builders=None`` means the default Eq. (8) grid; ``k`` is the
+    strategy's width/pruning knob (ignored by exhaustive strategies) and
+    ``max_layers`` bounds the index depth.  Implementations must return a
+    :class:`TuneResult` whose ``cost`` agrees with the Eq. (6) evaluator
+    on the returned design.
+    """
+
+    def __call__(self, D: KeyPositions, profile: StorageProfile,
+                 builders: list[LayerBuilder] | None = None, *,
+                 k: int = 5, max_layers: int = 12) -> TuneResult: ...
 
 
 SCORE_SAMPLE = 65536   # pairs used for candidate *ranking* (§5.3); the
@@ -79,6 +111,7 @@ def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
     return float(np.average(profile(wq), weights=weights))
 
 
+@register_strategy("airtune")
 def airtune(D: KeyPositions, profile: StorageProfile,
             builders: list[LayerBuilder] | None = None, *,
             k: int = 5, max_layers: int = 12) -> TuneResult:
@@ -87,23 +120,25 @@ def airtune(D: KeyPositions, profile: StorageProfile,
         builders = make_builders()
     stats = TuneStats()
     t0 = time.perf_counter()
-    layers, cost = _airtune_rec(D, profile, builders, k, max_layers, stats)
+    layers, names, cost = _airtune_rec(D, profile, builders, k, max_layers,
+                                       stats)
     stats.wall_seconds = time.perf_counter() - t0
     design = IndexDesign(layers=tuple(layers), data=D)
     # the recursion's incremental cost must agree with the Eq. (6) evaluator
-    return TuneResult(design=design, cost=cost, stats=stats)
+    return TuneResult(design=design, cost=cost, stats=stats,
+                      strategy="airtune", builder_names=tuple(names))
 
 
 def _airtune_rec(D: KeyPositions, profile: StorageProfile,
                  builders: list[LayerBuilder], k: int, depth_left: int,
-                 stats: TuneStats) -> tuple[list, float]:
+                 stats: TuneStats) -> tuple[list, list, float]:
     stats.vertices_visited += 1
     no_index_cost = float(profile(D.size_bytes))   # L_SM(D; (), T)
 
     # stopping criterion: even an ideal layer cannot beat reading D outright
     if no_index_cost < ideal_latency_with_index(profile) or depth_left == 0 \
             or D.n <= 1:
-        return [], no_index_cost
+        return [], [], no_index_cost
 
     # explore all outgoing edges: build every candidate next layer (§5.2).
     # ranking uses sampled read-cost estimates; the k selected candidates
@@ -115,57 +150,143 @@ def _airtune_rec(D: KeyPositions, profile: StorageProfile,
         D_next = outline(layer, D)
         # safeguard: only strictly shrinking layers guarantee termination
         if D_next.size_bytes >= D.size_bytes:
+            stats.candidates_pruned += 1
             continue
         est_cost = _mean_layer_read_cost(layer, D, profile, sample=True)
         score = tau_hat(D_next, profile) + est_cost         # Eq. (9)
-        candidates.append((score, layer, D_next))
+        candidates.append((score, F.name, layer, D_next))
 
     # select top-k by index-complexity-guided score (§5.3)
     candidates.sort(key=lambda c: c[0])
     stats.candidates_pruned += max(len(candidates) - k, 0)
-    best_layers, best_cost = [], no_index_cost
-    for score, layer, D_next in candidates[:k]:
+    best_layers, best_names, best_cost = [], [], no_index_cost
+    for score, fname, layer, D_next in candidates[:k]:
         read_cost = _mean_layer_read_cost(layer, D, profile)   # exact
-        upper_layers, upper_cost = _airtune_rec(
+        upper_layers, upper_names, upper_cost = _airtune_rec(
             D_next, profile, builders, k, depth_left - 1, stats)
         total = read_cost + upper_cost       # V(D) recursion (Alg. 2 line 11)
         if total < best_cost:
             best_cost = total
             best_layers = [layer] + upper_layers
-    return best_layers, best_cost
+            best_names = [fname] + upper_names
+    return best_layers, best_names, best_cost
 
 
+@register_strategy("brute_force")
 def brute_force(D: KeyPositions, profile: StorageProfile,
                 builders: list[LayerBuilder] | None = None, *,
-                max_layers: int = 4) -> TuneResult:
+                k: int = 0, max_layers: int = 4) -> TuneResult:
     """Exhaustive reference search (no top-k pruning, no τ̂ guidance).
 
     Exponential in |𝓕|; only usable on small inputs.  Tests use it to
     certify AirTune's pruning never loses the optimum on tractable cases.
+    ``k`` is accepted for :class:`SearchStrategy` compatibility and
+    ignored — brute force never prunes by score; its
+    ``candidates_pruned`` counts only edges discarded by the
+    strictly-shrinking termination safeguard.
     """
     if builders is None:
         builders = make_builders()
     stats = TuneStats()
     t0 = time.perf_counter()
 
-    def rec(Dc: KeyPositions, depth_left: int) -> tuple[list, float]:
+    def rec(Dc: KeyPositions, depth_left: int) -> tuple[list, list, float]:
         stats.vertices_visited += 1
-        best_layers, best_cost = [], float(profile(Dc.size_bytes))
+        best_layers, best_names = [], []
+        best_cost = float(profile(Dc.size_bytes))
         if depth_left == 0 or Dc.n <= 1:
-            return best_layers, best_cost
+            return best_layers, best_names, best_cost
         for F in builders:
             layer = F(Dc)
             stats.layers_built += 1
             D_next = outline(layer, Dc)
             if D_next.size_bytes >= Dc.size_bytes:
+                stats.candidates_pruned += 1
                 continue
-            upper_layers, upper_cost = rec(D_next, depth_left - 1)
+            upper_layers, upper_names, upper_cost = rec(D_next, depth_left - 1)
             total = _mean_layer_read_cost(layer, Dc, profile) + upper_cost
             if total < best_cost:
-                best_cost, best_layers = total, [layer] + upper_layers
-        return best_layers, best_cost
+                best_cost = total
+                best_layers = [layer] + upper_layers
+                best_names = [F.name] + upper_names
+        return best_layers, best_names, best_cost
 
-    layers, cost = rec(D, max_layers)
+    layers, names, cost = rec(D, max_layers)
     stats.wall_seconds = time.perf_counter() - t0
     return TuneResult(design=IndexDesign(layers=tuple(layers), data=D),
-                      cost=cost, stats=stats)
+                      cost=cost, stats=stats, strategy="brute_force",
+                      builder_names=tuple(names))
+
+
+@register_strategy("beam")
+def beam_search(D: KeyPositions, profile: StorageProfile,
+                builders: list[LayerBuilder] | None = None, *,
+                k: int = 5, max_layers: int = 12) -> TuneResult:
+    """Beam search over layer stacks: Alg. 2's graph, breadth-first.
+
+    A frontier of at most ``k`` partial designs (bottom-up layer stacks)
+    advances one layer per round; every frontier state expands through all
+    of 𝓕 and the ``k`` best children *overall* — scored by accumulated
+    exact read cost plus the Eq. 9 score ``τ̂(D_next) + Ê[T(Δ)]`` — survive.
+    Shares :func:`airtune`'s stopping criterion, so frontier states whose
+    collection is already cheaper to read outright than an ideal extra
+    layer stop expanding.  Unlike the depth-first top-k recursion (which
+    re-branches inside every selected child), total work is bounded by
+    ``max_layers · k · |𝓕|`` layer builds — a predictable budget when the
+    registered family set is large.
+
+    With ``k`` at least the number of shrinking children per round the
+    beam degenerates to exhaustive breadth-first search and matches
+    :func:`brute_force` exactly.
+    """
+    if builders is None:
+        builders = make_builders()
+    stats = TuneStats()
+    t0 = time.perf_counter()
+    stats.vertices_visited += 1
+    best_cost = float(profile(D.size_bytes))     # stop at the data layer
+    best_layers: list = []
+    best_names: list = []
+    ideal = ideal_latency_with_index(profile)
+    # frontier state: (exact cost of layers so far, collection, layers, names)
+    frontier = [(0.0, D, [], [])]
+    for _ in range(max_layers):
+        children = []
+        for cost_so_far, Dc, layers, names in frontier:
+            # stopping criterion, per state (Alg. 2 lines 1–2)
+            if float(profile(Dc.size_bytes)) < ideal or Dc.n <= 1:
+                continue
+            for F in builders:
+                layer = F(Dc)
+                stats.layers_built += 1
+                D_next = outline(layer, Dc)
+                if D_next.size_bytes >= Dc.size_bytes:
+                    stats.candidates_pruned += 1
+                    continue
+                est = _mean_layer_read_cost(layer, Dc, profile, sample=True)
+                score = cost_so_far + est + tau_hat(D_next, profile)  # Eq. (9)
+                children.append((score, cost_so_far, Dc, layer, F.name,
+                                 D_next, layers, names))
+        if not children:
+            break
+        children.sort(key=lambda c: c[0])
+        stats.candidates_pruned += max(len(children) - k, 0)
+        frontier = []
+        for (score, cost_so_far, Dc, layer, fname, D_next,
+             layers, names) in children[:k]:
+            read_cost = _mean_layer_read_cost(layer, Dc, profile)   # exact
+            new_cost = cost_so_far + read_cost
+            new_layers = layers + [layer]
+            new_names = names + [fname]
+            stats.vertices_visited += 1
+            complete = new_cost + float(profile(D_next.size_bytes))  # Eq. (6)
+            if complete < best_cost:
+                best_cost = complete
+                best_layers, best_names = new_layers, new_names
+            frontier.append((new_cost, D_next, new_layers, new_names))
+    stats.wall_seconds = time.perf_counter() - t0
+    design = IndexDesign(layers=tuple(best_layers), data=D)
+    assert abs(expected_latency(design, profile) - best_cost) \
+        <= 1e-9 * max(best_cost, 1e-30)
+    return TuneResult(design=design, cost=best_cost, stats=stats,
+                      strategy="beam", builder_names=tuple(best_names))

@@ -108,7 +108,8 @@ def tune_rmi(D: KeyPositions, profile: StorageProfile,
         cost = expected_latency(design, profile)
         if cost < best_cost:
             best, best_cost = design, cost
-    return TuneResult(design=best, cost=best_cost, stats=TuneStats())
+    return TuneResult(design=best, cost=best_cost, stats=TuneStats(),
+                      strategy="rmi")
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +128,8 @@ def tune_pgm(D: KeyPositions, profile: StorageProfile,
         cost = expected_latency(design, profile)
         if cost < best_cost:
             best, best_cost = design, cost
-    return TuneResult(design=best, cost=best_cost, stats=TuneStats())
+    return TuneResult(design=best, cost=best_cost, stats=TuneStats(),
+                      strategy="pgm")
 
 
 # ---------------------------------------------------------------------------
@@ -155,7 +157,8 @@ def data_calculator(D: KeyPositions, profile: StorageProfile,
                 cost = expected_latency(sub, profile)
                 if cost < best_cost:
                     best, best_cost = sub, cost
-    return TuneResult(design=best, cost=best_cost, stats=stats)
+    return TuneResult(design=best, cost=best_cost, stats=stats,
+                      strategy="datacalc")
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ import numpy as np
 
 from .keyset import KeyPositions, POS_DTYPE
 from .nodes import BandLayer, Layer, StepLayer
+from .registry import BUILDER_FAMILIES, register_builder
 
 _DELTA_SAFETY = 1.0  # absorbs float64 rounding so Eq.(1) holds bit-exactly
 
@@ -217,11 +218,36 @@ def build_gband(D: KeyPositions, lam: float) -> BandLayer:
 # ---------------------------------------------------------------------------
 # builder objects + the Eq.(8) grid
 # ---------------------------------------------------------------------------
+# The built-in families, registered so the Alg. 2 search resolves them (and
+# any third-party family registered via repro.api) through one mechanism.
+@register_builder("gstep")
+def _gstep_family(D: KeyPositions, lam: float, p: int) -> Layer:
+    return build_gstep(D, int(p), lam)
+
+
+@register_builder("gband")
+def _gband_family(D: KeyPositions, lam: float, p: int) -> Layer:
+    return build_gband(D, lam)
+
+
+@register_builder("eband")
+def _eband_family(D: KeyPositions, lam: float, p: int) -> Layer:
+    return build_eband(D, lam)
+
+
+DEFAULT_FAMILIES = ("gstep", "gband", "eband")   # the paper's deployed set
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerBuilder:
-    """A node builder F ∈ 𝓕 mapping a key-position collection to a layer."""
+    """A node builder F ∈ 𝓕 mapping a key-position collection to a layer.
 
-    kind: str          # 'gstep' | 'gband' | 'eband'
+    ``kind`` names a family in :data:`repro.core.registry.BUILDER_FAMILIES`;
+    resolution happens per call, so families registered after construction
+    (e.g. from test or plugin code) are picked up live.
+    """
+
+    kind: str          # a registered family name ('gstep' | 'gband' | …)
     lam: float
     p: int = 16        # pieces per node (gstep only)
 
@@ -229,23 +255,28 @@ class LayerBuilder:
     def name(self) -> str:
         if self.kind == "gstep":
             return f"GStep({self.p},{int(self.lam)})"
-        return f"{'GBand' if self.kind == 'gband' else 'EBand'}({int(self.lam)})"
+        if self.kind in ("gband", "eband"):
+            return f"{'GBand' if self.kind == 'gband' else 'EBand'}({int(self.lam)})"
+        return f"{self.kind}({int(self.lam)})"
 
     def __call__(self, D: KeyPositions) -> Layer:
-        if self.kind == "gstep":
-            return build_gstep(D, self.p, self.lam)
-        if self.kind == "gband":
-            return build_gband(D, self.lam)
-        if self.kind == "eband":
-            return build_eband(D, self.lam)
-        raise ValueError(self.kind)
+        return BUILDER_FAMILIES.get(self.kind)(D, self.lam, self.p)
 
 
 def make_builders(lam_low: float = 2**8, lam_high: float = 2**20,
                   base: float = 2.0, p: int = 16,
-                  kinds=("gstep", "gband", "eband")) -> list[LayerBuilder]:
-    """Granularity exponentiation (Eq. 8): λ_low, λ_low·(1+ε), …, λ_high."""
-    assert base > 1.0
+                  kinds=DEFAULT_FAMILIES) -> list[LayerBuilder]:
+    """Granularity exponentiation (Eq. 8): λ_low, λ_low·(1+ε), …, λ_high.
+
+    ``kinds`` are family names resolved through the builder registry;
+    unknown names raise ``KeyError`` listing what is registered.
+    """
+    if not base > 1.0:       # a real raise: base <= 1 never terminates
+        raise ValueError(f"grid base must be > 1, got {base}")
+    if kinds is None:
+        kinds = DEFAULT_FAMILIES
+    for k in kinds:
+        BUILDER_FAMILIES.get(k)        # fail fast on unknown families
     lams = []
     lam = float(lam_low)
     while lam <= lam_high * (1 + 1e-9):

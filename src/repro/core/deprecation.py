@@ -1,0 +1,28 @@
+"""Deprecation shims: warn external callers, hard-fail internal use.
+
+The ``repro.api`` facade replaced the scattered tune → serialize → serve
+call forms; the old entry points remain as thin shims that delegate to the
+facade bit-identically.  Shims are for *callers* migrating at their own
+pace — code inside ``repro`` itself must use the facade (or the engine
+layer directly), so an internal call through a shim is a bug and raises
+immediately instead of warning.  CI additionally escalates any
+``DeprecationWarning`` attributed to a ``repro.*`` module to an error
+(see ``[tool.pytest.ini_options] filterwarnings``).
+"""
+from __future__ import annotations
+
+import sys
+import warnings
+
+
+def warn_deprecated(message: str, *, stacklevel: int = 3) -> None:
+    """Emit a ``DeprecationWarning`` attributed to the shim's caller.
+
+    ``stacklevel=3`` assumes the call chain ``caller -> shim ->
+    warn_deprecated``; pass a larger value for deeper shims.
+    """
+    caller = sys._getframe(stacklevel - 1).f_globals.get("__name__", "")
+    if caller == "repro" or caller.startswith("repro."):
+        raise AssertionError(
+            f"deprecated API used from within repro ({caller}): {message}")
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)

@@ -14,8 +14,9 @@ provides:
   * :func:`lookup_batch` — in-memory traversal returning predicted data
     ranges + the modeled per-query latency (Eq. 5 terms), used by tests,
     benchmarks, and the storage-model evaluation;
-  * :func:`lookup_file` — the real thing against a serialized index file
-    (partial ``pread``s only), used by the data-pipeline substrate.
+  * :func:`lookup_file` — deprecation shim onto the facade
+    (``repro.api.Index.open(path).lookup``); the real partial-read walk
+    lives in :mod:`repro.core.serialize`.
 """
 from __future__ import annotations
 
@@ -91,10 +92,16 @@ def last_mile_search(keys_in_range: np.ndarray, query: int) -> int:
 
 
 def lookup_file(path: str, design_meta, queries: np.ndarray):
-    """Real partial-read lookup against a serialized index file.
+    """Deprecated shim: use ``repro.api.Index.open(path).lookup(queries)``.
 
-    Thin convenience wrapper; implemented in :mod:`repro.core.serialize`
-    (which owns the on-disk format).  Re-exported here for API symmetry.
+    The facade path runs the identical :class:`repro.core.serialize.
+    SerializedIndex` walk, so results are bit-identical.  ``design_meta``
+    was always unused and is ignored.
     """
-    from . import serialize
-    return serialize.lookup_serialized(path, design_meta, queries)
+    from .deprecation import warn_deprecated
+    warn_deprecated(
+        "repro.core.lookup.lookup_file(path, meta, queries) is deprecated; "
+        "use repro.api.Index.open(path).lookup(queries)")
+    from repro.api import Index
+    with Index.open(path) as idx:
+        return idx.lookup(queries)

@@ -1,0 +1,88 @@
+"""Pluggable registries: builder families ``F`` and search strategies.
+
+The paper frames AirTune as a search over an *open-ended* family of layer
+builders — "almost any existing index or a novel combination of them"
+(§1; the extended abstract arXiv:2208.03823 makes the open-endedness
+explicit).  These registries make that family a runtime-extensible set:
+
+  * :data:`BUILDER_FAMILIES` maps a family name (``"gstep"``, ``"gband"``,
+    ``"eband"``, …) to a build function ``f(D, lam, p) -> Layer``.
+    :class:`repro.core.builders.LayerBuilder` resolves its ``kind`` through
+    this registry on every call, so a family registered by third-party code
+    participates in the Alg. 2 search without editing ``core/``.
+  * :data:`SEARCH_STRATEGIES` maps a strategy name (``"airtune"``,
+    ``"brute_force"``, ``"beam"``, …) to a callable implementing the
+    :class:`repro.core.airtune.SearchStrategy` protocol.
+
+Third-party code registers through the public facade::
+
+    from repro.api import register_builder
+
+    @register_builder("myfamily")
+    def build_my_layer(D, lam, p):
+        return ...  # a StepLayer or BandLayer
+
+The built-in entries are registered when :mod:`repro.core.builders` and
+:mod:`repro.core.airtune` are imported (both happen on ``import
+repro.core``).
+"""
+from __future__ import annotations
+
+
+class Registry:
+    """Name → object mapping with decorator registration and clear errors."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, object] = {}
+
+    def register(self, name: str, obj=None):
+        """``register(name, obj)`` or ``@register(name)`` decorator form."""
+        if obj is None:
+            def deco(fn):
+                self.register(name, fn)
+                return fn
+            return deco
+        if name in self._entries and self._entries[name] is not obj:
+            raise ValueError(
+                f"{self.kind} {name!r} is already registered; "
+                f"unregister it first to replace it")
+        self._entries[name] = obj
+        return obj
+
+    def unregister(self, name: str) -> None:
+        self._entries.pop(name, None)
+
+    def get(self, name: str):
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(sorted(self._entries)) or '(none)'}") from None
+
+    def names(self) -> tuple:
+        return tuple(sorted(self._entries))
+
+    def __contains__(self, name) -> bool:
+        return name in self._entries
+
+    def __iter__(self):
+        return iter(sorted(self._entries))
+
+
+#: family name -> build function ``f(D: KeyPositions, lam: float, p: int) -> Layer``
+BUILDER_FAMILIES = Registry("builder family")
+
+#: strategy name -> ``SearchStrategy`` callable (see repro.core.airtune)
+SEARCH_STRATEGIES = Registry("search strategy")
+
+
+def register_builder(name: str, fn=None):
+    """Register a layer-builder family ``f(D, lam, p) -> Layer``."""
+    return BUILDER_FAMILIES.register(name, fn)
+
+
+def register_strategy(name: str, fn=None):
+    """Register a search strategy (``SearchStrategy`` protocol)."""
+    return SEARCH_STRATEGIES.register(name, fn)

@@ -62,13 +62,20 @@ class IndexFileMeta:
     data_size: int        # extent of the data layer (for clamping)
     data_record: int      # fixed record size of the data layer (0 = varlen)
     page_bytes: int = 0   # fixed page size (0 = densely packed, unpaged)
+    tune: dict | None = None   # provenance: how the index was tuned — the
+    #   ``repro.api`` facade records {"spec": TuneSpec.to_dict(), "strategy",
+    #   "cost", "builder_names", "profile"} so a reopened index remembers
+    #   its TuneSpec and can be re-tuned when the storage profile changes
 
     def to_json(self) -> str:
-        return json.dumps({
+        d = {
             "layers": [dataclasses.asdict(l) for l in self.layers],
             "data_size": self.data_size, "data_record": self.data_record,
             "page_bytes": self.page_bytes,
-        })
+        }
+        if self.tune is not None:
+            d["tune"] = self.tune
+        return json.dumps(d)
 
     @staticmethod
     def from_json(s: str) -> "IndexFileMeta":
@@ -76,7 +83,7 @@ class IndexFileMeta:
         return IndexFileMeta(
             layers=[LayerMeta(**l) for l in d["layers"]],
             data_size=d["data_size"], data_record=d["data_record"],
-            page_bytes=d.get("page_bytes", 0))
+            page_bytes=d.get("page_bytes", 0), tune=d.get("tune"))
 
 
 RECORD_BYTES = {"step": 16, "band": 40}
@@ -119,10 +126,11 @@ def _layer_bytes(layer) -> bytes:
 
 
 def write_index(path: str, design: IndexDesign, data_record: int = 0,
-                page_bytes: int = 0) -> IndexFileMeta:
+                page_bytes: int = 0, tune: dict | None = None) -> IndexFileMeta:
     """Serialize a design.  ``page_bytes > 0`` aligns every layer to page
     boundaries (paged layout — the serving engine's cache unit); 0 keeps
-    the densely-packed layout."""
+    the densely-packed layout.  ``tune`` is an optional JSON-serializable
+    provenance dict recorded into the meta (see :class:`IndexFileMeta`)."""
     metas = []
     blobs = []
     for layer in design.layers:
@@ -134,7 +142,8 @@ def write_index(path: str, design: IndexDesign, data_record: int = 0,
                                end_pos=end_pos))
         blobs.append(b)
     meta = IndexFileMeta(layers=metas, data_size=design.data.size_bytes,
-                         data_record=data_record, page_bytes=page_bytes)
+                         data_record=data_record, page_bytes=page_bytes,
+                         tune=tune)
 
     def _align(off: int) -> int:
         return off if page_bytes == 0 else -(-off // page_bytes) * page_bytes
@@ -171,7 +180,22 @@ def read_meta(fd: int) -> IndexFileMeta:
 
 
 def load_index(path: str, data: KeyPositions) -> IndexDesign:
-    """Full deserialization (tests/round-trip); real lookups use ranges."""
+    """Deprecated shim: use ``repro.api.Index.open(path, data=data).design``.
+
+    Delegates to the facade (which calls :func:`materialize_design`, the
+    same implementation this function used to own), so results are
+    bit-identical to the old behavior.
+    """
+    from .deprecation import warn_deprecated
+    warn_deprecated(
+        "repro.core.load_index(path, data) is deprecated; use "
+        "repro.api.Index.open(path, data=data).design")
+    from repro.api import Index
+    return Index.open(path, data=data).design
+
+
+def materialize_design(path: str, data: KeyPositions) -> IndexDesign:
+    """Full deserialization (round-trips, re-tuning); real lookups use ranges."""
     fd = os.open(path, os.O_RDONLY)
     try:
         meta = read_meta(fd)

@@ -166,6 +166,64 @@ def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
 
 
 # ---------------------------------------------------------------------------
+# JSON round-trip for profiles (facade provenance: an index file records
+# the T(Δ) it was tuned for, so Index.open can restore measured/custom
+# tiers — not just named constants).  Unknown profile types degrade to
+# None rather than failing the save/open.
+# ---------------------------------------------------------------------------
+def profile_to_dict(profile: StorageProfile | None) -> dict | None:
+    if isinstance(profile, AffineProfile):
+        return {"kind": "affine", "latency": profile.latency,
+                "bandwidth": profile.bandwidth, "name": profile.name}
+    if isinstance(profile, AffineUniformProfile):
+        return {"kind": "affine_uniform",
+                "latency_lo": profile.latency_lo,
+                "latency_hi": profile.latency_hi,
+                "bandwidth_lo": profile.bandwidth_lo,
+                "bandwidth_hi": profile.bandwidth_hi, "name": profile.name}
+    if isinstance(profile, MeasuredProfile):
+        return {"kind": "measured", "deltas": list(profile.deltas),
+                "seconds": list(profile.seconds), "name": profile.name}
+    if isinstance(profile, CachedProfile):
+        backing = profile_to_dict(profile.backing)
+        if backing is None:
+            return None
+        return {"kind": "cached", "backing": backing,
+                "cache": profile_to_dict(profile.cache),
+                "hit_rate": profile.hit_rate, "name": profile.name}
+    return None
+
+
+def profile_from_dict(d: dict | None) -> StorageProfile | None:
+    if not isinstance(d, dict):
+        return None
+    try:
+        kind = d["kind"]
+        if kind == "affine":
+            return AffineProfile(d["latency"], d["bandwidth"],
+                                 name=d.get("name", "affine"))
+        if kind == "affine_uniform":
+            return AffineUniformProfile(
+                d["latency_lo"], d["latency_hi"],
+                d["bandwidth_lo"], d["bandwidth_hi"],
+                name=d.get("name", "affine-uniform"))
+        if kind == "measured":
+            return MeasuredProfile(tuple(d["deltas"]), tuple(d["seconds"]),
+                                   name=d.get("name", "measured"))
+        if kind == "cached":
+            backing = profile_from_dict(d["backing"])
+            if backing is None:
+                return None
+            return CachedProfile(backing=backing,
+                                 cache=profile_from_dict(d.get("cache")),
+                                 hit_rate=d.get("hit_rate", 0.0),
+                                 name=d.get("name", "cached"))
+    except (KeyError, TypeError, ValueError):
+        return None
+    return None
+
+
+# ---------------------------------------------------------------------------
 # Named profiles.
 #   Paper §2.1 example tiers + paper §7.1 Azure tiers + TPU-system tiers
 #   (the hardware adaptation: same T(Δ) abstraction, constants per tier).

@@ -161,10 +161,14 @@ class IndexService:
 
     Parameters
     ----------
-    path:            index file written by :func:`repro.core.write_index`.
+    path:            index file written by :func:`repro.core.write_index`
+                     (usually via ``repro.api.Index.save``).
     profile:         storage tier of the file (name in ``PROFILES`` or a
                      :class:`StorageProfile`); drives ``modeled_seconds``.
     cache_bytes:     per-tier capacities of the block cache, hottest first.
+                     ``None`` (default) uses the ``cache_bytes`` of the
+                     TuneSpec recorded in the file meta when present, else
+                     a single 1 MiB tier.
     cache_profile:   tier the cache lives in (modeled hit cost; host DRAM).
     page_bytes:      cache unit; defaults to the file's paged layout, or
                      ``DEFAULT_PAGE_BYTES`` for densely-packed files.
@@ -177,17 +181,21 @@ class IndexService:
     """
 
     def __init__(self, path: str, *, profile="azure_ssd",
-                 cache_bytes=(1 << 20,), cache_profile="host_dram",
+                 cache_bytes=None, cache_profile="host_dram",
                  page_bytes: int | None = None, resident_layers: int = 1,
                  use_device: bool = False, interpret: bool = True,
                  coalesce_gap: int = 0):
         self.fd = os.open(path, os.O_RDONLY)
         self.meta = read_meta(self.fd)
+        self.tune_meta = self.meta.tune   # facade provenance (may be None)
         self.profile = PROFILES[profile] if isinstance(profile, str) else profile
         self.cache_profile = (PROFILES[cache_profile]
                               if isinstance(cache_profile, str) else cache_profile)
         self.page_bytes = int(self.meta.page_bytes or page_bytes
                               or DEFAULT_PAGE_BYTES)
+        if cache_bytes is None:     # spec-recorded cache config, then default
+            spec = (self.tune_meta or {}).get("spec") or {}
+            cache_bytes = tuple(spec.get("cache_bytes") or ()) or (1 << 20,)
         self.cache = TieredBlockCache(cache_bytes, self.page_bytes)
         self.coalesce_gap = int(coalesce_gap)
         self.interpret = interpret
@@ -407,6 +415,18 @@ class IndexService:
         hi = np.minimum(np.maximum(np.asarray(hi, dtype=np.int64), lo + 1),
                         self.meta.data_size)
         return np.stack([lo, hi], axis=1)
+
+    @property
+    def tune_spec(self):
+        """The TuneSpec recorded by ``repro.api.Index.save`` (or None)."""
+        spec = (self.tune_meta or {}).get("spec")
+        if spec is None:
+            return None
+        from repro.api.spec import TuneSpec   # lazy: api sits above serve
+        try:
+            return TuneSpec.from_dict(spec)
+        except (TypeError, ValueError):
+            return None   # forward-version provenance: serve anyway
 
     def cached_profile(self, backing: StorageProfile | None = None) -> CachedProfile:
         """Effective ``T(Δ)`` at the observed hit rate — hand this back to

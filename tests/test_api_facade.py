@@ -1,0 +1,394 @@
+"""repro.api facade: TuneSpec JSON round-trip, registry liveness in Alg. 2,
+Index lifecycle (tune → save → open → serve) parity, strategy protocol,
+deprecation shims."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (BUILDER_FAMILIES, Index, SEARCH_STRATEGIES, TuneSpec,
+                       register_builder, register_strategy)
+from repro.core import (KeyPositions, PROFILES, airtune, beam_search,
+                        brute_force, build_eband, load_index, lookup_batch,
+                        make_builders, verify_lookup)
+from repro.core.lookup import lookup_file
+from repro.core.serialize import lookup_serialized
+
+from conftest import make_keys
+
+SPEC = TuneSpec(lam_high=2.0**16, lam_base=4.0, k=3, max_layers=4,
+                page_bytes=1024, cache_bytes=(64 << 10, 256 << 10))
+
+
+def _data(kind="gmm", n=20_000, seed=3):
+    return KeyPositions.fixed_record(make_keys(kind, n, seed), 16)
+
+
+# ---------------------------------------------------------------------------
+# TuneSpec: declarative, JSON-round-trippable, registry-validated
+# ---------------------------------------------------------------------------
+def test_tunespec_json_roundtrip():
+    for spec in (TuneSpec(), SPEC,
+                 TuneSpec(families=("gband",), strategy="beam", k=7)):
+        assert TuneSpec.from_json(spec.to_json()) == spec
+        assert TuneSpec.from_dict(spec.to_dict()) == spec
+        # the wire form is plain JSON (usable from configs / other languages)
+        d = json.loads(spec.to_json())
+        assert isinstance(d["families"], list)
+
+
+def test_tunespec_rejects_unknown_fields_and_names():
+    with pytest.raises(ValueError, match="unknown TuneSpec fields"):
+        TuneSpec.from_dict({"lambda_low": 17})
+    err = pytest.raises(KeyError, TuneSpec(families=("gstep", "nope")).validate)
+    assert "nope" in str(err.value) and "gstep" in str(err.value), \
+        "KeyError must list registered builder families"
+    err = pytest.raises(KeyError, TuneSpec(strategy="nope").validate)
+    assert "airtune" in str(err.value) and "beam" in str(err.value), \
+        "KeyError must list registered strategies"
+
+
+def test_tunespec_validate_raises_on_bad_numbers():
+    # real ValueErrors (not asserts): these must hold under `python -O` too
+    with pytest.raises(ValueError, match="grid"):
+        TuneSpec(lam_base=0.5).validate()
+    with pytest.raises(ValueError, match="knobs"):
+        TuneSpec(k=0).validate()
+    with pytest.raises(ValueError, match="family"):
+        TuneSpec(families=()).validate()
+
+
+def test_open_tolerates_forward_version_spec(tmp_path):
+    """Provenance from a newer version (unknown TuneSpec fields) must not
+    make a readable file unopenable — spec degrades to None, lookups work."""
+    from repro.core import write_index
+    from repro.serve.index_service import demo_serving_design
+    D = _data(n=5_000)
+    path = str(tmp_path / "fwd.air")
+    future_spec = dict(TuneSpec().to_dict(), from_the_future=True)
+    write_index(path, demo_serving_design(D), page_bytes=1024,
+                tune={"spec": future_spec, "strategy": "airtune",
+                      "cost": 1e-3, "profile": "azure_ssd"})
+    with Index.open(path) as idx:
+        assert idx.spec is None
+        assert idx.file_meta.tune["spec"]["from_the_future"] is True
+        qs = np.random.default_rng(3).choice(D.keys, 50)
+        assert np.array_equal(idx.lookup(qs), lookup_serialized(path, None, qs))
+        with idx.serve(profile="azure_ssd") as svc:
+            assert svc.tune_spec is None       # degrades the same way
+            assert np.array_equal(svc.lookup(qs)[:, 0], idx.lookup(qs)[:, 0])
+
+
+def test_measured_profile_survives_save_open_serve(tmp_path):
+    """A custom (non-named) T(Δ) must be restored on open, so serve() models
+    the tuned-for tier — not a silent azure_ssd fallback."""
+    from repro.core import MeasuredProfile
+    prof = MeasuredProfile(deltas=(256, 4096, 1 << 20),
+                           seconds=(1e-4, 2e-4, 2e-3), name="bench-tier")
+    D = _data(n=5_000)
+    path = str(tmp_path / "measured.air")
+    Index.tune(D, prof, SPEC).save(path)
+    re = Index.open(path)
+    assert re.profile == prof            # full parameters, not just the name
+    with re.serve() as svc:
+        assert svc.profile == prof
+    # CachedProfile (nested) round-trips too
+    from repro.core import CachedProfile, profile_from_dict, profile_to_dict
+    cp = CachedProfile(backing=prof, cache=PROFILES["host_dram"],
+                       hit_rate=0.75)
+    assert profile_from_dict(profile_to_dict(cp)) == cp
+
+
+def test_describe_never_triggers_the_search():
+    idx = Index.tune(_data(n=2_000), "azure_ssd", SPEC)
+    assert "unbuilt" in idx.describe()
+    assert idx._result is None           # formatting stayed side-effect-free
+    idx.build()
+    assert "[airtune]" in idx.describe()
+
+
+def test_unknown_profile_lists_names():
+    with pytest.raises(KeyError, match="azure_ssd"):
+        Index.tune(_data(n=100), "not_a_tier")
+
+
+# ---------------------------------------------------------------------------
+# Index lifecycle: tune → save → open → serve round-trip (acceptance gate)
+# ---------------------------------------------------------------------------
+def test_lifecycle_roundtrip_bit_identical(tmp_path):
+    D = _data()
+    qs = np.random.default_rng(0).choice(D.keys, 500)
+    path = str(tmp_path / "index.air")
+
+    idx = Index.tune(D, "azure_ssd", SPEC)
+    idx.save(path)
+    assert idx.design.n_layers >= 1
+    mem = lookup_batch(idx.design, qs)
+    assert np.array_equal(idx.lookup(qs)[:, 0], mem.lo)
+
+    reopened = Index.open(path)
+    # the file remembers how it was tuned
+    assert reopened.spec == SPEC
+    assert reopened.file_meta.tune["strategy"] == "airtune"
+    assert reopened.file_meta.tune["profile"] == "azure_ssd"
+    assert reopened.file_meta.page_bytes == SPEC.page_bytes
+
+    # served lookups are bit-identical to the in-memory design's
+    with reopened.serve() as svc:
+        assert svc.profile == PROFILES["azure_ssd"]    # tuned-for default
+        assert svc.cache.cap_pages == [c // svc.page_bytes
+                                       for c in SPEC.cache_bytes]
+        got = svc.lookup(qs)
+    assert np.array_equal(got[:, 0], mem.lo)
+    assert np.array_equal(got[:, 1], mem.hi)
+    # ... and so is the facade's own disk walk
+    with Index.open(path) as disk:
+        assert np.array_equal(disk.lookup(qs), got)
+
+    # materialization with data reproduces a valid design
+    assert verify_lookup(Index.open(path, data=D).design, qs)
+
+
+def test_disk_opened_index_never_resarches(tmp_path):
+    """Opening a file must not silently re-run the search: the file IS the
+    design, and cost/strategy come from the recorded provenance."""
+    from repro.serve.index_service import demo_serving_design
+    D = _data(n=10_000)
+    idx = Index.from_design(demo_serving_design(D), spec=SPEC,
+                            profile="azure_ssd")
+    path = str(tmp_path / "d.air")
+    idx.save(path)
+
+    re = Index.open(path, data=D)
+    assert re.design.n_layers == 3                    # the file's design...
+    assert re.cost == pytest.approx(idx.cost)         # ...and its recorded cost
+    assert re.design.n_layers == 3                    # still, after .cost
+    assert re.build() is re                           # no-op, not a search
+    with pytest.raises(ValueError, match="opened from disk"):
+        _ = re.result
+    with pytest.raises(ValueError, match="opened from disk"):
+        re.save(str(tmp_path / "clobber.air"))
+    assert "strategy=manual" in re.describe()
+    # an explicit re-search is the retune() call, never an attribute access
+    fresh = re.retune("azure_ssd", data=D)
+    assert fresh.path is None and fresh.result.strategy == "airtune"
+
+
+def test_save_without_profile_writes_strict_json(tmp_path):
+    """An unknown cost (from_design without profile) must not leak NaN into
+    the on-disk JSON header."""
+    from repro.serve.index_service import demo_serving_design
+    D = _data(n=5_000)
+    path = str(tmp_path / "nan.air")
+    Index.from_design(demo_serving_design(D), spec=SPEC).save(path)
+    import os
+    with open(path, "rb") as f:
+        head = f.read(16)
+        hlen = int(np.frombuffer(head, dtype="<u8")[1])
+        raw = f.read(hlen).decode()
+    def _no_const(x):
+        raise ValueError(f"non-strict JSON constant {x}")
+    meta = json.loads(raw, parse_constant=_no_const)   # strict parse
+    assert meta["tune"]["cost"] is None
+    assert np.isnan(Index.open(path).cost)
+    assert os.path.getsize(path) > hlen
+
+
+def test_save_page_bytes_override_recorded_in_spec(tmp_path):
+    """An explicit save(page_bytes=...) must be reflected in the recorded
+    provenance — the spec describes the file as written."""
+    idx = Index.tune(_data(n=2_000), "azure_ssd", SPEC)
+    path = str(tmp_path / "o.air")
+    idx.save(path, page_bytes=2048)
+    re = Index.open(path)
+    assert re.file_meta.page_bytes == 2048
+    assert re.spec.page_bytes == 2048
+    assert re.spec == SPEC.replace(page_bytes=2048)
+
+
+def test_disk_opened_lookup_uses_partial_reads(tmp_path):
+    """data= on open enables materialization/retune, but lookups on a
+    disk-opened Index stay on the partial-read walk."""
+    D = _data(n=5_000)
+    path = str(tmp_path / "pr.air")
+    Index.tune(D, "azure_ssd", SPEC).save(path)
+    qs = np.random.default_rng(4).choice(D.keys, 100)
+    with Index.open(path, data=D) as idx:
+        got = idx.lookup(qs)
+        assert idx._handle is not None          # SerializedIndex walk ran
+        assert idx._disk_design is None         # no full materialization
+    assert np.array_equal(got, lookup_serialized(path, None, qs))
+
+
+def test_open_without_data_cannot_materialize(tmp_path):
+    path = str(tmp_path / "i.air")
+    Index.tune(_data(n=2_000), "azure_ssd", SPEC).save(path)
+    with pytest.raises(ValueError, match="data"):
+        _ = Index.open(path).design
+
+
+def test_retune_uses_recorded_spec():
+    D = _data(n=10_000)
+    idx = Index.tune(D, "azure_ssd", SPEC).build()
+    re = idx.retune("azure_nfs")
+    assert re.spec == SPEC
+    assert re.profile is PROFILES["azure_nfs"]
+    assert verify_lookup(re.design, D.keys[:100])
+
+
+def test_from_design_wraps_manual_stacks(tmp_path):
+    from repro.serve.index_service import demo_serving_design
+    D = _data(n=15_000)
+    idx = Index.from_design(demo_serving_design(D), spec=SPEC,
+                            profile="azure_ssd")
+    assert idx.result.strategy == "manual"
+    assert np.isfinite(idx.cost)
+    path = str(tmp_path / "m.air")
+    idx.save(path)
+    qs = np.random.default_rng(1).choice(D.keys, 200)
+    assert np.array_equal(Index.open(path).lookup(qs),
+                          lookup_serialized(path, None, qs))
+
+
+# ---------------------------------------------------------------------------
+# registry: third-party families participate in the Alg. 2 search
+# ---------------------------------------------------------------------------
+def test_registered_builder_selected_when_dominating():
+    # perfectly linear data: one global band node (40 B, ~20 B windows)
+    # strictly beats every gstep candidate (λ ≥ 256 B windows)
+    D = KeyPositions.fixed_record(
+        np.arange(1, 20_001, dtype=np.uint64), 16)
+
+    @register_builder("oracleband")
+    def _oracle(Dc, lam, p):
+        return build_eband(Dc, 2.0**60)      # single band over everything
+
+    try:
+        with_oracle = Index.tune(
+            D, "azure_ssd", SPEC, families=("gstep", "oracleband")).result
+        gstep_only = Index.tune(
+            D, "azure_ssd", SPEC, families=("gstep",)).result
+        assert any(n.startswith("oracleband")
+                   for n in with_oracle.builder_names), with_oracle
+        assert with_oracle.cost < gstep_only.cost
+        assert verify_lookup(with_oracle.design, D.keys[::37])
+    finally:
+        BUILDER_FAMILIES.unregister("oracleband")
+
+
+def test_registry_rejects_duplicate_and_lists_names():
+    assert set(BUILDER_FAMILIES.names()) >= {"gstep", "gband", "eband"}
+    assert set(SEARCH_STRATEGIES.names()) >= {"airtune", "beam", "brute_force"}
+    with pytest.raises(ValueError, match="already registered"):
+        register_builder("gstep", lambda D, lam, p: None)
+    with pytest.raises(KeyError, match="gband"):
+        make_builders(kinds=("gstep", "missing_family"))
+
+
+def test_registered_strategy_resolves_through_facade():
+    calls = []
+
+    @register_strategy("unit_probe")
+    def _probe(D, profile, builders=None, *, k=5, max_layers=12):
+        calls.append((k, max_layers))
+        return airtune(D, profile, builders, k=k, max_layers=max_layers)
+
+    try:
+        idx = Index.tune(_data(n=2_000), "azure_ssd", SPEC,
+                         strategy="unit_probe").build()
+        assert calls == [(SPEC.k, SPEC.max_layers)]
+        assert idx.result.strategy == "airtune"   # probe delegated
+    finally:
+        SEARCH_STRATEGIES.unregister("unit_probe")
+
+
+# ---------------------------------------------------------------------------
+# search strategies: shared protocol, stats, describe()
+# ---------------------------------------------------------------------------
+def test_beam_matches_brute_force_with_wide_beam():
+    D = _data(n=3_000)
+    builders = make_builders(lam_low=2**10, lam_high=2**16, base=8.0)
+    for pname in ("azure_ssd", "azure_nfs"):
+        prof = PROFILES[pname]
+        bf = brute_force(D, prof, builders, max_layers=3)
+        bm = beam_search(D, prof, builders, k=10_000, max_layers=3)
+        assert bm.cost == pytest.approx(bf.cost, rel=1e-9)
+        narrow = beam_search(D, prof, builders, k=2, max_layers=3)
+        assert narrow.cost <= float(prof(D.size_bytes)) * (1 + 1e-12)
+        assert verify_lookup(narrow.design, D.keys[::23])
+
+
+def test_describe_reports_strategy_name():
+    D = _data(n=3_000)
+    builders = make_builders(lam_low=2**10, lam_high=2**16, base=8.0)
+    prof = PROFILES["azure_ssd"]
+    assert "[airtune]" in airtune(D, prof, builders, k=2).describe()
+    assert "[beam]" in beam_search(D, prof, builders, k=2).describe()
+    assert "[brute_force]" in brute_force(D, prof, builders,
+                                          max_layers=2).describe()
+
+
+def test_brute_force_populates_candidates_pruned():
+    # 2 pairs of 16 B: any band layer (40 B/node) cannot shrink the 32 B
+    # collection, so the termination safeguard must discard (and count) it
+    D = KeyPositions.fixed_record(np.asarray([10, 20], dtype=np.uint64), 16)
+    builders = make_builders(lam_low=2**8, lam_high=2**8, kinds=("eband",))
+    res = brute_force(D, PROFILES["azure_ssd"], builders, max_layers=2)
+    assert res.stats.candidates_pruned > 0
+    assert res.design.n_layers == 0
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn, and return bit-identical results to the facade
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def saved(tmp_path_factory):
+    D = _data(n=8_000, seed=9)
+    path = str(tmp_path_factory.mktemp("shim") / "index.air")
+    idx = Index.tune(D, "azure_ssd", SPEC).save(path)
+    qs = np.random.default_rng(2).choice(D.keys, 200)
+    return D, idx, path, qs
+
+
+def test_load_index_shim_warns_and_matches(saved):
+    D, idx, path, qs = saved
+    with pytest.warns(DeprecationWarning, match="Index.open"):
+        design = load_index(path, D)
+    facade = Index.open(path, data=D).design
+    a, b = lookup_batch(design, qs), lookup_batch(facade, qs)
+    assert np.array_equal(a.lo, b.lo) and np.array_equal(a.hi, b.hi)
+
+
+def test_lookup_file_shim_warns_and_matches(saved):
+    D, idx, path, qs = saved
+    with pytest.warns(DeprecationWarning, match="Index.open"):
+        got = lookup_file(path, None, qs)
+    with Index.open(path) as facade:
+        assert np.array_equal(got, facade.lookup(qs))
+
+
+def test_internal_shim_use_is_hard_error():
+    """Shims are for callers, not for repro-internal code (CI gate)."""
+    import types
+
+    from repro.core import deprecation
+
+    # a function whose __globals__ place it inside the repro package
+    mod = types.ModuleType("repro._fake_internal")
+    mod.warn_deprecated = deprecation.warn_deprecated
+    exec("def shim():\n    warn_deprecated('nope', stacklevel=2)",
+         mod.__dict__)
+    with pytest.raises(AssertionError, match="within repro"):
+        mod.shim()
+    # the same call from this (non-repro) test module only warns
+    with pytest.warns(DeprecationWarning, match="nope"):
+        deprecation.warn_deprecated("nope", stacklevel=2)
+
+
+# ---------------------------------------------------------------------------
+# unsaved indexes refuse to serve with a clear message
+# ---------------------------------------------------------------------------
+def test_serve_requires_saved_file():
+    idx = Index.tune(_data(n=1_000), "azure_ssd", SPEC)
+    with pytest.raises(ValueError, match="save"):
+        idx.serve()

@@ -2,8 +2,9 @@
 import numpy as np
 import pytest
 
+from repro.api import Index, TuneSpec
 from repro.core import (KeyPositions, PROFILES, SerializedIndex, airtune,
-                        load_index, make_builders, verify_lookup, write_index)
+                        make_builders, verify_lookup, write_index)
 
 from conftest import make_keys
 
@@ -29,8 +30,26 @@ def test_roundtrip_predictions_match(built):
     D, design, path, meta = built
     rng = np.random.default_rng(0)
     qs = rng.choice(D.keys, 500)
-    loaded = load_index(path, D)
+    loaded = Index.open(path, data=D).design
     assert verify_lookup(loaded, qs)
+
+
+def test_legacy_file_opens_without_spec(built):
+    """Files written by the raw engine (no facade) have no provenance."""
+    D, design, path, meta = built
+    idx = Index.open(path)
+    assert idx.spec is None and idx.file_meta.tune is None
+
+
+def test_facade_spec_survives_the_fixpoint_header(tmp_path):
+    """write_index re-encodes the JSON header until offsets stabilize; the
+    tune provenance must survive that and round-trip exactly."""
+    D = KeyPositions.fixed_record(make_keys("gmm", 5_000, seed=2), 16)
+    spec = TuneSpec(lam_high=2.0**14, lam_base=4.0, k=2, max_layers=3,
+                    page_bytes=512, cache_bytes=(32 << 10,))
+    path = str(tmp_path / "p.air")
+    Index.tune(D, "azure_nfs", spec).save(path)
+    assert Index.open(path).spec == spec
 
 
 def test_partial_read_lookup_valid_and_partial(built):
