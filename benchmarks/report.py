@@ -1,4 +1,4 @@
-"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables."""
+"""Generate the dry-run and roofline markdown report tables."""
 from __future__ import annotations
 
 import json

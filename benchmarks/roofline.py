@@ -1,4 +1,5 @@
-"""Roofline terms from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline terms from the dry-run artifacts (markdown tables rendered
+by benchmarks/report.py; see README "Layout").
 
 Per (arch × shape × mesh) cell from dryrun_results.jsonl:
 

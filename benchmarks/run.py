@@ -261,6 +261,18 @@ def bench_tune():
     except ImportError:                # invoked as `python benchmarks/run.py`
         import tune_bench
     results = tune_bench.run_tune_bench()
+    # compact per-strategy trend lines — the numbers to eyeball across PRs
+    for strat, a in results.get("per_strategy", {}).items():
+        print(f"# tune-trend {strat}: wall={a['wall_s']:.2f}s "
+              f"(legacy {a['legacy_wall_s']:.2f}s) "
+              f"built={a['layers_built']} reused={a['layers_reused']} "
+              f"scored={a['scored']} sweeps={a['sweeps']} "
+              f"work_reduction={a['work_reduction']:.1f}x", flush=True)
+    sb = results.get("scoring_backends", {})
+    fmt = lambda v: f"{v:.0f}us" if isinstance(v, (int, float)) else "n/a"
+    print(f"# tune-trend scoring: numpy={fmt(sb.get('numpy_us'))} "
+          f"jnp={fmt(sb.get('jnp_us'))} "
+          f"pallas_interpret={fmt(sb.get('pallas_interpret_us'))}", flush=True)
     if TUNE_JSON_PATH:
         import json
         with open(TUNE_JSON_PATH, "w") as f:

@@ -14,6 +14,9 @@ Engine surface:
   IndexDesign / expected_latency    — ``L_SM`` (Eq. 5/6)
   step_index_complexity / tau_hat   — τ̂ (Eq. 12)
   airtune / brute_force / beam_search — SearchStrategy implementations (Alg. 2)
+  SweepEngine / batched_mean_read_costs — fused λ-grid candidate sweep
+                                      (multi-λ builds, batched scoring,
+                                      vertex memoization; see sweep.py)
   lookup_batch / verify_lookup      — batched Alg. 1
   descend_*_layer / coalesce_ranges — shared per-layer descent + read planner
   write_index / SerializedIndex     — on-disk format (optionally paged) +
@@ -28,15 +31,19 @@ remain as deprecation shims onto the facade.
 from .airtune import (SearchStrategy, TuneResult, TuneStats, airtune,
                       beam_search, brute_force)
 from .builders import (DEFAULT_FAMILIES, LayerBuilder, build_eband,
-                       build_gband, build_gstep, build_partitioned,
+                       build_eband_multi, build_gband, build_gband_multi,
+                       build_gstep, build_gstep_multi, build_partitioned,
                        greedy_partition, make_builders, merge_layers)
-from .registry import (BUILDER_FAMILIES, SEARCH_STRATEGIES, Registry,
-                       register_builder, register_strategy)
+from .registry import (BUILDER_FAMILIES, MULTI_LAM_FAMILIES,
+                       SEARCH_STRATEGIES, Registry, register_builder,
+                       register_multi_lam_builder, register_strategy)
+from .sweep import SCORE_SAMPLE, Candidate, SweepEngine
 from .complexity import (S_STEP, step_index_complexity,
                          step_index_complexity_layers, tau_hat)
 from .keyset import KeyPositions
-from .latency import (IndexDesign, expected_latency, ideal_latency_with_index,
-                      latency_breakdown, mean_read_volume)
+from .latency import (IndexDesign, batched_mean_read_costs, expected_latency,
+                      ideal_latency_with_index, latency_breakdown,
+                      mean_read_volume)
 from .descent import (coalesce_ranges, covering_index, descend_band_layer,
                       descend_step_layer)
 from .lookup import LookupResult, last_mile_search, lookup_batch, verify_lookup
@@ -47,8 +54,8 @@ from .serialize import (IndexFileMeta, SerializedIndex, load_index,
                         write_index)
 from .storage import (AffineProfile, AffineUniformProfile, CachedProfile,
                       MeasuredProfile, PROFILES, StorageProfile,
-                      profile_from_dict, profile_local_storage,
-                      profile_to_dict)
+                      affine_coefficients, profile_from_dict,
+                      profile_local_storage, profile_to_dict)
 from . import baselines  # noqa: F401
 
 __all__ = [k for k in dir() if not k.startswith("_")]

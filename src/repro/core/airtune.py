@@ -20,6 +20,13 @@ widths constant per node, and piece/node boundaries are drawn from the
 collection's keys, so evaluating widths at outline keys with aggregated
 weights equals evaluating at the original query keys (see latency.py).
 
+Candidate expansion runs through the fused sweep engine
+(:class:`repro.core.sweep.SweepEngine`): per vertex, every family's
+λ-column builds in one multi-λ call, all candidates score in one batched
+``E[T(Δ)]`` evaluation, and expansions are memoized by collection
+fingerprint.  ``sweep=False`` keeps the original per-builder loop as a
+bit-identical reference/escape hatch (tests certify equality).
+
 Three :class:`SearchStrategy` implementations share this machinery and are
 registered in :data:`repro.core.registry.SEARCH_STRATEGIES` (the public
 facade ``repro.api`` resolves strategy *names* through that registry):
@@ -45,14 +52,19 @@ from .latency import IndexDesign, expected_latency, ideal_latency_with_index
 from .nodes import Layer, outline
 from .registry import register_strategy
 from .storage import StorageProfile
+from .sweep import SCORE_SAMPLE, LayerCache, SweepEngine
 
 
 @dataclasses.dataclass
 class TuneStats:
     vertices_visited: int = 0
-    layers_built: int = 0
+    layers_built: int = 0        # candidate layers actually constructed
+    layers_reused: int = 0       # builds avoided: λ-dedup + vertex memo hits
     candidates_pruned: int = 0   # discarded without recursion: non-shrinking
     #                              outlines + beyond-top-k (guided searches)
+    candidates_scored: int = 0   # E[T(Δ)] evaluations performed (est + exact)
+    sweeps: int = 0              # fused children-of-vertex expansions
+    sweep_seconds: float = 0.0   # wall-clock inside those expansions
     wall_seconds: float = 0.0
 
 
@@ -69,6 +81,7 @@ class TuneResult:
                 f"cost={self.cost * 1e6:.1f}us  "
                 f"(visited={self.stats.vertices_visited}, "
                 f"built={self.stats.layers_built}, "
+                f"reused={self.stats.layers_reused}, "
                 f"pruned={self.stats.candidates_pruned}, "
                 f"{self.stats.wall_seconds:.2f}s)")
 
@@ -80,16 +93,16 @@ class SearchStrategy(Protocol):
     strategy's width/pruning knob (ignored by exhaustive strategies) and
     ``max_layers`` bounds the index depth.  Implementations must return a
     :class:`TuneResult` whose ``cost`` agrees with the Eq. (6) evaluator
-    on the returned design.
+    on the returned design.  The built-in strategies additionally accept
+    ``sweep`` (False = legacy per-builder loop), ``score_backend``
+    (``"numpy"`` default | ``"jnp"`` | ``"pallas"`` ranking fast paths)
+    and ``layer_cache`` (a shared :class:`repro.core.sweep.LayerCache`
+    for cross-tune build reuse); third-party strategies need not.
     """
 
     def __call__(self, D: KeyPositions, profile: StorageProfile,
                  builders: list[LayerBuilder] | None = None, *,
                  k: int = 5, max_layers: int = 12) -> TuneResult: ...
-
-
-SCORE_SAMPLE = 65536   # pairs used for candidate *ranking* (§5.3); the
-                       # selected candidates' costs are always exact
 
 
 def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
@@ -99,7 +112,8 @@ def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
 
     ``sample=True``: strided subsample for ranking-only estimates — exact
     evaluation of all |𝓕| candidates cost O(|𝓕|·n·log) per vertex and
-    dominated tuning time (EXPERIMENTS.md §Perf, core iteration 2).
+    dominated tuning time (see the batched scorers in latency.py/sweep.py
+    and the per-PR trend in BENCH_tune.json).
     """
     if sample and D.n > 2 * SCORE_SAMPLE:
         stride = D.n // SCORE_SAMPLE
@@ -114,14 +128,23 @@ def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
 @register_strategy("airtune")
 def airtune(D: KeyPositions, profile: StorageProfile,
             builders: list[LayerBuilder] | None = None, *,
-            k: int = 5, max_layers: int = 12) -> TuneResult:
+            k: int = 5, max_layers: int = 12, sweep: bool = True,
+            score_backend: str = "numpy",
+            layer_cache: LayerCache | None = None) -> TuneResult:
     """Find Θ* ≈ argmin_Θ L_SM(X; Θ, T) (Table 3) via Alg. 2."""
     if builders is None:
         builders = make_builders()
     stats = TuneStats()
     t0 = time.perf_counter()
-    layers, names, cost = _airtune_rec(D, profile, builders, k, max_layers,
-                                       stats)
+    if sweep:
+        engine = SweepEngine(builders, profile, stats,
+                             score_backend=score_backend,
+                             layer_cache=layer_cache)
+        layers, names, cost = _airtune_rec_sweep(D, profile, engine, k,
+                                                 max_layers, stats)
+    else:
+        layers, names, cost = _airtune_rec(D, profile, builders, k,
+                                           max_layers, stats)
     stats.wall_seconds = time.perf_counter() - t0
     design = IndexDesign(layers=tuple(layers), data=D)
     # the recursion's incremental cost must agree with the Eq. (6) evaluator
@@ -129,9 +152,9 @@ def airtune(D: KeyPositions, profile: StorageProfile,
                       strategy="airtune", builder_names=tuple(names))
 
 
-def _airtune_rec(D: KeyPositions, profile: StorageProfile,
-                 builders: list[LayerBuilder], k: int, depth_left: int,
-                 stats: TuneStats) -> tuple[list, list, float]:
+def _airtune_rec_sweep(D: KeyPositions, profile: StorageProfile,
+                       engine: SweepEngine, k: int, depth_left: int,
+                       stats: TuneStats) -> tuple[list, list, float]:
     stats.vertices_visited += 1
     no_index_cost = float(profile(D.size_bytes))   # L_SM(D; (), T)
 
@@ -140,9 +163,40 @@ def _airtune_rec(D: KeyPositions, profile: StorageProfile,
             or D.n <= 1:
         return [], [], no_index_cost
 
-    # explore all outgoing edges: build every candidate next layer (§5.2).
-    # ranking uses sampled read-cost estimates; the k selected candidates
-    # are re-scored exactly, so the returned cost is still exactly Eq. (6)
+    # one fused sweep builds + scores every outgoing edge (§5.2/§5.3);
+    # ranking uses sampled estimates, the k selected candidates are
+    # re-scored exactly, so the returned cost is still exactly Eq. (6)
+    candidates = engine.children(D)
+    ranked = sorted(candidates, key=lambda c: c.score)  # stable: ties keep
+    #                                                     builder order
+    stats.candidates_pruned += max(len(ranked) - k, 0)
+    top = ranked[:k]
+    exact = engine.exact_read_costs(D, top) if top else []
+    best_layers, best_names, best_cost = [], [], no_index_cost
+    for cand, read_cost in zip(top, exact):
+        upper_layers, upper_names, upper_cost = _airtune_rec_sweep(
+            cand.outline, profile, engine, k, depth_left - 1, stats)
+        total = read_cost + upper_cost       # V(D) recursion (Alg. 2 line 11)
+        if total < best_cost:
+            best_cost = total
+            best_layers = [cand.layer] + upper_layers
+            best_names = [cand.name] + upper_names
+    return best_layers, best_names, best_cost
+
+
+def _airtune_rec(D: KeyPositions, profile: StorageProfile,
+                 builders: list[LayerBuilder], k: int, depth_left: int,
+                 stats: TuneStats) -> tuple[list, list, float]:
+    """Legacy per-builder loop (``sweep=False``) — the sweep engine's
+    bit-identical reference; kept as the escape hatch and the baseline
+    the tuning benchmark measures reductions against."""
+    stats.vertices_visited += 1
+    no_index_cost = float(profile(D.size_bytes))   # L_SM(D; (), T)
+
+    if no_index_cost < ideal_latency_with_index(profile) or depth_left == 0 \
+            or D.n <= 1:
+        return [], [], no_index_cost
+
     candidates = []
     for F in builders:
         layer = F(D)
@@ -153,6 +207,7 @@ def _airtune_rec(D: KeyPositions, profile: StorageProfile,
             stats.candidates_pruned += 1
             continue
         est_cost = _mean_layer_read_cost(layer, D, profile, sample=True)
+        stats.candidates_scored += 1
         score = tau_hat(D_next, profile) + est_cost         # Eq. (9)
         candidates.append((score, F.name, layer, D_next))
 
@@ -162,6 +217,7 @@ def _airtune_rec(D: KeyPositions, profile: StorageProfile,
     best_layers, best_names, best_cost = [], [], no_index_cost
     for score, fname, layer, D_next in candidates[:k]:
         read_cost = _mean_layer_read_cost(layer, D, profile)   # exact
+        stats.candidates_scored += 1
         upper_layers, upper_names, upper_cost = _airtune_rec(
             D_next, profile, builders, k, depth_left - 1, stats)
         total = read_cost + upper_cost       # V(D) recursion (Alg. 2 line 11)
@@ -175,7 +231,9 @@ def _airtune_rec(D: KeyPositions, profile: StorageProfile,
 @register_strategy("brute_force")
 def brute_force(D: KeyPositions, profile: StorageProfile,
                 builders: list[LayerBuilder] | None = None, *,
-                k: int = 0, max_layers: int = 4) -> TuneResult:
+                k: int = 0, max_layers: int = 4, sweep: bool = True,
+                score_backend: str = "numpy",
+                layer_cache: LayerCache | None = None) -> TuneResult:
     """Exhaustive reference search (no top-k pruning, no τ̂ guidance).
 
     Exponential in |𝓕|; only usable on small inputs.  Tests use it to
@@ -183,12 +241,37 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
     ``k`` is accepted for :class:`SearchStrategy` compatibility and
     ignored — brute force never prunes by score; its
     ``candidates_pruned`` counts only edges discarded by the
-    strictly-shrinking termination safeguard.
+    strictly-shrinking termination safeguard.  The sweep engine's vertex
+    memoization pays off most here: exhaustive recursion re-reaches
+    identical collections constantly.
     """
     if builders is None:
         builders = make_builders()
     stats = TuneStats()
     t0 = time.perf_counter()
+    # rank_scores=False: brute force never ranks by Eq. (9), so the sweep
+    # skips the sampled Ê[T(Δ)]/τ̂ pass entirely
+    engine = SweepEngine(builders, profile, stats, score_backend=score_backend,
+                         rank_scores=False,
+                         layer_cache=layer_cache) if sweep else None
+
+    def rec_sweep(Dc: KeyPositions, depth_left: int) -> tuple[list, list, float]:
+        stats.vertices_visited += 1
+        best_layers, best_names = [], []
+        best_cost = float(profile(Dc.size_bytes))
+        if depth_left == 0 or Dc.n <= 1:
+            return best_layers, best_names, best_cost
+        cands = engine.children(Dc)
+        exact = engine.exact_read_costs(Dc, cands) if cands else []
+        for cand, read_cost in zip(cands, exact):
+            upper_layers, upper_names, upper_cost = rec_sweep(
+                cand.outline, depth_left - 1)
+            total = read_cost + upper_cost
+            if total < best_cost:
+                best_cost = total
+                best_layers = [cand.layer] + upper_layers
+                best_names = [cand.name] + upper_names
+        return best_layers, best_names, best_cost
 
     def rec(Dc: KeyPositions, depth_left: int) -> tuple[list, list, float]:
         stats.vertices_visited += 1
@@ -205,13 +288,14 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
                 continue
             upper_layers, upper_names, upper_cost = rec(D_next, depth_left - 1)
             total = _mean_layer_read_cost(layer, Dc, profile) + upper_cost
+            stats.candidates_scored += 1
             if total < best_cost:
                 best_cost = total
                 best_layers = [layer] + upper_layers
                 best_names = [F.name] + upper_names
         return best_layers, best_names, best_cost
 
-    layers, names, cost = rec(D, max_layers)
+    layers, names, cost = (rec_sweep if sweep else rec)(D, max_layers)
     stats.wall_seconds = time.perf_counter() - t0
     return TuneResult(design=IndexDesign(layers=tuple(layers), data=D),
                       cost=cost, stats=stats, strategy="brute_force",
@@ -221,7 +305,9 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
 @register_strategy("beam")
 def beam_search(D: KeyPositions, profile: StorageProfile,
                 builders: list[LayerBuilder] | None = None, *,
-                k: int = 5, max_layers: int = 12) -> TuneResult:
+                k: int = 5, max_layers: int = 12, sweep: bool = True,
+                score_backend: str = "numpy",
+                layer_cache: LayerCache | None = None) -> TuneResult:
     """Beam search over layer stacks: Alg. 2's graph, breadth-first.
 
     A frontier of at most ``k`` partial designs (bottom-up layer stacks)
@@ -243,6 +329,9 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
         builders = make_builders()
     stats = TuneStats()
     t0 = time.perf_counter()
+    engine = SweepEngine(builders, profile, stats,
+                         score_backend=score_backend,
+                         layer_cache=layer_cache) if sweep else None
     stats.vertices_visited += 1
     best_cost = float(profile(D.size_bytes))     # stop at the data layer
     best_layers: list = []
@@ -256,6 +345,13 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
             # stopping criterion, per state (Alg. 2 lines 1–2)
             if float(profile(Dc.size_bytes)) < ideal or Dc.n <= 1:
                 continue
+            if sweep:
+                for cand in engine.children(Dc):
+                    score = cost_so_far + cand.est_cost + cand.tau  # Eq. (9)
+                    children.append((score, cost_so_far, Dc, cand.layer,
+                                     cand.name, cand.outline, layers, names,
+                                     cand))
+                continue
             for F in builders:
                 layer = F(Dc)
                 stats.layers_built += 1
@@ -264,17 +360,22 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
                     stats.candidates_pruned += 1
                     continue
                 est = _mean_layer_read_cost(layer, Dc, profile, sample=True)
+                stats.candidates_scored += 1
                 score = cost_so_far + est + tau_hat(D_next, profile)  # Eq. (9)
                 children.append((score, cost_so_far, Dc, layer, F.name,
-                                 D_next, layers, names))
+                                 D_next, layers, names, None))
         if not children:
             break
         children.sort(key=lambda c: c[0])
         stats.candidates_pruned += max(len(children) - k, 0)
         frontier = []
         for (score, cost_so_far, Dc, layer, fname, D_next,
-             layers, names) in children[:k]:
-            read_cost = _mean_layer_read_cost(layer, Dc, profile)   # exact
+             layers, names, cand) in children[:k]:
+            if cand is not None:
+                read_cost = engine.exact_read_costs(Dc, [cand])[0]
+            else:
+                read_cost = _mean_layer_read_cost(layer, Dc, profile)  # exact
+                stats.candidates_scored += 1
             new_cost = cost_so_far + read_cost
             new_layers = layers + [layer]
             new_names = names + [fname]

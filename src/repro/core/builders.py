@@ -30,7 +30,8 @@ import numpy as np
 
 from .keyset import KeyPositions, POS_DTYPE
 from .nodes import BandLayer, Layer, StepLayer
-from .registry import BUILDER_FAMILIES, register_builder
+from .registry import (BUILDER_FAMILIES, register_builder,
+                       register_multi_lam_builder)
 
 _DELTA_SAFETY = 1.0  # absorbs float64 rounding so Eq.(1) holds bit-exactly
 
@@ -38,7 +39,8 @@ _DELTA_SAFETY = 1.0  # absorbs float64 rounding so Eq.(1) holds bit-exactly
 # ---------------------------------------------------------------------------
 # exact greedy partitioning, vectorized
 # ---------------------------------------------------------------------------
-def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float) -> np.ndarray:
+def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float,
+                     switch: int = 8192) -> np.ndarray:
     """Greedy grouping of sorted ranges: group starting at ``s`` absorbs
     items while ``hi[i] − lo[s] ≤ λ``.  Returns group start indices
     (including 0), i.e. the exact greedy boundaries of paper §A.1 (1).
@@ -48,6 +50,10 @@ def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float) -> np.ndarray:
     We extract the orbit with frontier doubling — repeatedly appending
     ``jump^{2^k}`` applied to the known prefix — in O(log G) vectorized
     rounds instead of G sequential steps.
+
+    ``switch`` is the scalar-walk → frontier-doubling crossover (in group
+    count); it only affects speed, never the boundaries — tests shrink it
+    to exercise the ``walk[:-1] + orbit`` seam on small inputs.
     """
     n = len(lo)
     if n == 0:
@@ -58,7 +64,6 @@ def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float) -> np.ndarray:
     # O(G log n) — beats the O(n log n) jump-table when groups are few.
     # hi is converted to float64 once: searchsorted with a float probe
     # would otherwise re-convert the whole array per call.
-    switch = 8192
     hi_f = hi if hi.dtype == np.float64 else hi.astype(np.float64)
     lo_f = lo if lo.dtype == np.float64 else lo.astype(np.float64)
     walk = [0]
@@ -104,10 +109,7 @@ def _check_disjoint(D: KeyPositions) -> None:
 # ---------------------------------------------------------------------------
 # GStep
 # ---------------------------------------------------------------------------
-def build_gstep(D: KeyPositions, p: int, lam: float) -> StepLayer:
-    """Greedy step builder (paper §A.1 (1)) — exact, fully vectorized."""
-    _check_disjoint(D)
-    starts = greedy_partition(D.lo_f, D.hi_f, lam)      # piece start indices
+def _gstep_from_starts(D: KeyPositions, starts: np.ndarray, p: int) -> StepLayer:
     piece_keys = D.keys[starts]
     piece_pos = np.empty(len(starts) + 1, dtype=POS_DTYPE)
     piece_pos[:-1] = D.lo[starts]
@@ -117,6 +119,13 @@ def build_gstep(D: KeyPositions, p: int, lam: float) -> StepLayer:
     node_off = np.append(node_off, P)
     return StepLayer(piece_keys=piece_keys, piece_pos=piece_pos,
                      node_piece_off=node_off)
+
+
+def build_gstep(D: KeyPositions, p: int, lam: float) -> StepLayer:
+    """Greedy step builder (paper §A.1 (1)) — exact, fully vectorized."""
+    _check_disjoint(D)
+    starts = greedy_partition(D.lo_f, D.hi_f, lam)      # piece start indices
+    return _gstep_from_starts(D, starts, p)
 
 
 # ---------------------------------------------------------------------------
@@ -149,6 +158,12 @@ def _fit_bands_for_groups(D: KeyPositions, starts: np.ndarray) -> BandLayer:
     )
 
 
+def _eband_starts(D: KeyPositions, lam: float) -> np.ndarray:
+    lam = max(float(lam), 1.0)
+    cell = ((D.lo_f - float(D.lo[0])) // lam).astype(np.int64)
+    return np.flatnonzero(np.diff(cell, prepend=cell[0] - 1))
+
+
 def build_eband(D: KeyPositions, lam: float) -> BandLayer:
     """Equal-position-range band builder (paper §A.1 (3)) — vectorized.
 
@@ -156,18 +171,10 @@ def build_eband(D: KeyPositions, lam: float) -> BandLayer:
     ranges"); worst-case group extent ≤ λ + max record size.
     """
     _check_disjoint(D)
-    lam = max(float(lam), 1.0)
-    cell = ((D.lo_f - float(D.lo[0])) // lam).astype(np.int64)
-    starts = np.flatnonzero(np.diff(cell, prepend=cell[0] - 1))
-    return _fit_bands_for_groups(D, starts)
+    return _fit_bands_for_groups(D, _eband_starts(D, lam))
 
 
-def build_gband(D: KeyPositions, lam: float) -> BandLayer:
-    """Greedy band builder (paper §A.1 (2)): extend each group while the
-    band width ``2δ`` stays ≤ λ.  Galloping + binary search per node with
-    vectorized feasibility, seeded by the previous group's size.
-    """
-    _check_disjoint(D)
+def _gband_starts(D: KeyPositions, lam: float) -> np.ndarray:
     n = D.n
     keys_f = D.keys_f
     lo_f = D.lo_f
@@ -212,7 +219,16 @@ def build_gband(D: KeyPositions, lam: float) -> BandLayer:
             break
         starts.append(e_ok)
         s = e_ok
-    return _fit_bands_for_groups(D, np.asarray(starts, dtype=np.int64))
+    return np.asarray(starts, dtype=np.int64)
+
+
+def build_gband(D: KeyPositions, lam: float) -> BandLayer:
+    """Greedy band builder (paper §A.1 (2)): extend each group while the
+    band width ``2δ`` stays ≤ λ.  Galloping + binary search per node with
+    vectorized feasibility, seeded by the previous group's size.
+    """
+    _check_disjoint(D)
+    return _fit_bands_for_groups(D, _gband_starts(D, lam))
 
 
 # ---------------------------------------------------------------------------
@@ -233,6 +249,55 @@ def _gband_family(D: KeyPositions, lam: float, p: int) -> Layer:
 @register_builder("eband")
 def _eband_family(D: KeyPositions, lam: float, p: int) -> Layer:
     return build_eband(D, lam)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-λ entry points (the sweep engine's fast path, §Eq. 8)
+# ---------------------------------------------------------------------------
+# One call builds a family's whole λ-column for a vertex.  Shared work:
+# the float64 views (lo_f/hi_f/keys_f/mid_f) convert once per collection
+# (cached on D), and λ values resolving to the SAME partition — common on
+# small outline collections where the grid saturates — share one layer
+# object, so band fitting / step construction run once per unique
+# boundary set.  NOTE greedy boundaries are *not* nested across λ (a
+# coarse boundary need not survive at a finer λ), so every λ's boundaries
+# are still computed exactly; only construction downstream of identical
+# boundaries is deduplicated.  Each element is bit-identical to the
+# single-λ build at that λ.
+def _dedup_by_starts(D: KeyPositions, lams, starts_fn, construct):
+    layers, by_starts = [], {}
+    for lam in lams:
+        starts = starts_fn(D, lam)
+        key = starts.tobytes()
+        layer = by_starts.get(key)
+        if layer is None:
+            layer = construct(starts)
+            by_starts[key] = layer
+        layers.append(layer)
+    return layers
+
+
+@register_multi_lam_builder("gstep")
+def build_gstep_multi(D: KeyPositions, lams, p: int) -> list:
+    _check_disjoint(D)
+    lo_f, hi_f = D.lo_f, D.hi_f       # one float64 conversion for all λ
+    return _dedup_by_starts(
+        D, lams, lambda d, lam: greedy_partition(lo_f, hi_f, lam),
+        lambda starts: _gstep_from_starts(D, starts, int(p)))
+
+
+@register_multi_lam_builder("gband")
+def build_gband_multi(D: KeyPositions, lams, p: int) -> list:
+    _check_disjoint(D)
+    return _dedup_by_starts(D, lams, _gband_starts,
+                            lambda starts: _fit_bands_for_groups(D, starts))
+
+
+@register_multi_lam_builder("eband")
+def build_eband_multi(D: KeyPositions, lams, p: int) -> list:
+    _check_disjoint(D)
+    return _dedup_by_starts(D, lams, _eband_starts,
+                            lambda starts: _fit_bands_for_groups(D, starts))
 
 
 DEFAULT_FAMILIES = ("gstep", "gband", "eband")   # the paper's deployed set

@@ -14,6 +14,7 @@ requires knowing how many original keys each coarse pair covers.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 
 import numpy as np
 
@@ -62,6 +63,21 @@ class KeyPositions:
         if "mid" not in c:
             c["mid"] = 0.5 * (self.lo_f + self.hi_f)
         return c["mid"]
+
+    @property
+    def fingerprint(self) -> bytes:
+        """Content digest of (keys, lo, hi, weights) — the sweep engine's
+        memo key (repro.core.sweep): collections reached via different
+        search paths but holding identical pairs hash alike, so their
+        candidate expansions are built once and reused."""
+        c = self._f64_cache
+        if "fingerprint" not in c:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.int64(self.n).tobytes())
+            for a in (self.keys, self.lo, self.hi, self.weights):
+                h.update(np.ascontiguousarray(a).tobytes())
+            c["fingerprint"] = h.digest()
+        return c["fingerprint"]
 
     @property
     def n(self) -> int:

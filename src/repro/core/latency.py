@@ -66,6 +66,30 @@ def expected_latency(design: IndexDesign, profile: StorageProfile) -> float:
     return total
 
 
+def batched_mean_read_costs(widths, weights, profile: StorageProfile) -> np.ndarray:
+    """Batched ``E_x[T(Δ)]`` for C candidates at once → (C,) float64.
+
+    ``widths`` is a (C, S) matrix of per-query prediction widths (one row
+    per candidate layer, all evaluated at the SAME S query keys);
+    ``weights`` the (S,) query weights.  Row c is bit-identical to the
+    scalar path ``float(np.average(profile(widths[c]), weights=weights))``:
+    the profile applies elementwise and numpy's pairwise reduction over a
+    contiguous last axis matches the 1-D reduction exactly (asserted by
+    tests/test_sweep.py).  Profiles that are not elementwise-vectorized
+    over 2-D input fall back to a per-row loop with the same semantics.
+    """
+    W = np.asarray(widths, dtype=np.float64)
+    if W.ndim == 1:
+        W = W[None, :]
+    T = np.asarray(profile(W), dtype=np.float64)
+    if T.shape != W.shape:          # profile not 2-D-vectorized: row loop
+        return np.asarray(
+            [float(np.average(np.asarray(profile(w), dtype=np.float64),
+                              weights=weights)) for w in W])
+    return np.average(T, axis=1, weights=np.asarray(weights,
+                                                    dtype=np.float64))
+
+
 def latency_breakdown(design: IndexDesign, profile: StorageProfile) -> dict:
     """Per-read costs: root + every layer's expected partial read (Eq. 5)."""
     data = design.data

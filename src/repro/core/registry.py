@@ -74,6 +74,14 @@ class Registry:
 #: family name -> build function ``f(D: KeyPositions, lam: float, p: int) -> Layer``
 BUILDER_FAMILIES = Registry("builder family")
 
+#: family name -> fused multi-λ build ``f(D, lams, p) -> list[Layer]``.
+#: Optional fast path for the sweep engine (repro.core.sweep): one call
+#: builds the family's whole Eq. (8) λ-column for a vertex, sharing
+#: per-collection precomputation and deduplicating λ values that produce
+#: identical partitions.  Families registered only in BUILDER_FAMILIES
+#: still work — the sweep engine falls back to per-λ single builds.
+MULTI_LAM_FAMILIES = Registry("multi-λ builder family")
+
 #: strategy name -> ``SearchStrategy`` callable (see repro.core.airtune)
 SEARCH_STRATEGIES = Registry("search strategy")
 
@@ -81,6 +89,17 @@ SEARCH_STRATEGIES = Registry("search strategy")
 def register_builder(name: str, fn=None):
     """Register a layer-builder family ``f(D, lam, p) -> Layer``."""
     return BUILDER_FAMILIES.register(name, fn)
+
+
+def register_multi_lam_builder(name: str, fn=None):
+    """Register a family's fused multi-λ entry ``f(D, lams, p) -> list[Layer]``.
+
+    The returned list must align with ``lams`` and each element must be
+    bit-identical (same arrays) to the single-λ build at that λ; entries
+    for λ values yielding the same partition may share one layer object —
+    the sweep engine counts those as ``layers_reused``.
+    """
+    return MULTI_LAM_FAMILIES.register(name, fn)
 
 
 def register_strategy(name: str, fn=None):

@@ -65,13 +65,19 @@ class AffineUniformProfile(StorageProfile):
     bandwidth_hi: float
     name: str = "affine-uniform"
 
-    def read_time(self, delta):
+    def coefficients(self) -> tuple[float, float]:
+        """The closed-form ``(ℓ, 1/B)`` this profile is affine with —
+        single source of truth for read_time and affine_coefficients."""
         ell = 0.5 * (self.latency_lo + self.latency_hi)
         if self.bandwidth_hi == self.bandwidth_lo:
             inv_bw = 1.0 / self.bandwidth_lo
         else:
             inv_bw = (np.log(self.bandwidth_hi) - np.log(self.bandwidth_lo)) / (
                 self.bandwidth_hi - self.bandwidth_lo)
+        return float(ell), float(inv_bw)
+
+    def read_time(self, delta):
+        ell, inv_bw = self.coefficients()
         return ell + np.asarray(delta, dtype=np.float64) * inv_bw
 
 
@@ -104,6 +110,11 @@ class MeasuredProfile(StorageProfile):
         return AffineProfile(latency=ell, bandwidth=bw, name=f"{self.name}-affine")
 
 
+#: CachedProfile's default cache tier (host-DRAM constants; also the
+#: basis of PROFILES["host_dram"] below)
+_DEFAULT_CACHE = AffineProfile(150e-9, 50e9, name="host_dram")
+
+
 @dataclasses.dataclass(frozen=True)
 class CachedProfile(StorageProfile):
     """``T(Δ)`` seen *through* a block cache in front of a backing tier.
@@ -128,7 +139,7 @@ class CachedProfile(StorageProfile):
 
     def read_time(self, delta):
         h = min(max(float(self.hit_rate), 0.0), 1.0)
-        cache = self.cache or AffineProfile(150e-9, 50e9, name="host_dram")
+        cache = self.cache or _DEFAULT_CACHE
         return (h * np.asarray(cache(delta), dtype=np.float64)
                 + (1.0 - h) * np.asarray(self.backing(delta), dtype=np.float64))
 
@@ -163,6 +174,31 @@ def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
         return MeasuredProfile(deltas=tuple(sizes), seconds=tuple(meas), name="local-fs")
     finally:
         os.close(fd)
+
+
+def affine_coefficients(profile: StorageProfile) -> tuple[float, float] | None:
+    """``(ℓ, 1/B)`` if ``T(Δ) = ℓ + Δ·(1/B)`` holds exactly, else None.
+
+    The device-side batched candidate scorers
+    (:mod:`repro.kernels.candidate_score`) evaluate only affine-
+    representable tiers in closed form; any other profile takes the numpy
+    path.  ``AffineUniformProfile`` and ``CachedProfile`` over affine
+    components are affine in Δ and are folded here.
+    """
+    if isinstance(profile, AffineProfile):
+        return float(profile.latency), 1.0 / float(profile.bandwidth)
+    if isinstance(profile, AffineUniformProfile):
+        return profile.coefficients()
+    if isinstance(profile, CachedProfile):
+        cache = profile.cache or _DEFAULT_CACHE
+        back = affine_coefficients(profile.backing)
+        front = affine_coefficients(cache)
+        if back is None or front is None:
+            return None
+        h = min(max(float(profile.hit_rate), 0.0), 1.0)
+        return (h * front[0] + (1.0 - h) * back[0],
+                h * front[1] + (1.0 - h) * back[1])
+    return None
 
 
 # ---------------------------------------------------------------------------
@@ -238,7 +274,7 @@ PROFILES = {
     "azure_hdd": AffineProfile(2e-3,   60e6,   name="azure_hdd"),  # 500 IOPS, 60 MB/s
     # TPU-system tiers (targets of the adaptation; v5e-class constants)
     "object_store": AffineProfile(80e-3, 250e6, name="object_store"),
-    "host_dram":    AffineProfile(150e-9, 50e9, name="host_dram"),
+    "host_dram":    _DEFAULT_CACHE,
     "hbm":          AffineProfile(1e-6,  819e9, name="hbm"),       # v5e HBM
     "vmem":         AffineProfile(30e-9, 10e12, name="vmem"),
     "ici":          AffineProfile(1e-6,  50e9,  name="ici"),       # per-link

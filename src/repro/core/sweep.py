@@ -1,0 +1,316 @@
+"""Fused λ-grid candidate sweep engine — the Alg. 2 inner loop, batched.
+
+Every search strategy's per-vertex work used to be a Python loop over the
+candidate set 𝓕: build a layer, outline it, sample its read cost, score
+it — O(|𝓕|) separate ``widths_at`` + ``profile`` passes per vertex, which
+dominated tuning time.  :class:`SweepEngine` replaces that loop with one
+fused "score all children of D" operation:
+
+  1. **multi-λ building** — the Eq. (8) grid applies the *same* family to
+     the *same* collection across ~13 λ values, so each family's whole
+     λ-column builds in one call (``MULTI_LAM_FAMILIES``): the float64
+     views convert once per collection and λ values that resolve to
+     identical partitions share one layer object.  Families registered
+     only in ``BUILDER_FAMILIES`` (third-party single-λ builders) fall
+     back to per-λ builds transparently.
+  2. **batched scoring** — all surviving candidates' sampled widths stack
+     into one (C, SCORE_SAMPLE) matrix and ``E[T(Δ)]`` evaluates for every
+     candidate in a single vectorized call
+     (:func:`repro.core.latency.batched_mean_read_costs`); the shrink
+     guard is one vectorized size comparison.  An opt-in jnp/Pallas
+     scoring backend (``score_backend="jnp"|"pallas"``, see
+     :mod:`repro.kernels.candidate_score`) accelerates the *ranking*
+     estimates for affine-representable tiers; exact Eq. (6) costs always
+     use the numpy float64 path so returned designs/costs stay exact.
+  3. **memoization** — whole expansions are cached per collection
+     fingerprint (``_VertexSweep``), and the profile-independent
+     layer/outline pairs live in a :class:`LayerCache` keyed by
+     (fingerprint, builder) that can be SHARED across strategy
+     invocations: ``brute_force``/``beam`` stop rebuilding layers for
+     collections they already expanded, and tuning the same dataset for
+     several storage tiers (or certifying several strategies against
+     each other, as benchmarks/tune_bench.py does) reuses every build
+     (``TuneStats.layers_reused`` / ``sweeps`` count the effect).
+
+Bit-identity contract: with the default numpy backend, every candidate's
+layer arrays, outline, est/exact read cost, and τ̂ equal the legacy
+per-builder loop's values bit-for-bit (tests/test_sweep.py certifies all
+three strategies end-to-end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .complexity import tau_hat
+from .keyset import KeyPositions
+from .latency import batched_mean_read_costs
+from .nodes import Layer, outline
+from .registry import MULTI_LAM_FAMILIES
+from .storage import StorageProfile
+
+SCORE_SAMPLE = 65536   # pairs used for candidate *ranking* (§5.3); the
+                       # selected candidates' costs are always exact
+
+SCORE_BACKENDS = ("numpy", "jnp", "pallas")
+
+
+@dataclasses.dataclass
+class Candidate:
+    """One outgoing edge of a search vertex: apply builder → next layer."""
+
+    order: int             # position in the caller's builder list (tie-break)
+    name: str              # F.name — TuneResult.builder_names provenance
+    layer: Layer
+    outline: KeyPositions  # the vertex this edge leads to (Alg. 2 line 5)
+    est_cost: float        # sampled Ê[T(Δ)] — ranking only
+    tau: float             # τ̂(outline; T), Eq. (12)
+    entry: object = None   # backing _LayerEntry (score memo host)
+
+    @property
+    def score(self) -> float:
+        """Eq. (9) selection score (same addition order as the legacy loop)."""
+        return self.tau + self.est_cost
+
+
+@dataclasses.dataclass
+class _VertexSweep:
+    cands: list            # shrinking Candidates, in builder-list order
+    n_nonshrink: int       # edges discarded by the termination safeguard
+
+
+@dataclasses.dataclass
+class _LayerEntry:
+    layer: object                   # the built Layer
+    outline: object = None          # its outline, filled on first need
+    # (profile key, "exact"|"est") -> E[T(Δ)].  When the vertex is small
+    # enough that the §5.3 ranking subsample IS the full key set (n ≤
+    # 2·SCORE_SAMPLE), the estimate equals the exact Eq. (6) expectation
+    # bit-for-bit and both share the "exact" slot — so a brute-force
+    # certification pass warms every guided strategy's ranking for free.
+    scores: dict = dataclasses.field(default_factory=dict)
+
+
+class LayerCache:
+    """Profile-independent build memo: (collection fingerprint, builder)
+    → layer (+ outline, lazily).
+
+    λ-grid and vertex sweeps inside ONE tune always go through a cache
+    (engines make a private one by default); passing an explicit cache to
+    several strategy invocations extends the reuse across them — tuning
+    one dataset for several storage tiers, certifying several strategies
+    against each other (benchmarks/tune_bench.py), or warm-starting a
+    re-tune after a profile change all rebuild zero layers for
+    already-expanded collections.  Only T(Δ)-independent artifacts live
+    here; est/exact scores and τ̂ stay per-engine.
+    """
+
+    def __init__(self):
+        self._entries: dict[tuple, _LayerEntry] = {}
+        self._pinned_profiles: list = []   # see pin_profile
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._pinned_profiles.clear()
+
+    def pin_profile(self, profile) -> tuple:
+        """Score-memo key for an *unhashable* profile.  Pinning a strong
+        reference for the cache's lifetime keeps ``id(profile)`` unique —
+        otherwise a garbage-collected profile's address could be reused
+        and silently alias another profile's memoized costs."""
+        self._pinned_profiles.append(profile)
+        return ("unhashable-profile", id(profile))
+
+
+class SweepEngine:
+    """Per-tune candidate factory shared by all search strategies.
+
+    One engine instance lives for one strategy invocation (fixed builder
+    list + storage profile), so its vertex cache never crosses profiles.
+    """
+
+    def __init__(self, builders: list, profile: StorageProfile,
+                 stats, *, score_backend: str = "numpy",
+                 rank_scores: bool = True,
+                 layer_cache: LayerCache | None = None):
+        if score_backend not in SCORE_BACKENDS:
+            raise ValueError(f"score_backend must be one of {SCORE_BACKENDS},"
+                             f" got {score_backend!r}")
+        self.builders = list(builders)
+        self.profile = profile
+        self.stats = stats
+        self.score_backend = score_backend
+        # exhaustive strategies never rank by Eq. (9): skip Ê[T(Δ)] + τ̂
+        self.rank_scores = rank_scores
+        self.layer_cache = layer_cache if layer_cache is not None \
+            else LayerCache()
+        try:                       # score-memo key: equal profiles share
+            hash(profile)
+            self._pk = profile
+        except TypeError:
+            self._pk = self.layer_cache.pin_profile(profile)
+        self._vertices: dict[bytes, _VertexSweep] = {}
+        # family columns: (kind, p) -> ordered builder indices; preserves
+        # the caller's builder order inside each column
+        cols: dict[tuple, list[int]] = {}
+        for i, b in enumerate(self.builders):
+            cols.setdefault((b.kind, b.p), []).append(i)
+        self._columns = list(cols.items())
+
+    # -- candidate expansion -------------------------------------------------
+    def children(self, D: KeyPositions) -> list[Candidate]:
+        """All shrinking candidates of vertex ``D``, scored, in builder
+        order.  Memoized on the collection's content fingerprint."""
+        fp = D.fingerprint
+        hit = self._vertices.get(fp)
+        if hit is not None:
+            # a legacy revisit would have rebuilt + re-pruned everything
+            self.stats.layers_reused += len(self.builders)
+            self.stats.candidates_pruned += hit.n_nonshrink
+            return hit.cands
+        t0 = time.perf_counter()
+        vs = self._expand(D)
+        self._vertices[fp] = vs
+        self.stats.sweeps += 1
+        self.stats.sweep_seconds += time.perf_counter() - t0
+        return vs.cands
+
+    def _expand(self, D: KeyPositions) -> _VertexSweep:
+        stats = self.stats
+        fp = D.fingerprint
+        lc = self.layer_cache._entries
+        entries: list = [None] * len(self.builders)
+        for (kind, p), idxs in self._columns:
+            missing = []
+            for i in idxs:
+                e = lc.get((fp, kind, self.builders[i].lam, p))
+                if e is not None:       # built by an earlier tune/vertex
+                    entries[i] = e
+                    stats.layers_reused += 1
+                else:
+                    missing.append(i)
+            if not missing:
+                continue
+            if kind in MULTI_LAM_FAMILIES:
+                built = MULTI_LAM_FAMILIES.get(kind)(
+                    D, [self.builders[i].lam for i in missing], p)
+            else:                       # single-λ-only family: legacy builds
+                built = [self.builders[i](D) for i in missing]
+            made: dict[int, _LayerEntry] = {}
+            for i, layer in zip(missing, built):
+                e = made.get(id(layer))
+                if e is None:           # λ values sharing a partition share
+                    e = made[id(layer)] = _LayerEntry(layer)   # one entry
+                    stats.layers_built += 1
+                else:
+                    stats.layers_reused += 1
+                lc[(fp, kind, self.builders[i].lam, p)] = e
+                entries[i] = e
+
+        # shrink guard for every candidate in one vectorized comparison
+        # (outline extent == layer.size_bytes: outlines span the serialized
+        # layer, so the guard needs no outline construction for losers)
+        sizes = np.fromiter((e.layer.size_bytes for e in entries),
+                            dtype=np.int64, count=len(entries))
+        shrinking = sizes < D.size_bytes
+        n_nonshrink = int(np.count_nonzero(~shrinking))
+        stats.candidates_pruned += n_nonshrink
+
+        # outline once per unique surviving layer (cached cross-engine)
+        survivors = [i for i in range(len(entries)) if shrinking[i]]
+        uniq: list[_LayerEntry] = []
+        seen: set[int] = set()
+        for i in survivors:
+            if id(entries[i]) not in seen:
+                seen.add(id(entries[i]))
+                uniq.append(entries[i])
+        for e in uniq:
+            if e.outline is None:
+                e.outline = outline(e.layer, D)
+
+        # Eq. (9) ranking terms, memoized per (entry, profile).  When the
+        # §5.3 subsample is the full key set and the backend is numpy, the
+        # estimate IS the exact Eq. (6) expectation — share its slot, so a
+        # prior exact pass (e.g. a brute-force certification run on the
+        # same cache) makes ranking free, and vice versa.
+        pk = self._pk
+        tau_by: dict[int, float] = {}
+        est_by: dict[int, float] = {}
+        if self.rank_scores:
+            full = D.n <= 2 * SCORE_SAMPLE
+            est_slot = (pk, "exact") if full and self.score_backend == "numpy" \
+                else (pk, "est", self.score_backend)
+            for e in uniq:
+                t = e.scores.get((pk, "tau"))
+                if t is None:
+                    t = tau_hat(e.outline, self.profile)
+                    e.scores[(pk, "tau")] = t
+                tau_by[id(e)] = t
+            to_score = [e for e in uniq if est_slot not in e.scores]
+            if to_score:
+                # batched sampled Ê[T(Δ)]: ONE (U, S) matrix for all layers
+                keys, weights = _score_sample(D)
+                W = np.stack([e.layer.widths_at(keys) for e in to_score])
+                est = self._batched_est(W, weights)
+                stats.candidates_scored += len(to_score)
+                for e, v in zip(to_score, est):
+                    e.scores[est_slot] = float(v)
+            for e in uniq:
+                est_by[id(e)] = e.scores[est_slot]
+        else:                       # exhaustive strategies never rank
+            for e in uniq:
+                tau_by[id(e)] = est_by[id(e)] = float("nan")
+
+        cands = [Candidate(order=i, name=self.builders[i].name,
+                           layer=entries[i].layer,
+                           outline=entries[i].outline,
+                           est_cost=est_by[id(entries[i])],
+                           tau=tau_by[id(entries[i])],
+                           entry=entries[i])
+                 for i in survivors]
+        return _VertexSweep(cands=cands, n_nonshrink=n_nonshrink)
+
+    def _batched_est(self, W: np.ndarray, weights: np.ndarray) -> np.ndarray:
+        if self.score_backend != "numpy":
+            # jnp/Pallas fast path is ranking-only and affine-only; import
+            # lazily so the default path never pulls in jax
+            from repro.kernels.candidate_score import candidate_scores
+            return candidate_scores(W, weights, self.profile,
+                                    backend=self.score_backend)
+        return batched_mean_read_costs(W, weights, self.profile)
+
+    # -- exact (Eq. 6) read costs -------------------------------------------
+    def exact_read_costs(self, D: KeyPositions,
+                         cands: list[Candidate]) -> list[float]:
+        """Exact ``E_x[T(Δ)]`` over ALL of D's weighted keys, for the
+        selected candidates — batched into one matrix, memoized per
+        (entry, profile).  Always numpy float64: returned designs/costs
+        must stay exactly Eq. (6) regardless of the ranking backend."""
+        pk = self._pk
+        missing, seen = [], set()
+        for c in cands:
+            eid = id(c.entry)
+            if (pk, "exact") not in c.entry.scores and eid not in seen:
+                missing.append(c)
+                seen.add(eid)
+        if missing:
+            W = np.stack([c.layer.widths_at(D.keys) for c in missing])
+            costs = batched_mean_read_costs(W, D.weights, self.profile)
+            for c, v in zip(missing, costs):
+                c.entry.scores[(pk, "exact")] = float(v)
+            self.stats.candidates_scored += len(missing)
+        return [c.entry.scores[(pk, "exact")] for c in cands]
+
+
+def _score_sample(D: KeyPositions) -> tuple[np.ndarray, np.ndarray]:
+    """The strided ranking subsample — same rule as the legacy
+    ``_mean_layer_read_cost(..., sample=True)`` path."""
+    if D.n > 2 * SCORE_SAMPLE:
+        stride = D.n // SCORE_SAMPLE
+        return D.keys[::stride], D.weights[::stride]
+    return D.keys, D.weights

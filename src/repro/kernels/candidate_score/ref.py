@@ -1,0 +1,18 @@
+"""Numpy reference for the batched affine candidate scorer."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def affine_scores_ref(widths, weights, ell: float, inv_bw: float) -> np.ndarray:
+    """Weighted row means of ``ell + widths·inv_bw`` → (C,) float64.
+
+    Float64 oracle for the device backends.  (The *search* default does
+    not go through here — it applies the profile directly via
+    ``repro.core.latency.batched_mean_read_costs``, which divides by B
+    exactly as the scalar path does; this closed form multiplies by the
+    precomputed 1/B and is for ranking only.)
+    """
+    t = ell + np.asarray(widths, dtype=np.float64) * inv_bw
+    return np.average(t, axis=1,
+                      weights=np.asarray(weights, dtype=np.float64))

@@ -6,7 +6,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 Proves the distribution config is coherent without hardware: pjit each
 step function onto the production mesh with ShapeDtypeStruct inputs,
 ``.lower().compile()``, and record memory_analysis / cost_analysis /
-collective-bytes (parsed from HLO) for the roofline (EXPERIMENTS.md).
+collective-bytes (parsed from HLO) for the roofline tables
+(benchmarks/roofline.py, rendered by benchmarks/report.py).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \

@@ -141,7 +141,8 @@ def moe_ffn(x, router_w, we_gate, we_up, we_down, *, top_k, capacity_factor):
     argsort/scatter stay local to each group, so with the group axis
     sharded over DP the SPMD partitioner never materializes a global
     sort — a global argsort replicated the full token buffer on every
-    device (695 GB/dev on grok prefill_32k; see EXPERIMENTS.md §Perf).
+    device (695 GB/dev on grok prefill_32k in the dry-run memory
+    analysis; see benchmarks/roofline.py and ROADMAP.md).
     """
     T, d = x.shape
     logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))

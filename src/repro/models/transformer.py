@@ -125,7 +125,8 @@ def decode_attention_jnp(q, ck, cv, kv_length, *, window=None, softcap=None):
     dtype: QK/PV einsums take bf16 inputs with f32 accumulation
     (preferred_element_type) and GQA folds the group into the einsum
     instead of jnp.repeat — upcasting + repeating the cache materialized
-    ~4x the cache bytes per layer (EXPERIMENTS.md §Perf).  Logits live at
+    ~4x the cache bytes per layer in dry-run memory analysis (see
+    benchmarks/roofline.py).  Logits live at
     (B,Hq,Sq,Smax) f32 — fine for decode.
     """
     B, Hq, Sq, hd = q.shape

@@ -33,6 +33,33 @@ def test_greedy_partition_matches_sequential(data):
     assert np.array_equal(got, np.asarray(ref, dtype=np.int64))
 
 
+@given(st.data())
+@settings(max_examples=60, deadline=None)
+def test_greedy_partition_seam_switch_invariant(data):
+    """The scalar-walk fast path and the frontier-doubling path must meet
+    seamlessly: boundaries are invariant to where the ``switch``
+    crossover lands, including the ``walk[:-1] + orbit`` seam (λ and
+    group counts drawn to straddle the crossover)."""
+    n = data.draw(st.integers(2, 600))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    widths = rng.integers(1, 40, n)
+    lo = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int64)
+    hi = (lo + widths).astype(np.int64)
+    lam = float(data.draw(st.integers(1, 2000)))
+    # switch beyond any possible group count: pure scalar walk (reference)
+    ref = greedy_partition(lo, hi, lam, switch=n + 1)
+    # sequential definition, independent of both vectorized paths
+    seq, s = [0], 0
+    for i in range(1, n):
+        if hi[i] - lo[s] > lam:
+            seq.append(i)
+            s = i
+    assert np.array_equal(ref, np.asarray(seq, dtype=np.int64))
+    for switch in (0, 1, data.draw(st.integers(0, 64))):
+        got = greedy_partition(lo, hi, lam, switch=switch)
+        assert np.array_equal(got, ref), switch
+
+
 def test_greedy_partition_group_extent_bound():
     keys = make_keys("gmm", 20_000)
     D = KeyPositions.fixed_record(keys, 16)

@@ -1,0 +1,83 @@
+"""Greedy-partition seam + §5.4 partitioned-build/merge coverage.
+
+Separate from test_core_builders.py so these run even without the
+optional hypothesis dependency (that file is importorskip-gated)."""
+import numpy as np
+import pytest
+
+from repro.core import (build_partitioned, greedy_partition, merge_layers,
+                        outline)
+from repro.core.builders import LayerBuilder
+
+
+def test_greedy_partition_seam_at_default_switch():
+    """Cross the real ``switch = 8192`` boundary once: >8192 groups force
+    the frontier-doubling path; the ``walk[:-1] + orbit`` seam must match
+    the pure scalar walk."""
+    n = 20_000
+    rng = np.random.default_rng(5)
+    widths = rng.integers(8, 64, n)
+    lo = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int64)
+    hi = (lo + widths).astype(np.int64)
+    lam = 48.0                                   # ~1-2 items per group
+    got = greedy_partition(lo, hi, lam)          # default switch: both paths
+    ref = greedy_partition(lo, hi, lam, switch=n + 1)   # pure scalar walk
+    assert len(got) > 8192
+    assert np.array_equal(got, ref)
+
+
+def test_greedy_partition_switch_invariant_randomized():
+    """Boundaries are invariant to where the crossover lands, for random
+    widths/λ straddling small switch values (frontier-doubling seeded at
+    arbitrary walk prefixes)."""
+    rng = np.random.default_rng(11)
+    for trial in range(25):
+        n = int(rng.integers(2, 600))
+        widths = rng.integers(1, 40, n)
+        lo = np.concatenate([[0], np.cumsum(widths[:-1])]).astype(np.int64)
+        hi = (lo + widths).astype(np.int64)
+        lam = float(rng.integers(1, 2000))
+        ref = greedy_partition(lo, hi, lam, switch=n + 1)
+        seq, s = [0], 0                          # sequential definition
+        for i in range(1, n):
+            if hi[i] - lo[s] > lam:
+                seq.append(i)
+                s = i
+        assert np.array_equal(ref, np.asarray(seq, dtype=np.int64))
+        for switch in (0, 1, int(rng.integers(0, 64))):
+            got = greedy_partition(lo, hi, lam, switch=switch)
+            assert np.array_equal(got, ref), (trial, switch)
+
+
+@pytest.mark.parametrize("builder,kind", [
+    (LayerBuilder("gstep", 4096, 16), "step"),
+    (LayerBuilder("gband", 4096), "band"),
+    (LayerBuilder("eband", 4096), "band"),
+])
+def test_merge_layers_lookup_validity_and_size_accounting(gmm_small, builder,
+                                                          kind):
+    """§5.4 partitioned building: per-partition layers merged into one must
+    (a) stay a valid index layer — Eq. (1) containment for every pair,
+    (b) account serialized bytes exactly as the sum of the parts (the
+    paper's 1M-pair partitioning merges without padding or overlap)."""
+    P = 7_000
+    parts = [builder(gmm_small.slice(s, min(s + P, gmm_small.n)))
+             for s in range(0, gmm_small.n, P)]
+    assert len(parts) > 1
+    merged = merge_layers(parts)
+    assert merged.kind == kind
+    # (a) merged lookups are valid at every original pair
+    merged.validate_against(gmm_small)
+    # (b) size accounting: bytes and node counts concatenate exactly
+    assert merged.size_bytes == sum(q.size_bytes for q in parts)
+    assert merged.n_nodes == sum(q.n_nodes for q in parts)
+    np.testing.assert_array_equal(
+        merged.node_sizes(), np.concatenate([q.node_sizes() for q in parts]))
+    # build_partitioned is exactly build-per-partition + merge
+    via_api = build_partitioned(builder, gmm_small, partition_pairs=P)
+    assert via_api.size_bytes == merged.size_bytes
+    # the merged layer outlines into a collection the next layer can use
+    out = outline(merged, gmm_small)
+    out.validate()
+    assert out.size_bytes == merged.size_bytes
+    assert out.total_weight == pytest.approx(gmm_small.total_weight)
