@@ -117,7 +117,11 @@ def bench_fig12_tuned_baselines():
     prof = PROFILES["azure_nfs"]
     ours = airtune(D, prof, k=5).cost
     best = {
-        "btree_lam": min(expected_latency(build_fixed_btree(D, lam=lam), prof)
+        # explicit p=255 keeps this trend line on the historical legacy
+        # series (decoupled fanout); the page-coupled discipline is the
+        # registered `btree` family benched in baseline_bench.py
+        "btree_lam": min(expected_latency(build_fixed_btree(D, p=255, lam=lam),
+                                          prof)
                          for lam in (1024.0, 4096.0, 16384.0, 65536.0)),
         "rmi": tune_rmi(D, prof).cost,
         "pgm": tune_pgm(D, prof).cost,
@@ -237,6 +241,7 @@ def bench_lookup_throughput():
 # ---------------------------------------------------------------------------
 SERVE_JSON_PATH = None     # set by main() via --serve-json
 TUNE_JSON_PATH = None      # set by main() via --tune-json
+BASELINE_JSON_PATH = None  # set by main() via --baseline-json
 
 
 def bench_serve():
@@ -281,6 +286,30 @@ def bench_tune():
 
 
 # ---------------------------------------------------------------------------
+# Baseline families head-to-head (§7.2 dominance) — BENCH_baseline.json
+# ---------------------------------------------------------------------------
+def bench_baseline():
+    try:
+        from benchmarks import baseline_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import baseline_bench
+    results = baseline_bench.run_baseline_bench()
+    # compact per-cell trend lines — AirTune's margin over the best baseline
+    for row in results.get("rows", []):
+        best = min(row["baseline_costs_us"].values())
+        print(f"# baseline-trend {row['dataset']}/{row['tier']}: "
+              f"airtune={row['airtune_cost_us']:.1f}us "
+              f"best_baseline={best:.1f}us "
+              f"margin={best / max(row['airtune_cost_us'], 1e-12):.2f}x "
+              f"reused={row['airtune_layers_reused']}", flush=True)
+    if BASELINE_JSON_PATH:
+        import json
+        with open(BASELINE_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {BASELINE_JSON_PATH}", flush=True)
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run
 # ---------------------------------------------------------------------------
 def bench_roofline():
@@ -312,6 +341,7 @@ BENCHES = [
     bench_lookup_throughput,
     bench_serve,
     bench_tune,
+    bench_baseline,
     bench_roofline,
 ]
 
@@ -335,11 +365,13 @@ def _take_json_flag(argv: list, flag: str, default_path: str):
 
 
 def main() -> None:
-    global SERVE_JSON_PATH, TUNE_JSON_PATH
+    global SERVE_JSON_PATH, TUNE_JSON_PATH, BASELINE_JSON_PATH
     argv = list(sys.argv[1:])
-    # emit BENCH_serve.json / BENCH_tune.json (perf trajectories)
+    # emit BENCH_*.json (perf trajectories)
     SERVE_JSON_PATH = _take_json_flag(argv, "--serve-json", "BENCH_serve.json")
     TUNE_JSON_PATH = _take_json_flag(argv, "--tune-json", "BENCH_tune.json")
+    BASELINE_JSON_PATH = _take_json_flag(argv, "--baseline-json",
+                                         "BENCH_baseline.json")
     only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:

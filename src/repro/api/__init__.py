@@ -24,6 +24,7 @@ The engine layer stays importable (``repro.core``, ``repro.serve``) —
 this package is a facade, not a wall.
 """
 from repro.core.airtune import SearchStrategy, TuneResult, TuneStats
+from repro.core.baselines import BASELINE_FAMILIES
 from repro.core.registry import (BUILDER_FAMILIES, SEARCH_STRATEGIES,
                                  Registry, register_builder,
                                  register_strategy)
@@ -34,7 +35,7 @@ from .spec import TuneSpec
 
 __all__ = [
     "Index", "TuneSpec", "SearchStrategy", "TuneResult", "TuneStats",
-    "BUILDER_FAMILIES", "SEARCH_STRATEGIES", "Registry",
+    "BASELINE_FAMILIES", "BUILDER_FAMILIES", "SEARCH_STRATEGIES", "Registry",
     "register_builder", "register_strategy",
     "PROFILES", "StorageProfile", "resolve_profile",
 ]

@@ -315,11 +315,14 @@ class Index:
         if self._from_disk:
             t = self._file_meta.tune or {}
             cost = t.get("cost")
+            fams = ",".join((t.get("spec") or {}).get("families") or ())
+            names = "<-".join(t.get("builder_names") or ())
             return (f"Index(open: {self._path}, "
                     f"strategy={t.get('strategy') or 'unknown'}, "
                     f"recorded_cost="
                     f"{f'{cost * 1e6:.1f}us' if cost is not None else 'n/a'}, "
-                    f"spec={'recorded' if self._spec is not None else 'none'})")
+                    f"spec={'recorded' if self._spec is not None else 'none'}, "
+                    f"families=[{fams}], builders=[{names}])")
         if self._result is not None:
             loc = f" @ {self._path}" if self._path else ""
             return self._result.describe() + loc

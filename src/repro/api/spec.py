@@ -25,7 +25,12 @@ class TuneSpec:
     ------
     families:    builder-family names resolved through the registry; any
                  family registered via ``repro.api.register_builder``
-                 participates in the search.
+                 participates in the search.  Besides the paper's deployed
+                 set (``gstep``/``gband``/``eband``), the baseline
+                 families ``btree``/``rmi_leaf``/``pgm``
+                 (:data:`repro.core.baselines.BASELINE_FAMILIES`) are
+                 registered and can be mixed in freely — e.g.
+                 ``families=("btree", "pgm", "gstep")``.
     lam_low/lam_high/lam_base: the Eq. (8) granularity grid
                  ``λ_low · lam_base^j ≤ λ_high``.
     p:           pieces per step node (gstep-family parameter).

@@ -22,7 +22,9 @@ Engine surface:
   write_index / SerializedIndex     — on-disk format (optionally paged) +
                                       partial-read lookup
   CachedProfile                     — T(Δ) through a block cache (serving)
-  baselines                         — B-TREE / RMI / PGM / Data Calculator
+  baselines                         — B-TREE / RMI / PGM as registered
+                                      families (BASELINE_FAMILIES) competing
+                                      inside Alg. 2, + Data Calculator
 
 The batched serving engine on top of this surface lives in
 ``repro.serve.index_service``.  ``load_index`` and ``lookup.lookup_file``
@@ -33,7 +35,8 @@ from .airtune import (SearchStrategy, TuneResult, TuneStats, airtune,
 from .builders import (DEFAULT_FAMILIES, LayerBuilder, build_eband,
                        build_eband_multi, build_gband, build_gband_multi,
                        build_gstep, build_gstep_multi, build_partitioned,
-                       greedy_partition, make_builders, merge_layers)
+                       fit_bands_for_groups, greedy_partition,
+                       gstep_from_starts, make_builders, merge_layers)
 from .registry import (BUILDER_FAMILIES, MULTI_LAM_FAMILIES,
                        SEARCH_STRATEGIES, Registry, register_builder,
                        register_multi_lam_builder, register_strategy)
@@ -56,6 +59,9 @@ from .storage import (AffineProfile, AffineUniformProfile, CachedProfile,
                       MeasuredProfile, PROFILES, StorageProfile,
                       affine_coefficients, profile_from_dict,
                       profile_local_storage, profile_to_dict)
-from . import baselines  # noqa: F401
+from . import baselines  # noqa: F401  (registers btree / rmi_leaf / pgm)
+from .baselines import (BASELINE_FAMILIES, PGM_EPS_GRID, build_fixed_btree,
+                        build_pgm, build_rmi, build_rmi_leaf, data_calculator,
+                        homogeneous_airtune, pgm_builders, tune_pgm, tune_rmi)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

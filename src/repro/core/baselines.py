@@ -1,17 +1,47 @@
-"""Baseline index structures (paper §7.1, Appendix B), re-implemented inside
-the AirIndex framework exactly like the paper's own controlled "B-TREE"
-baseline: the *structure* is fixed by the baseline's rules, the storage
-model scores it, and only AirIndex gets data-and-I/O-aware tuning.
+"""Baseline index structures (paper §7.1, Appendix B) as *registered
+builder families* competing inside the Alg. 2 search.
 
-  * :func:`build_fixed_btree`   — B-TREE: GStep(p=255, λ=4096) stacked
-    (≡ 4 KB pages, 255 fanout) until a single-node root.
+The paper's headline claim (§7, Fig. 12) is that AirIndex's search space
+*contains* the baselines, so data-and-I/O-aware tuning can only win.
+Earlier revisions built these structures outside the framework and only
+compared costs; now each baseline is a family in
+:data:`repro.core.registry.BUILDER_FAMILIES`, so ``make_builders`` /
+``TuneSpec.families`` resolve them by name and every search strategy
+(airtune / beam / brute_force) can mix them freely with ``gstep`` /
+``gband`` / ``eband`` — the dominance claim becomes a property of the
+search itself (asserted by ``benchmarks/baseline_bench.py``).
+
+Registered families (λ is the Eq. 8 grid parameter; ``p`` is ignored —
+each family's discipline fixes the node shape):
+
+  * ``btree``    — B-TREE page discipline: one node = one λ-byte page,
+    fanout fills the page (λ/16 − 1 entries); λ = 4096 reproduces the
+    paper's GStep(255, 4096) B-TREE exactly.
+  * ``rmi_leaf`` — RMI/CDFShop equal-key-range linear leaf models; λ is
+    the target bytes of data per model, so the Eq. 8 grid sweeps the
+    model count ``n`` (CDFShop's knob).
+  * ``pgm``      — PGM / FITing-tree ε-bounded greedy PLA; λ is the
+    error bound ε in bytes (band width 2δ ≤ 2ε).  The paper's ε grid
+    {16 … 1024} *records* is :data:`PGM_EPS_GRID` × record size —
+    :func:`pgm_builders` instantiates exactly that candidate set.
+
+``btree`` and ``pgm`` also register fused multi-λ entries so they ride
+the sweep engine's λ-column fast path; ``rmi_leaf`` instead exposes
+``canonical_lam`` (λ → its clamped model count) so the engine's per-λ
+fallback builds once per distinct ``n`` and the ``LayerCache`` dedups
+the rest (counted in ``TuneStats.layers_reused``).
+
+The original free functions remain as thin wrappers over the registered
+families, with the paper's fixed shapes:
+
+  * :func:`build_fixed_btree`   — B-TREE: the ``btree`` family at one
+    page size, stacked until a single-node root.
   * :func:`tune_rmi`            — RMI/CDFShop-style: two layers, linear
     root partitioning the key space equally over n linear leaf models;
     n swept on a grid (CDFShop recommends a Pareto set; we take the best
     under the storage model — a *stronger* baseline than the paper's).
-  * :func:`tune_pgm`            — PGM-style: bounded-error greedy PLA
-    stacked bottom-up with the same ε per layer; ε swept per the paper's
-    grid {16 … 1024} records.
+  * :func:`tune_pgm`            — PGM-style: the ``pgm`` family stacked
+    bottom-up with the same ε per layer; ε swept per the paper's grid.
   * :func:`data_calculator`     — exhaustive grid over homogeneous step
     designs (restricted branching functions, cost-model driven).
   * :func:`homogeneous_airtune` — AirTune restricted to one node type
@@ -22,12 +52,22 @@ from __future__ import annotations
 import numpy as np
 
 from .airtune import TuneResult, TuneStats, airtune
-from .builders import (LayerBuilder, _fit_bands_for_groups, build_gband,
-                       build_gstep, make_builders)
+from .builders import (LayerBuilder, build_gband, build_gband_multi,
+                       build_gstep, check_disjoint, fit_bands_for_groups,
+                       greedy_partition, gstep_from_starts, make_builders)
 from .keyset import KeyPositions, POS_DTYPE
 from .latency import IndexDesign, expected_latency
-from .nodes import BandLayer, StepLayer, outline
+from .nodes import STEP_PIECE_BYTES, BandLayer, outline
+from .registry import (BUILDER_FAMILIES, register_builder,
+                       register_multi_lam_builder)
 from .storage import StorageProfile
+
+#: the baseline families this module registers, in paper order
+BASELINE_FAMILIES = ("btree", "rmi_leaf", "pgm")
+
+BTREE_PAGE_BYTES = 4096.0         # Appendix B: 4 KB pages, 255 fanout
+PGM_RECORD_BYTES = 16             # the paper's fixed record size
+PGM_EPS_GRID = (16, 32, 64, 128, 256, 512, 1024)   # ε in records (§7.1)
 
 
 def _stack_until_root(D: KeyPositions, build_one, max_layers: int = 16):
@@ -47,33 +87,120 @@ def _stack_until_root(D: KeyPositions, build_one, max_layers: int = 16):
 
 
 # ---------------------------------------------------------------------------
-# B-TREE (paper Appendix B): fixed GStep(255, 4096) stack
+# B-TREE family: page discipline — node = one λ-byte page, fanout fills it
 # ---------------------------------------------------------------------------
-def build_fixed_btree(D: KeyPositions, p: int = 255, lam: float = 4096.0) -> IndexDesign:
+def btree_fanout(page_bytes: float) -> int:
+    """Entries of a B-tree node that fills one page: page/16 B − 1 (one
+    slot reserved for the fence pointer — 4 KB pages give the paper's
+    255 fanout)."""
+    return max(int(float(page_bytes)) // STEP_PIECE_BYTES - 1, 1)
+
+
+@register_builder("btree")
+def build_btree_layer(D: KeyPositions, lam: float, p: int):
+    """B-TREE node discipline (Appendix B): a greedy step layer whose
+    page size is λ and whose fanout fills the page.  ``p`` is ignored —
+    the page alone fixes the node shape (that IS the discipline)."""
+    return build_gstep(D, p=btree_fanout(lam), lam=float(lam))
+
+
+@register_multi_lam_builder("btree")
+def build_btree_multi(D: KeyPositions, lams, p: int) -> list:
+    """Fused λ-column for ``btree``: the greedy boundaries AND the
+    per-page fanout both follow λ, so dedup keys on (boundaries, fanout).
+    Each element is bit-identical to :func:`build_btree_layer` at that λ."""
+    check_disjoint(D)
+    lo_f, hi_f = D.lo_f, D.hi_f       # one float64 conversion for all λ
+    layers, by_key = [], {}
+    for lam in lams:
+        fanout = btree_fanout(lam)
+        starts = greedy_partition(lo_f, hi_f, float(lam))
+        key = (starts.tobytes(), fanout)
+        layer = by_key.get(key)
+        if layer is None:
+            layer = by_key[key] = gstep_from_starts(D, starts, fanout)
+        layers.append(layer)
+    return layers
+
+
+def build_fixed_btree(D: KeyPositions, p: int | None = None,
+                      lam: float = BTREE_PAGE_BYTES) -> IndexDesign:
+    """B-TREE (Appendix B): the registered ``btree`` family stacked until
+    a single-node root.  ``p=None`` (default) follows the page discipline
+    (fanout = λ/16 − 1, i.e. GStep(255, 4096) at the default page); an
+    explicit ``p`` keeps the legacy decoupled (p, λ) node shape."""
+    if p is None:
+        return _stack_until_root(
+            D, lambda c: BUILDER_FAMILIES.get("btree")(c, lam, 0))
     return _stack_until_root(D, lambda c: build_gstep(c, p=p, lam=lam))
 
 
 # ---------------------------------------------------------------------------
-# RMI (Appendix B): linear root → n linear leaf models, on-storage
+# RMI family: equal-key-range linear leaf models (CDF root routing)
 # ---------------------------------------------------------------------------
-def build_rmi(D: KeyPositions, n_models: int) -> IndexDesign:
-    """Two-layer RMI with an equal-key-range linear root (CDF root model)."""
-    n_models = min(n_models, D.n)
+def rmi_slot_starts(D: KeyPositions, n_models: int):
+    """Equal-key-range slot assignment of the linear CDF root.
+
+    Returns ``(n, bounds, gid, starts)``: the clamped model count, the
+    model-slot boundary keys, each pair's slot id, and the start indices
+    of the present (non-empty) slots.  Build-time grouping and
+    lookup-time routing both use ``searchsorted`` over ``bounds``, so
+    they agree by construction.
+    """
+    n_models = max(min(int(n_models), D.n), 1)
     k0 = int(D.keys[0])
     span = max(int(D.keys[-1]) - k0, 1)
     n_models = min(n_models, span + 1)
-    # model-slot boundaries first; routing = searchsorted over them, so the
-    # build-time grouping and lookup-time routing agree by construction
     bounds = (k0 + np.arange(n_models, dtype=np.float64)
               * (span + 1) / n_models).astype(np.uint64)
     gid = np.searchsorted(bounds, D.keys, side="right") - 1
     gid = np.clip(gid, 0, n_models - 1)
     starts = np.flatnonzero(np.diff(gid, prepend=-1))
-    leaf = _fit_bands_for_groups(D, starts)
+    return n_models, bounds, gid, starts
+
+
+def rmi_models_for_lam(D: KeyPositions, lam: float) -> int:
+    """λ → model count: each leaf model covers ~λ bytes of the collection
+    (the Eq. 8 granularity semantics), clamped exactly like
+    :func:`rmi_slot_starts` so equal results mean equal structures."""
+    n = max(int(D.size_bytes // max(float(lam), 1.0)), 1)
+    n = max(min(n, D.n), 1)
+    if D.n:
+        span = max(int(D.keys[-1]) - int(D.keys[0]), 1)
+        n = min(n, span + 1)
+    return n
+
+
+def build_rmi_leaf(D: KeyPositions, n_models: int) -> BandLayer:
+    """One equal-key-range linear-leaf layer: the RMI bottom level fitted
+    over the present slots (one band per non-empty slot)."""
+    _, _, _, starts = rmi_slot_starts(D, n_models)
+    return fit_bands_for_groups(D, starts)
+
+
+@register_builder("rmi_leaf")
+def _rmi_leaf_family(D: KeyPositions, lam: float, p: int):
+    return build_rmi_leaf(D, rmi_models_for_lam(D, lam))
+
+
+# many λ values clamp to the same model count: the sweep engine's per-λ
+# fallback consults canonical_lam so those builders share one LayerCache
+# entry (the reuse shows up in TuneStats.layers_reused)
+_rmi_leaf_family.canonical_lam = rmi_models_for_lam
+
+
+def build_rmi(D: KeyPositions, n_models: int) -> IndexDesign:
+    """Two-layer RMI with an equal-key-range linear root (CDF root model),
+    materialized for on-storage serving: the bottom level stores one 40 B
+    record per model *slot* (empty slots get a whole-data fallback band,
+    never queried for existing keys) so the root can address slot j at
+    byte 40·j exactly."""
+    n_models, bounds, gid, starts = rmi_slot_starts(D, n_models)
+    leaf = fit_bands_for_groups(D, starts)        # == build_rmi_leaf
     present = gid[starts]
 
-    # materialize one 40 B record per model slot; empty slots get a
-    # whole-data fallback band (never queried for existing keys)
+    k0 = int(D.keys[0])
+    span = max(int(D.keys[-1]) - k0, 1)
     node_keys = bounds
     x1 = node_keys.copy()
     y1 = np.full(n_models, (D.lo[0] + D.hi[-1]) // 2, dtype=POS_DTYPE)
@@ -113,15 +240,39 @@ def tune_rmi(D: KeyPositions, profile: StorageProfile,
 
 
 # ---------------------------------------------------------------------------
-# PGM-INDEX (Appendix B): bounded-ε greedy PLA per layer, bottom-up
+# PGM family: ε-bounded greedy PLA (FITing-tree / PGM segment discipline)
 # ---------------------------------------------------------------------------
-def build_pgm(D: KeyPositions, eps_records: int, record_bytes: int = 16) -> IndexDesign:
-    lam = 2.0 * eps_records * record_bytes
-    return _stack_until_root(D, lambda c: build_gband(c, lam=lam))
+@register_builder("pgm")
+def build_pgm_layer(D: KeyPositions, lam: float, p: int):
+    """ε-bounded greedy PLA: λ is the error bound ε in BYTES — every
+    emitted segment keeps its band half-width δ ≤ ε (+fit safety), i.e.
+    |ŷ(x) − y(x)| ≤ ε for all indexed keys.  ``p`` is ignored."""
+    return build_gband(D, lam=2.0 * float(lam))
+
+
+@register_multi_lam_builder("pgm")
+def build_pgm_multi(D: KeyPositions, lams, p: int) -> list:
+    return build_gband_multi(D, [2.0 * float(lam) for lam in lams], p)
+
+
+def pgm_builders(record_bytes: int = PGM_RECORD_BYTES,
+                 grid=PGM_EPS_GRID) -> list[LayerBuilder]:
+    """The paper's PGM candidate set: ε ∈ {16 … 1024} records."""
+    return [LayerBuilder(kind="pgm", lam=float(eps * record_bytes))
+            for eps in grid]
+
+
+def build_pgm(D: KeyPositions, eps_records: int,
+              record_bytes: int = PGM_RECORD_BYTES) -> IndexDesign:
+    """PGM (Appendix B): the registered ``pgm`` family stacked bottom-up
+    with the same ε per layer."""
+    eps_bytes = float(eps_records * record_bytes)
+    return _stack_until_root(
+        D, lambda c: BUILDER_FAMILIES.get("pgm")(c, eps_bytes, 0))
 
 
 def tune_pgm(D: KeyPositions, profile: StorageProfile,
-             grid=(16, 32, 64, 128, 256, 512, 1024)) -> TuneResult:
+             grid=PGM_EPS_GRID) -> TuneResult:
     best, best_cost = None, np.inf
     for eps in grid:
         design = build_pgm(D, eps)
@@ -146,10 +297,11 @@ def data_calculator(D: KeyPositions, profile: StorageProfile,
     stats = TuneStats()
     best, best_cost = IndexDesign(layers=(), data=D), expected_latency(
         IndexDesign(layers=(), data=D), profile)
+    gstep = BUILDER_FAMILIES.get("gstep")
     for p in p_grid:
         for lam in lam_grid:
             design = _stack_until_root(
-                D, lambda c: build_gstep(c, p=p, lam=lam), max_layers)
+                D, lambda c: gstep(c, lam, p), max_layers)
             stats.layers_built += design.n_layers
             for L in range(1, design.n_layers + 1):
                 sub = IndexDesign(layers=design.layers[:L], data=D)

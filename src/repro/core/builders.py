@@ -100,16 +100,24 @@ def greedy_partition(lo: np.ndarray, hi: np.ndarray, lam: float,
                            np.unique(orbit)])
 
 
-def _check_disjoint(D: KeyPositions) -> None:
+def check_disjoint(D: KeyPositions) -> None:
+    """Builder precondition: non-overlapping sorted position ranges.
+    Public for out-of-module builder families (e.g. baselines.py)."""
     if D.n > 1:
         assert np.all(D.hi[:-1] <= D.lo[1:]), (
             "builders require non-overlapping position ranges")
 
 
+_check_disjoint = check_disjoint
+
+
 # ---------------------------------------------------------------------------
 # GStep
 # ---------------------------------------------------------------------------
-def _gstep_from_starts(D: KeyPositions, starts: np.ndarray, p: int) -> StepLayer:
+def gstep_from_starts(D: KeyPositions, starts: np.ndarray, p: int) -> StepLayer:
+    """Construct a step layer from precomputed greedy piece boundaries —
+    the shared backend of :func:`build_gstep` and the multi-λ adapters
+    (including the ``btree`` page-discipline family in baselines.py)."""
     piece_keys = D.keys[starts]
     piece_pos = np.empty(len(starts) + 1, dtype=POS_DTYPE)
     piece_pos[:-1] = D.lo[starts]
@@ -123,15 +131,15 @@ def _gstep_from_starts(D: KeyPositions, starts: np.ndarray, p: int) -> StepLayer
 
 def build_gstep(D: KeyPositions, p: int, lam: float) -> StepLayer:
     """Greedy step builder (paper §A.1 (1)) — exact, fully vectorized."""
-    _check_disjoint(D)
+    check_disjoint(D)
     starts = greedy_partition(D.lo_f, D.hi_f, lam)      # piece start indices
-    return _gstep_from_starts(D, starts, p)
+    return gstep_from_starts(D, starts, p)
 
 
 # ---------------------------------------------------------------------------
 # band fitting helpers
 # ---------------------------------------------------------------------------
-def _fit_bands_for_groups(D: KeyPositions, starts: np.ndarray) -> BandLayer:
+def fit_bands_for_groups(D: KeyPositions, starts: np.ndarray) -> BandLayer:
     """Fit one band per group (line through first/last midpoints, width =
     max residual + safety).  Vectorized with segment reductions."""
     ends = np.append(starts[1:], D.n)
@@ -158,6 +166,12 @@ def _fit_bands_for_groups(D: KeyPositions, starts: np.ndarray) -> BandLayer:
     )
 
 
+# band-fitting is part of the public builder toolkit (used by the RMI
+# baseline family in baselines.py); the underscore name survives as an
+# alias for older call sites
+_fit_bands_for_groups = fit_bands_for_groups
+
+
 def _eband_starts(D: KeyPositions, lam: float) -> np.ndarray:
     lam = max(float(lam), 1.0)
     cell = ((D.lo_f - float(D.lo[0])) // lam).astype(np.int64)
@@ -170,8 +184,8 @@ def build_eband(D: KeyPositions, lam: float) -> BandLayer:
     Groups by the position grid ``⌊(y⁻ − y⁻_0)/λ⌋`` ("equal-size position
     ranges"); worst-case group extent ≤ λ + max record size.
     """
-    _check_disjoint(D)
-    return _fit_bands_for_groups(D, _eband_starts(D, lam))
+    check_disjoint(D)
+    return fit_bands_for_groups(D, _eband_starts(D, lam))
 
 
 def _gband_starts(D: KeyPositions, lam: float) -> np.ndarray:
@@ -227,8 +241,8 @@ def build_gband(D: KeyPositions, lam: float) -> BandLayer:
     band width ``2δ`` stays ≤ λ.  Galloping + binary search per node with
     vectorized feasibility, seeded by the previous group's size.
     """
-    _check_disjoint(D)
-    return _fit_bands_for_groups(D, _gband_starts(D, lam))
+    check_disjoint(D)
+    return fit_bands_for_groups(D, _gband_starts(D, lam))
 
 
 # ---------------------------------------------------------------------------
@@ -279,25 +293,25 @@ def _dedup_by_starts(D: KeyPositions, lams, starts_fn, construct):
 
 @register_multi_lam_builder("gstep")
 def build_gstep_multi(D: KeyPositions, lams, p: int) -> list:
-    _check_disjoint(D)
+    check_disjoint(D)
     lo_f, hi_f = D.lo_f, D.hi_f       # one float64 conversion for all λ
     return _dedup_by_starts(
         D, lams, lambda d, lam: greedy_partition(lo_f, hi_f, lam),
-        lambda starts: _gstep_from_starts(D, starts, int(p)))
+        lambda starts: gstep_from_starts(D, starts, int(p)))
 
 
 @register_multi_lam_builder("gband")
 def build_gband_multi(D: KeyPositions, lams, p: int) -> list:
-    _check_disjoint(D)
+    check_disjoint(D)
     return _dedup_by_starts(D, lams, _gband_starts,
-                            lambda starts: _fit_bands_for_groups(D, starts))
+                            lambda starts: fit_bands_for_groups(D, starts))
 
 
 @register_multi_lam_builder("eband")
 def build_eband_multi(D: KeyPositions, lams, p: int) -> list:
-    _check_disjoint(D)
+    check_disjoint(D)
     return _dedup_by_starts(D, lams, _eband_starts,
-                            lambda starts: _fit_bands_for_groups(D, starts))
+                            lambda starts: fit_bands_for_groups(D, starts))
 
 
 DEFAULT_FAMILIES = ("gstep", "gband", "eband")   # the paper's deployed set

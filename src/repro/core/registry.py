@@ -24,7 +24,10 @@ Third-party code registers through the public facade::
 
 The built-in entries are registered when :mod:`repro.core.builders` and
 :mod:`repro.core.airtune` are imported (both happen on ``import
-repro.core``).
+repro.core``); the paper's baseline families (``"btree"``, ``"rmi_leaf"``,
+``"pgm"``) register on :mod:`repro.core.baselines` import (also part of
+``import repro.core``), so they compete inside Alg. 2 like any other
+family.
 """
 from __future__ import annotations
 
@@ -87,7 +90,14 @@ SEARCH_STRATEGIES = Registry("search strategy")
 
 
 def register_builder(name: str, fn=None):
-    """Register a layer-builder family ``f(D, lam, p) -> Layer``."""
+    """Register a layer-builder family ``f(D, lam, p) -> Layer``.
+
+    Optional attribute: ``fn.canonical_lam(D, lam) -> hashable`` maps λ to
+    the family's internal parameter (e.g. ``rmi_leaf``'s clamped model
+    count).  The sweep engine keys its ``LayerCache`` on the canonical
+    value, so grid λs that resolve to the same structure build once and
+    count as ``TuneStats.layers_reused``.
+    """
     return BUILDER_FAMILIES.register(name, fn)
 
 

@@ -48,7 +48,7 @@ from .complexity import tau_hat
 from .keyset import KeyPositions
 from .latency import batched_mean_read_costs
 from .nodes import Layer, outline
-from .registry import MULTI_LAM_FAMILIES
+from .registry import BUILDER_FAMILIES, MULTI_LAM_FAMILIES
 from .storage import StorageProfile
 
 SCORE_SAMPLE = 65536   # pairs used for candidate *ranking* (§5.3); the
@@ -103,8 +103,11 @@ class LayerCache:
     one dataset for several storage tiers, certifying several strategies
     against each other (benchmarks/tune_bench.py), or warm-starting a
     re-tune after a profile change all rebuild zero layers for
-    already-expanded collections.  Only T(Δ)-independent artifacts live
-    here; est/exact scores and τ̂ stay per-engine.
+    already-expanded collections.  The layer/outline pairs are
+    T(Δ)-independent; the est/exact/τ̂ memos travel WITH the cached
+    entries but are keyed per profile (``_LayerEntry.scores``), so
+    sharing a cache across tiers can never alias costs between profiles
+    — while re-tuning the same tier skips rescoring entirely.
     """
 
     def __init__(self):
@@ -186,9 +189,19 @@ class SweepEngine:
         lc = self.layer_cache._entries
         entries: list = [None] * len(self.builders)
         for (kind, p), idxs in self._columns:
+            # a registered family may canonicalize λ (e.g. rmi_leaf maps
+            # λ → its clamped model count): builders whose λ values
+            # canonicalize alike share one cache entry and one build
+            canon = getattr(BUILDER_FAMILIES.get(kind), "canonical_lam",
+                            None) if kind in BUILDER_FAMILIES else None
+
+            def _key(i):
+                lam = self.builders[i].lam
+                return (fp, kind, canon(D, lam) if canon else lam, p)
+
             missing = []
             for i in idxs:
-                e = lc.get((fp, kind, self.builders[i].lam, p))
+                e = lc.get(_key(i))
                 if e is not None:       # built by an earlier tune/vertex
                     entries[i] = e
                     stats.layers_reused += 1
@@ -200,7 +213,13 @@ class SweepEngine:
                 built = MULTI_LAM_FAMILIES.get(kind)(
                     D, [self.builders[i].lam for i in missing], p)
             else:                       # single-λ-only family: legacy builds
-                built = [self.builders[i](D) for i in missing]
+                built, by_ck = [], {}
+                for i in missing:
+                    ck = _key(i)
+                    layer = by_ck.get(ck)
+                    if layer is None:   # canonical-λ duplicates build once
+                        layer = by_ck[ck] = self.builders[i](D)
+                    built.append(layer)
             made: dict[int, _LayerEntry] = {}
             for i, layer in zip(missing, built):
                 e = made.get(id(layer))
@@ -209,7 +228,7 @@ class SweepEngine:
                     stats.layers_built += 1
                 else:
                     stats.layers_reused += 1
-                lc[(fp, kind, self.builders[i].lam, p)] = e
+                lc[_key(i)] = e
                 entries[i] = e
 
         # shrink guard for every candidate in one vectorized comparison

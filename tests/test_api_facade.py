@@ -149,6 +149,40 @@ def test_lifecycle_roundtrip_bit_identical(tmp_path):
     assert verify_lookup(Index.open(path, data=D).design, qs)
 
 
+def test_baseline_families_roundtrip_provenance(tmp_path):
+    """families=("btree", "pgm", "gstep") through the whole lifecycle:
+    tune → build → save → open → serve round-trips, and the reopened meta
+    records the baseline family names in IndexFileMeta.tune / describe()."""
+    D = _data(n=15_000)
+    spec = SPEC.replace(families=("btree", "pgm", "gstep"))
+    path = str(tmp_path / "base.air")
+    idx = Index.tune(D, "azure_ssd", spec).build()
+    names = idx.result.builder_names
+    assert names, "search must place at least one layer on this input"
+    assert all(n.split("(")[0] in {"btree", "pgm", "gstep"} for n in names)
+    idx.save(path)
+    qs = np.random.default_rng(5).choice(D.keys, 300)
+    mem = idx.lookup(qs)
+
+    reopened = Index.open(path)
+    assert reopened.spec == spec
+    assert reopened.spec.families == ("btree", "pgm", "gstep")
+    assert reopened.file_meta.tune["spec"]["families"] == \
+        ["btree", "pgm", "gstep"]
+    assert tuple(reopened.file_meta.tune["builder_names"]) == names
+    # describe() surfaces the provenance without touching the search
+    desc = reopened.describe()
+    assert "btree" in desc and "pgm" in desc and names[0] in desc
+    with reopened.serve() as svc:
+        got = svc.lookup(qs)
+    assert np.array_equal(got[:, 0], mem[:, 0])
+    assert np.array_equal(got[:, 1], mem[:, 1])
+    with Index.open(path) as disk:
+        assert np.array_equal(disk.lookup(qs), got)
+    # materialization with data reproduces a valid design
+    assert verify_lookup(Index.open(path, data=D).design, qs)
+
+
 def test_disk_opened_index_never_resarches(tmp_path):
     """Opening a file must not silently re-run the search: the file IS the
     design, and cost/strategy come from the recorded provenance."""

@@ -1,0 +1,84 @@
+"""Hypothesis property tests for the baseline-family invariants (§7.1 /
+Appendix B): pgm's ε bound, btree's page discipline, rmi_leaf's monotone
+root routing.  Non-property baseline coverage (registration, wrapper
+parity, in-search dominance) lives in test_core_airtune.py so it runs
+without the optional hypothesis dependency."""
+import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="optional test dep (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import KeyPositions
+from repro.core.baselines import (BTREE_PAGE_BYTES, PGM_EPS_GRID,
+                                  PGM_RECORD_BYTES, btree_fanout, build_rmi,
+                                  build_rmi_leaf, rmi_slot_starts)
+from repro.core.nodes import STEP_PIECE_BYTES
+from repro.core.registry import BUILDER_FAMILIES
+
+
+def _random_data(data, n_max=400, key_space=2**40, record=PGM_RECORD_BYTES):
+    n = data.draw(st.integers(2, n_max))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    keys = np.unique(rng.integers(0, key_space, n).astype(np.uint64))
+    return KeyPositions.fixed_record(keys, record)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_pgm_layer_respects_eps_bound(data):
+    """Every pgm layer keeps |ŷ(x) − y(x)| ≤ ε on ALL indexed keys: band
+    half-width δ ≤ ε (+fit safety) and Eq. (1) validity."""
+    D = _random_data(data)
+    eps_records = data.draw(st.sampled_from(PGM_EPS_GRID))
+    eps_bytes = float(eps_records * PGM_RECORD_BYTES)
+    layer = BUILDER_FAMILIES.get("pgm")(D, eps_bytes, 0)
+    layer.validate_against(D)                      # ŷ ⊇ y, Eq. (1)
+    # greedy feasibility admits a group only when resid + safety ≤ ε;
+    # the built δ adds ≤ 2 bytes of rint/safety slack on top
+    assert np.all(layer.delta <= eps_bytes + 2.0)
+    # the same bound in the paper's units: error ≤ ε records (+slack)
+    lo, hi = layer.predict(D.keys)
+    mid_pred = 0.5 * (lo.astype(np.float64) + hi.astype(np.float64))
+    err_records = np.abs(mid_pred - D.mid_f) / PGM_RECORD_BYTES
+    assert np.all(err_records <= eps_records + 1.0)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_btree_node_discipline(data):
+    """btree nodes follow the page discipline: fanout ≤ p(λ) and node
+    size ≤ λ for every page size on the grid."""
+    D = _random_data(data)
+    lam = float(data.draw(st.sampled_from([512, 1024, 4096, 16384])))
+    layer = BUILDER_FAMILIES.get("btree")(D, lam, 0)
+    layer.validate_against(D)
+    p = btree_fanout(lam)
+    pieces = np.diff(layer.node_piece_off)
+    assert np.all(pieces >= 1) and np.all(pieces <= p)
+    assert np.all(layer.node_sizes() <= lam)
+    # the default page reproduces the paper's 255-fanout B-TREE node
+    assert btree_fanout(BTREE_PAGE_BYTES) == 255
+    assert 255 * STEP_PIECE_BYTES < BTREE_PAGE_BYTES
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_rmi_leaf_valid_and_root_monotone(data):
+    """rmi_leaf layers are valid; the two-layer RMI's CDF root routes
+    monotonically over the whole key range."""
+    D = _random_data(data)
+    n_models = data.draw(st.integers(1, 64))
+    leaf = build_rmi_leaf(D, n_models)
+    leaf.validate_against(D)
+    assert np.all(np.diff(leaf.node_keys.astype(np.int64)) > 0)
+    n, bounds, gid, starts = rmi_slot_starts(D, n_models)
+    assert leaf.n_nodes == len(starts) <= n
+    assert np.all(np.diff(gid) >= 0)               # slot routing monotone
+    # the materialized root band is monotone non-decreasing in the key
+    design = build_rmi(D, n_models)
+    root = design.layers[1]
+    assert float(root.m[0]) >= 0.0
+    qs = np.linspace(float(D.keys[0]), float(D.keys[-1]),
+                     257).astype(np.uint64)
+    lo, hi = root.predict(qs)
+    assert np.all(np.diff(lo) >= 0) and np.all(np.diff(hi) >= 0)

@@ -1,13 +1,25 @@
-"""AirTune search: optimality vs brute force, paper-claim validations."""
+"""AirTune search: optimality vs brute force, paper-claim validations,
+and the registry-driven baseline families (registration, wrapper parity,
+in-search dominance — hypothesis-based invariants live in
+test_baselines.py)."""
 import numpy as np
 import pytest
 
 from repro.core import (AffineProfile, KeyPositions, PROFILES, airtune,
-                        brute_force, expected_latency, ideal_latency_with_index,
+                        brute_force, build_gband, build_gstep,
+                        expected_latency, ideal_latency_with_index,
                         make_builders, mean_read_volume, step_index_complexity,
                         tau_hat, verify_lookup)
-from repro.core.baselines import (build_fixed_btree, data_calculator,
-                                  homogeneous_airtune, tune_pgm, tune_rmi)
+from repro.core.baselines import (BASELINE_FAMILIES, BTREE_PAGE_BYTES,
+                                  PGM_EPS_GRID, PGM_RECORD_BYTES,
+                                  btree_fanout, build_btree_layer,
+                                  build_btree_multi, build_fixed_btree,
+                                  build_pgm, build_pgm_layer, build_pgm_multi,
+                                  build_rmi_leaf, data_calculator,
+                                  homogeneous_airtune, pgm_builders,
+                                  rmi_models_for_lam, tune_pgm, tune_rmi)
+from repro.core.builders import _fit_bands_for_groups, fit_bands_for_groups
+from repro.core.registry import BUILDER_FAMILIES, MULTI_LAM_FAMILIES
 
 from conftest import make_keys
 
@@ -119,3 +131,133 @@ def test_end_to_end_lookup_valid():
         res = airtune(D, PROFILES["azure_ssd"], k=5)
         qs = rng.choice(D.keys, 2_000)
         assert verify_lookup(res.design, qs)
+
+
+# ---------------------------------------------------------------------------
+# registry-driven baseline families (§7.1 / Appendix B in-framework)
+# ---------------------------------------------------------------------------
+def test_baseline_families_are_registered():
+    for fam in BASELINE_FAMILIES:
+        assert fam in BUILDER_FAMILIES
+    # fused λ-columns for btree/pgm; rmi_leaf deliberately stays on the
+    # per-λ fallback and instead canonicalizes λ → model count
+    assert "btree" in MULTI_LAM_FAMILIES and "pgm" in MULTI_LAM_FAMILIES
+    assert "rmi_leaf" not in MULTI_LAM_FAMILIES
+    assert callable(getattr(BUILDER_FAMILIES.get("rmi_leaf"),
+                            "canonical_lam", None))
+    # selectable by name on the Eq. (8) grid
+    F = make_builders(lam_low=2**10, lam_high=2**12, kinds=BASELINE_FAMILIES)
+    assert {f.kind for f in F} == set(BASELINE_FAMILIES)
+    for b in F:
+        assert b.name.startswith(b.kind)
+
+
+def test_fit_bands_for_groups_is_public_with_alias():
+    """Satellite fix: the band-fitting helper is public API now; the old
+    underscore name survives as an alias."""
+    assert _fit_bands_for_groups is fit_bands_for_groups
+    D = _data(n=500)
+    starts = np.array([0, 100, 300], dtype=np.int64)
+    layer = fit_bands_for_groups(D, starts)
+    layer.validate_against(D)
+    assert layer.n_nodes == 3
+
+
+def test_btree_wrapper_routes_through_family():
+    D = _data(n=4_000)
+    default = build_fixed_btree(D)
+    via_family = build_btree_layer(D, BTREE_PAGE_BYTES, 0)
+    ref = build_gstep(D, p=255, lam=4096.0)       # the paper's exact B-TREE
+    assert btree_fanout(BTREE_PAGE_BYTES) == 255
+    for a in (default.layers[0], via_family):
+        assert np.array_equal(a.piece_keys, ref.piece_keys)
+        assert np.array_equal(a.piece_pos, ref.piece_pos)
+        assert np.array_equal(a.node_piece_off, ref.node_piece_off)
+    # explicit p keeps the legacy decoupled (p, λ) shape
+    legacy = build_fixed_btree(D, p=8, lam=4096.0)
+    assert np.array_equal(legacy.layers[0].node_piece_off,
+                          build_gstep(D, p=8, lam=4096.0).node_piece_off)
+
+
+def test_pgm_wrapper_routes_through_family():
+    D = _data(n=4_000)
+    for eps in (16, 256):
+        d = build_pgm(D, eps)
+        ref = build_gband(D, 2.0 * eps * PGM_RECORD_BYTES)
+        assert np.array_equal(d.layers[0].node_keys, ref.node_keys)
+        assert np.array_equal(d.layers[0].delta, ref.delta)
+    lams = {b.lam for b in pgm_builders()}
+    assert lams == {float(e * PGM_RECORD_BYTES) for e in PGM_EPS_GRID}
+
+
+def test_rmi_models_for_lam_sweeps_n():
+    D = _data(n=4_000)
+    ns = [rmi_models_for_lam(D, 2.0**s) for s in range(8, 21)]
+    assert all(a >= b for a, b in zip(ns, ns[1:]))  # coarser λ → fewer models
+    assert ns[-1] == 1 and ns[0] > 1
+    leaf = BUILDER_FAMILIES.get("rmi_leaf")(D, 2.0**12, 0)
+    assert np.array_equal(leaf.node_keys,
+                          build_rmi_leaf(D, rmi_models_for_lam(D, 2.0**12))
+                          .node_keys)
+
+
+def test_baseline_multi_lam_builds_match_single():
+    """Each multi-λ element is bit-identical to the single-λ build; λ
+    values resolving to the same structure share one object."""
+    D = _data(n=4_000)
+    lams = [2.0**s for s in range(8, 21, 2)]
+    bt = build_btree_multi(D, lams, 0)
+    for g, lam in zip(bt, lams):
+        w = build_btree_layer(D, lam, 0)
+        assert np.array_equal(g.piece_keys, w.piece_keys)
+        assert np.array_equal(g.node_piece_off, w.node_piece_off)
+    pg = build_pgm_multi(D, lams, 0)
+    for g, lam in zip(pg, lams):
+        w = build_pgm_layer(D, lam, 0)
+        assert np.array_equal(g.node_keys, w.node_keys)
+        assert np.array_equal(g.delta, w.delta)
+    # the grid saturates on this extent: some λs must share an object
+    assert len({id(x) for x in pg}) < len(pg)
+
+
+def test_union_search_dominates_each_baseline_family():
+    """§7.2 strict containment: brute force over the union family set can
+    only beat brute force restricted to any single baseline family."""
+    D = _data(n=3_000)
+    kw = dict(lam_low=2**10, lam_high=2**16, base=8.0)
+    for pname in ("azure_ssd", "azure_nfs"):
+        prof = PROFILES[pname]
+        union = brute_force(
+            D, prof, make_builders(kinds=("gstep", "gband", "eband")
+                                   + BASELINE_FAMILIES, **kw), max_layers=3)
+        for fam in BASELINE_FAMILIES:
+            alone = brute_force(D, prof,
+                                make_builders(kinds=(fam,), **kw),
+                                max_layers=3)
+            assert union.cost <= alone.cost * (1 + 1e-12), (pname, fam)
+
+
+def test_airtune_with_baselines_beats_legacy_tuners():
+    """Guided search over the union set still beats the legacy fixed-shape
+    tuners (benchmarks/baseline_bench.py's dominance property, in
+    miniature)."""
+    D = _data(n=8_000)
+    prof = PROFILES["azure_ssd"]
+    builders = make_builders(lam_low=2**8, lam_high=2**18,
+                             kinds=("gstep", "gband", "eband")
+                             + BASELINE_FAMILIES)
+    ours = airtune(D, prof, builders, k=5).cost
+    assert ours <= expected_latency(build_fixed_btree(D), prof) * 1.0001
+    assert ours <= min(expected_latency(build_pgm(D, e), prof)
+                       for e in PGM_EPS_GRID) * 1.0001
+
+
+def test_pgm_eps_grid_builders_search_end_to_end():
+    """The paper's exact ε grid is a usable candidate set on its own."""
+    D = _data(n=20_000)
+    res = airtune(D, PROFILES["azure_ssd"], pgm_builders(), k=3)
+    assert res.design.n_layers >= 1
+    assert all(n.startswith("pgm(") for n in res.builder_names)
+    assert res.cost == pytest.approx(
+        expected_latency(res.design, PROFILES["azure_ssd"]), rel=1e-9)
+    assert verify_lookup(res.design, D.keys[::17])
