@@ -9,7 +9,16 @@ Exercises :class:`repro.serve.IndexService` against a paged index file:
   * **cache sweep** — hit rate and modeled time for a skewed (Zipf-ish)
     query stream as the tiered cache grows;
   * **throughput** — wall-clock queries/sec of the batched engine vs the
-    one-query-at-a-time ``lookup_serialized`` walk.
+    one-query-at-a-time ``lookup_serialized`` walk;
+  * **drift scenario** — tune on ``azure_ssd``, serve on a degraded tier:
+    the persisted ServeStats must flag drift (``repro.api.drift``) and a
+    warm-started retune must recover the cold-retune cost (within 1%)
+    with strictly fewer layer builds — a failed recovery is FATAL, only
+    wall-clock regressions degrade to warnings;
+  * **baselines on the serve path** — the §7.2 btree/rmi/pgm designs
+    served through the same ``IndexService`` + cache as the AirTune
+    design, so ``BENCH_serve.json`` trends the dominance margin on the
+    *real* partial-read path, not just the Eq. 6 model.
 
 Prints the repo's ``name,us_per_call,derived`` CSV; ``--json PATH`` also
 dumps a machine-readable ``BENCH_serve.json`` so later PRs have a perf
@@ -30,8 +39,9 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
-from repro.api import Index, TuneSpec
+from repro.api import Index, TuneSpec, detect_drift
 from repro.core import KeyPositions, PROFILES, expected_latency
+from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
 from repro.core.serialize import lookup_serialized
 from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
@@ -41,6 +51,13 @@ RECORD = 16
 PAGE = 4096
 TIERS = ("azure_nfs", "azure_ssd")
 CACHE_SIZES = (32 << 10, 256 << 10, 2 << 20)
+
+# drift scenario: tuned-for tier vs the degraded tier it is served on
+DRIFT_TUNED = "azure_ssd"
+DRIFT_SERVED = "azure_hdd"
+DRIFT_SPEC = TuneSpec(lam_low=2**8, lam_high=2**17, lam_base=2.0, k=4,
+                      max_layers=8, page_bytes=PAGE,
+                      cache_bytes=(64 << 10, 512 << 10))
 
 
 def emit(name, us, derived):
@@ -135,6 +152,110 @@ def bench_engine_vs_scalar(idx: Index, queries: np.ndarray) -> dict:
             "speedup": scalar_wall / max(engine_wall, 1e-9)}
 
 
+def bench_drift(D: KeyPositions, workdir: str) -> dict:
+    """The observe→retune loop end to end: tune on DRIFT_TUNED, serve on
+    DRIFT_SERVED, detect drift from persisted ServeStats, then warm- vs
+    cold-retune for the observed profile.  The warm search must land
+    within 1% of the cold cost with strictly fewer builds (fatal gate);
+    wall-clock only informs."""
+    idx = Index.tune(D, DRIFT_TUNED, DRIFT_SPEC).build()
+    path = os.path.join(workdir, "drift.air")
+    idx.save(path)
+    rng = np.random.default_rng(11)
+    svc = idx.serve(profile=DRIFT_SERVED, persist_stats=True)
+    for _ in range(8):
+        svc.lookup(_skewed_queries(D.keys, 512, rng))
+    report = detect_drift(svc)
+    observed = svc.observed_profile(measured=False)   # modeled degraded
+    #                                 tier + observed hit rate: CI-stable
+    svc.close()
+
+    t0 = time.perf_counter()
+    cold = idx.retune(observed).build()
+    cold_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    warm = idx.retune(observed, warm_start=True).build()
+    warm_wall = time.perf_counter() - t0
+
+    recovery = warm.cost / cold.cost if cold.cost > 0 else float("inf")
+    work_ok = (warm.stats.layers_reused > cold.stats.layers_reused
+               and warm.stats.layers_built < cold.stats.layers_built)
+    return {
+        "tuned_tier": DRIFT_TUNED, "served_tier": DRIFT_SERVED,
+        "report": report.to_dict(),
+        "drift_detected": bool(report.drifted and report.action == "retune"),
+        "recorded_cost_us": idx.cost * 1e6,
+        "cold": {"cost_us": cold.cost * 1e6, "wall_s": cold_wall,
+                 "built": cold.stats.layers_built,
+                 "reused": cold.stats.layers_reused},
+        "warm": {"cost_us": warm.cost * 1e6, "wall_s": warm_wall,
+                 "built": warm.stats.layers_built,
+                 "reused": warm.stats.layers_reused,
+                 "seeded": warm.stats.layers_seeded},
+        "recovery_ratio": recovery,          # ≤ 1.01 required
+        "work_reduction": (cold.stats.layers_built
+                           / max(warm.stats.layers_built, 1)),
+        "warm_recovers": bool(recovery <= 1.01 and work_ok),
+        "warm_wall_faster": bool(warm_wall < cold_wall),
+    }
+
+
+def bench_baseline_serve(D: KeyPositions, tier: str, workdir: str, *,
+                         n_batches: int = 8, batch: int = 512) -> dict:
+    """§7.2 on the real serve path: the AirTune design and the fixed-shape
+    baseline designs served through the SAME engine + cache against the
+    same skewed stream; the dominance margin is per-query observed E[T]."""
+    profile = PROFILES[tier]
+    designs = {
+        "airtune": Index.tune(D, tier, DRIFT_SPEC).build().result.design,
+        "btree": build_fixed_btree(D),
+        "rmi": tune_rmi(D, profile).design,
+        "pgm": tune_pgm(D, profile).design,
+    }
+    rng = np.random.default_rng(23)
+    stream = [_skewed_queries(D.keys, batch, rng) for _ in range(n_batches)]
+    rows = {}
+    for name, design in designs.items():
+        path = os.path.join(workdir, f"baseline_{name}.air")
+        Index.from_design(design, spec=TuneSpec(page_bytes=PAGE),
+                          profile=tier).save(path)
+        svc = None
+        try:
+            from repro.serve import IndexService
+            svc = IndexService(path, profile=tier,
+                               cache_bytes=(64 << 10, 512 << 10))
+            t0 = time.perf_counter()
+            for qs in stream:
+                svc.lookup(qs)
+            wall = time.perf_counter() - t0
+            s = svc.stats
+            rows[name] = {
+                "layers": len(design.layers),
+                "eq6_cost_us": expected_latency(design, profile) * 1e6,
+                "observed_us": s.query_modeled_seconds * 1e6,
+                "walk_us": s.walk_query_seconds * 1e6,
+                "hit_rate": s.hit_rate,
+                "preads": s.preads,
+                "bytes_fetched": s.bytes_fetched,
+                "qps": n_batches * batch / max(wall, 1e-9),
+            }
+        finally:
+            if svc is not None:
+                svc.close()
+            os.unlink(path)
+    air = rows["airtune"]["observed_us"]
+    for name, r in rows.items():
+        if name != "airtune":
+            r["margin_vs_airtune"] = r["observed_us"] / max(air, 1e-12)
+    margins = [r["margin_vs_airtune"] for n, r in rows.items()
+               if n != "airtune"]
+    return {"tier": tier, "designs": rows,
+            "min_margin": min(margins),
+            # §7.2 on the serve path: AirTune ≤ every baseline (small
+            # slack: cache/residency interactions are not in the model)
+            "dominates": bool(min(margins) >= 0.999)}
+
+
 def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
     keys = sosd_like("gmm", n_keys)
     D = KeyPositions.fixed_record(keys, RECORD)
@@ -173,11 +294,46 @@ def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
     emit("serve_engine_vs_scalar", 0.0,
          f"engine={ev['engine_qps']:.0f}q/s scalar={ev['scalar_qps']:.0f}q/s "
          f"speedup={ev['speedup']:.1f}x")
+
+    workdir = os.path.dirname(path)
+    drift = bench_drift(D, workdir)
+    results["drift"] = drift
+    emit(f"serve_drift_{DRIFT_TUNED}_to_{DRIFT_SERVED}",
+         drift["report"]["observed_us"] or 0.0,
+         f"ratio={drift['report']['ratio']:.2f} "
+         f"action={drift['report']['action']} "
+         f"hit_rate={drift['report']['hit_rate']:.3f}")
+    emit("serve_drift_retune", drift["warm"]["cost_us"],
+         f"recovery={drift['recovery_ratio']:.4f} "
+         f"warm_built={drift['warm']['built']} "
+         f"cold_built={drift['cold']['built']} "
+         f"reused={drift['warm']['reused']} "
+         f"work_reduction={drift['work_reduction']:.1f}x")
+
+    results["baseline_serve"] = []
+    for tier in ("azure_ssd", "azure_hdd"):
+        bs = bench_baseline_serve(D, tier, workdir)
+        results["baseline_serve"].append(bs)
+        for name, r in bs["designs"].items():
+            mg = r.get("margin_vs_airtune")
+            emit(f"serve_baseline_{tier}_{name}", r["observed_us"],
+                 f"hit_rate={r['hit_rate']:.3f} qps={r['qps']:.0f}"
+                 + (f" margin={mg:.2f}x" if mg is not None else ""))
+        emit(f"serve_baseline_{tier}_dominance", 0.0,
+             f"min_margin={bs['min_margin']:.3f} "
+             f"dominates={bs['dominates']}")
+
     ok = all(cw["warm_fewer_bytes"] and cw["warm_faster_modeled"]
              for cw in results["cold_warm"])
     results["acceptance_warm_beats_cold_all_tiers"] = ok
+    results["acceptance_drift_recovery"] = bool(
+        drift["drift_detected"] and drift["warm_recovers"])
+    results["baseline_serve_dominates_all_tiers"] = all(
+        bs["dominates"] for bs in results["baseline_serve"])
     emit("serve_acceptance", 0.0,
-         f"warm_beats_cold_on_{len(results['cold_warm'])}_tiers={ok}")
+         f"warm_beats_cold_on_{len(results['cold_warm'])}_tiers={ok} "
+         f"drift_recovery={results['acceptance_drift_recovery']} "
+         f"baseline_dominance={results['baseline_serve_dominates_all_tiers']}")
     os.unlink(path)
     return results
 
@@ -195,7 +351,38 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {args.json}", flush=True)
+
+    # wall-clock signals only warn (noisy CI runners must not redden the
+    # build); correctness/recovery regressions below are fatal
+    if results["engine_vs_scalar"]["speedup"] < 1.0:
+        print("::warning::serve engine slower than the scalar walk "
+              f"(speedup={results['engine_vs_scalar']['speedup']:.2f}x)")
+    if not results["drift"]["warm_wall_faster"]:
+        print("::warning::warm retune not faster in wall-clock "
+              f"(warm={results['drift']['warm']['wall_s']:.2f}s "
+              f"cold={results['drift']['cold']['wall_s']:.2f}s)")
+    if not results["baseline_serve_dominates_all_tiers"]:
+        # trended, not enforced: cache/residency interactions are outside
+        # the Eq. 6 model the dominance claim is proven under
+        print("::warning::baseline design beat AirTune on the serve path "
+              f"(min margins: "
+              f"{[bs['min_margin'] for bs in results['baseline_serve']]})")
+
+    fatal = []
     if not results["acceptance_warm_beats_cold_all_tiers"]:
+        fatal.append("warm cache pass did not beat the cold pass")
+    if not results["drift"]["drift_detected"]:
+        fatal.append("degraded tier not flagged by drift detection")
+    if not results["drift"]["warm_recovers"]:
+        fatal.append(
+            f"warm retune failed recovery: cost ratio "
+            f"{results['drift']['recovery_ratio']:.4f} (need <= 1.01) or "
+            f"no work reduction (warm built "
+            f"{results['drift']['warm']['built']} vs cold "
+            f"{results['drift']['cold']['built']})")
+    if fatal:
+        for msg in fatal:
+            print(f"::error::{msg}")
         sys.exit(1)
 
 

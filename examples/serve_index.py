@@ -11,7 +11,11 @@
 4. closes the loop with AirTune: the observed hit rate becomes a
    :class:`repro.core.CachedProfile` and :meth:`Index.retune` re-tunes the
    index *for* the cache (paper Fig. 1: a hotter tier wants a shallower
-   index) using the spec the file remembers.
+   index) using the spec the file remembers,
+5. closes it end to end: serving on a degraded tier persists ServeStats
+   next to the file, :func:`repro.api.detect_drift` flags the drift, and
+   a warm-started retune (shared ``LayerCache``) searches again for the
+   observed profile at a fraction of the cold-search work.
 
 Run:  PYTHONPATH=src python examples/serve_index.py
 """
@@ -72,12 +76,32 @@ cold.close()
 
 print("== re-tune FOR the cache (CachedProfile via Index.retune) ==")
 eff = svc.cached_profile()           # T(Δ) at the observed hit rate
-retuned = idx.retune(eff, k=3).build()    # recorded spec, new effective tier
-plain = idx.retune(PROFILES[tier], k=3).build()
+# warm_start shares the Index's LayerCache across retunes: every layer
+# built here is free for the drift retune below
+retuned = idx.retune(eff, k=3, warm_start=True).build()
+plain = idx.retune(PROFILES[tier], k=3, warm_start=True).build()
 print(f"observed hit rate: {eff.hit_rate:.3f}")
 print(f"tuned for raw {tier}:  {plain.describe()}")
 print(f"tuned for cached {tier}: {retuned.describe()}")
 print(f"(current 3-layer design under cached profile: "
       f"{expected_latency(idx.design, eff) * 1e6:.1f}us)")
 svc.close()
+
+print("== the observe→retune loop (drift → warm-started search) ==")
+from repro.api import detect_drift  # noqa: E402  (narrative example order)
+
+degraded = "azure_hdd"                       # the tier it ACTUALLY runs on
+svc = idx.serve(profile=degraded, persist_stats=True)
+for _ in range(6):
+    svc.lookup(rng.choice(D.keys, 512))
+report = detect_drift(svc, min_queries=1024)
+print(report.describe())
+observed = svc.observed_profile(measured=False)
+svc.close()                                  # snapshot → index.air.stats.json
+if report.action == "retune":
+    warm = idx.retune(observed, warm_start=True, k=3).build()
+    print(f"warm retune for {degraded}: {warm.result.describe()}")
+    print(f"  (reused {warm.stats.layers_reused} builds from the earlier "
+          f"searches via the shared LayerCache, built "
+          f"{warm.stats.layers_built} fresh)")
 print("done.")

@@ -30,11 +30,15 @@ from repro.core.registry import (BUILDER_FAMILIES, SEARCH_STRATEGIES,
                                  register_strategy)
 from repro.core.storage import PROFILES, StorageProfile
 
+from .drift import (DriftReport, detect_drift, detect_drift_from_file,
+                    drift_from_stats)
 from .index import Index, resolve_profile
 from .spec import TuneSpec
 
 __all__ = [
     "Index", "TuneSpec", "SearchStrategy", "TuneResult", "TuneStats",
+    "DriftReport", "detect_drift", "detect_drift_from_file",
+    "drift_from_stats",
     "BASELINE_FAMILIES", "BUILDER_FAMILIES", "SEARCH_STRATEGIES", "Registry",
     "register_builder", "register_strategy",
     "PROFILES", "StorageProfile", "resolve_profile",

@@ -21,6 +21,8 @@ All lookup paths return bit-identical ``(q, 2)`` data-layer byte ranges
 """
 from __future__ import annotations
 
+import dataclasses
+import inspect
 import os
 
 import numpy as np
@@ -28,12 +30,14 @@ import numpy as np
 from repro.core.keyset import KeyPositions
 from repro.core.latency import IndexDesign, expected_latency
 from repro.core.lookup import lookup_batch
+from repro.core.nodes import BandLayer, StepLayer, outline
 from repro.core.registry import SEARCH_STRATEGIES
 from repro.core.airtune import TuneResult, TuneStats
 from repro.core.serialize import (SerializedIndex, materialize_design,
                                   read_meta, write_index)
 from repro.core.storage import (PROFILES, StorageProfile, profile_from_dict,
                                 profile_to_dict)
+from repro.core.sweep import DEFAULT_CACHE_ENTRIES, LayerCache
 
 from .spec import TuneSpec
 
@@ -55,6 +59,80 @@ def resolve_profile(profile) -> tuple[StorageProfile | None, str | None]:
                     f"got {type(profile).__name__}")
 
 
+# ---------------------------------------------------------------------------
+# warm-start seed recovery (ROADMAP: incremental re-tune on drift)
+# ---------------------------------------------------------------------------
+# Step layers lose their node grouping on disk (serialize.materialize_design
+# treats each piece as a node) and band layers lose clamp_lo; seeding the
+# search's LayerCache with such a layer would poison the memo — the cached
+# outline would differ from what the named builder builds.  These helpers
+# restore the exact build, per family discipline, before seeding.
+_STEP_GROUPING = {
+    "gstep": lambda b: int(b.p),
+}
+_BAND_KINDS = frozenset({"gband", "eband", "pgm", "rmi_leaf"})
+
+
+def _btree_grouping(b) -> int:
+    from repro.core.baselines import btree_fanout   # lazy: api sits above
+    return btree_fanout(b.lam)
+
+
+_STEP_GROUPING["btree"] = _btree_grouping
+
+
+def _canonical_seed_layer(layer, builder, cur: KeyPositions):
+    """The layer exactly as ``builder`` would (re)build it on ``cur``, or
+    None when fidelity cannot be guaranteed (unknown family discipline)."""
+    if isinstance(layer, StepLayer):
+        grouping = _STEP_GROUPING.get(builder.kind)
+        if grouping is None:
+            return None
+        p = max(grouping(builder), 1)
+        P = layer.n_pieces
+        off = np.append(np.arange(0, P, p, dtype=np.int64), np.int64(P))
+        return StepLayer(piece_keys=layer.piece_keys,
+                         piece_pos=layer.piece_pos, node_piece_off=off)
+    if isinstance(layer, BandLayer) and builder.kind in _BAND_KINDS:
+        # fit_bands_for_groups anchors clamp_lo at the collection's first
+        # position; the file format only records clamp_hi (end_pos)
+        return dataclasses.replace(layer, clamp_lo=int(cur.lo[0]))
+    return None
+
+
+def recover_seed_layers(builder_names, layers, builders,
+                        data: KeyPositions) -> list:
+    """Reconstruct warm-start ``(name, layer)`` seed pairs from a
+    disk-materialized design + its recorded builder provenance.  Stops at
+    the first layer whose recorded builder is absent from ``builders`` or
+    whose family discipline we cannot restore bit-exactly (the collections
+    above it would no longer line up with search vertices)."""
+    by_name = {b.name: b for b in builders}
+    out: list = []
+    cur = data
+    for name, layer in zip(builder_names, layers):
+        b = by_name.get(name)
+        if b is None:
+            break
+        fixed = _canonical_seed_layer(layer, b, cur)
+        if fixed is None:
+            break
+        out.append((name, fixed))
+        cur = outline(fixed, cur)
+    return out
+
+
+def _strategy_accepts(strategy, name: str) -> bool:
+    """Third-party strategies (SearchStrategy protocol) need not accept the
+    built-ins' extended kwargs — pass them only when the signature does."""
+    try:
+        params = inspect.signature(strategy).parameters
+    except (TypeError, ValueError):
+        return False
+    return name in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
+
+
 class Index:
     """Facade over the full index lifecycle; construct via
     :meth:`tune`, :meth:`from_design`, or :meth:`open`."""
@@ -73,6 +151,10 @@ class Index:
         self._from_disk = file_meta is not None and result is None
         self._disk_design: IndexDesign | None = None
         self._handle: SerializedIndex | None = None
+        # warm-start state: a LayerCache retained across build/retune and
+        # the previous design's (builder_name, layer) seed pairs
+        self._layer_cache: LayerCache | None = None
+        self._seed_layers: list | None = None
 
     # -- constructors -------------------------------------------------------
     @classmethod
@@ -147,9 +229,21 @@ class Index:
                 self._spec = TuneSpec()
             spec = self._spec.validate()
             strategy = SEARCH_STRATEGIES.get(spec.strategy)
+            kwargs = {}
+            if _strategy_accepts(strategy, "layer_cache"):
+                # retained so a later warm retune reuses every build;
+                # bounded: a long-lived observe→retune loop shares ONE
+                # cache across generations (oldest entries evict)
+                if self._layer_cache is None:
+                    self._layer_cache = LayerCache(
+                        max_entries=DEFAULT_CACHE_ENTRIES)
+                kwargs["layer_cache"] = self._layer_cache
+            if self._seed_layers and _strategy_accepts(strategy,
+                                                       "seed_layers"):
+                kwargs["seed_layers"] = self._seed_layers
             self._result = strategy(self._data, self._profile,
                                     spec.builders(), k=spec.k,
-                                    max_layers=spec.max_layers)
+                                    max_layers=spec.max_layers, **kwargs)
         return self
 
     def save(self, path: str, *, data_record: int = 0,
@@ -203,10 +297,22 @@ class Index:
         return IndexService(self._path, **engine_opts)
 
     def retune(self, profile=None, data: KeyPositions | None = None,
-               **spec_overrides) -> "Index":
+               warm_start: bool = False, **spec_overrides) -> "Index":
         """Re-tune with the recorded spec — e.g. when the storage profile
-        changed (new tier, or an observed ``CachedProfile``).  Returns a
-        fresh unsaved :class:`Index`; the original is untouched."""
+        changed (new tier, or an observed ``CachedProfile`` from a
+        :class:`DriftReport`).  Returns a fresh unsaved :class:`Index`;
+        the original is untouched.
+
+        ``warm_start=True`` seeds the new search with the previous design:
+        its layers (taken from the in-memory result, or recovered from the
+        file meta outlines for a disk-opened Index) pre-populate the
+        search's layer cache, and this Index's retained
+        :class:`~repro.core.sweep.LayerCache` is shared with the new
+        search — a drift-triggered retune rebuilds only what the profile
+        change actually moves.  Pure memoization for ``airtune`` /
+        ``brute_force`` (bit-identical result, strictly less work); the
+        ``beam`` strategy additionally starts its frontier from the
+        previous design's partial stacks."""
         data = data if data is not None else self._data
         if data is None and self._result is not None:
             data = self._result.design.data
@@ -220,7 +326,32 @@ class Index:
         spec = self._spec if self._spec is not None else TuneSpec()
         if spec_overrides:
             spec = spec.replace(**spec_overrides)
-        return Index.tune(data, prof, spec)
+        new = Index.tune(data, prof, spec)
+        if warm_start:
+            if self._layer_cache is None:
+                self._layer_cache = LayerCache(
+                    max_entries=DEFAULT_CACHE_ENTRIES)
+            new._layer_cache = self._layer_cache   # shared build memo
+            new._seed_layers = self._warm_seed_layers(data, spec)
+        return new
+
+    def _warm_seed_layers(self, data: KeyPositions, spec: TuneSpec) -> list:
+        """The previous design as ``(builder_name, layer)`` seed pairs —
+        exact from the in-memory result, canonicalized from disk."""
+        if self._result is not None:
+            names = self._result.builder_names
+            layers = self._result.design.layers
+            if len(names) == len(layers):
+                return list(zip(names, layers))
+            return []
+        if self._from_disk and self._path is not None:
+            names = tuple((self._file_meta.tune or {})
+                          .get("builder_names") or ())
+            if not names:
+                return []
+            layers = materialize_design(self._path, data).layers
+            return recover_seed_layers(names, layers, spec.builders(), data)
+        return []
 
     def close(self) -> None:
         if self._handle is not None:

@@ -60,6 +60,7 @@ class TuneStats:
     vertices_visited: int = 0
     layers_built: int = 0        # candidate layers actually constructed
     layers_reused: int = 0       # builds avoided: λ-dedup + vertex memo hits
+    layers_seeded: int = 0       # warm-start: previous-design layers injected
     candidates_pruned: int = 0   # discarded without recursion: non-shrinking
     #                              outlines + beyond-top-k (guided searches)
     candidates_scored: int = 0   # E[T(Δ)] evaluations performed (est + exact)
@@ -95,9 +96,12 @@ class SearchStrategy(Protocol):
     :class:`TuneResult` whose ``cost`` agrees with the Eq. (6) evaluator
     on the returned design.  The built-in strategies additionally accept
     ``sweep`` (False = legacy per-builder loop), ``score_backend``
-    (``"numpy"`` default | ``"jnp"`` | ``"pallas"`` ranking fast paths)
-    and ``layer_cache`` (a shared :class:`repro.core.sweep.LayerCache`
-    for cross-tune build reuse); third-party strategies need not.
+    (``"numpy"`` default | ``"jnp"`` | ``"pallas"`` ranking fast paths),
+    ``layer_cache`` (a shared :class:`repro.core.sweep.LayerCache` for
+    cross-tune build reuse) and ``seed_layers`` (warm-start: a previous
+    design as ``(builder_name, layer)`` pairs, injected into the cache —
+    and, for ``beam``, the initial frontier); third-party strategies
+    need not.
     """
 
     def __call__(self, D: KeyPositions, profile: StorageProfile,
@@ -125,21 +129,38 @@ def _mean_layer_read_cost(layer: Layer, D: KeyPositions,
     return float(np.average(profile(wq), weights=weights))
 
 
+def _require_sweep_for_seed(seed_layers, sweep: bool) -> None:
+    if seed_layers and not sweep:
+        raise ValueError("warm-start seeding (seed_layers) requires the "
+                         "sweep engine; call with sweep=True")
+
+
 @register_strategy("airtune")
 def airtune(D: KeyPositions, profile: StorageProfile,
             builders: list[LayerBuilder] | None = None, *,
             k: int = 5, max_layers: int = 12, sweep: bool = True,
             score_backend: str = "numpy",
-            layer_cache: LayerCache | None = None) -> TuneResult:
-    """Find Θ* ≈ argmin_Θ L_SM(X; Θ, T) (Table 3) via Alg. 2."""
+            layer_cache: LayerCache | None = None,
+            seed_layers=None) -> TuneResult:
+    """Find Θ* ≈ argmin_Θ L_SM(X; Θ, T) (Table 3) via Alg. 2.
+
+    ``seed_layers`` (warm start: a previous design as bottom-up
+    ``(builder_name, layer)`` pairs) pre-populates the layer cache along
+    the old design's path — pure memoization, so the returned design is
+    bit-identical to a cold search with strictly fewer builds (the
+    warm-vs-cold identity test certifies this).
+    """
     if builders is None:
         builders = make_builders()
+    _require_sweep_for_seed(seed_layers, sweep)
     stats = TuneStats()
     t0 = time.perf_counter()
     if sweep:
         engine = SweepEngine(builders, profile, stats,
                              score_backend=score_backend,
                              layer_cache=layer_cache)
+        if seed_layers:
+            engine.seed(D, seed_layers)
         layers, names, cost = _airtune_rec_sweep(D, profile, engine, k,
                                                  max_layers, stats)
     else:
@@ -233,7 +254,8 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
                 builders: list[LayerBuilder] | None = None, *,
                 k: int = 0, max_layers: int = 4, sweep: bool = True,
                 score_backend: str = "numpy",
-                layer_cache: LayerCache | None = None) -> TuneResult:
+                layer_cache: LayerCache | None = None,
+                seed_layers=None) -> TuneResult:
     """Exhaustive reference search (no top-k pruning, no τ̂ guidance).
 
     Exponential in |𝓕|; only usable on small inputs.  Tests use it to
@@ -247,6 +269,7 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
     """
     if builders is None:
         builders = make_builders()
+    _require_sweep_for_seed(seed_layers, sweep)
     stats = TuneStats()
     t0 = time.perf_counter()
     # rank_scores=False: brute force never ranks by Eq. (9), so the sweep
@@ -254,6 +277,8 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
     engine = SweepEngine(builders, profile, stats, score_backend=score_backend,
                          rank_scores=False,
                          layer_cache=layer_cache) if sweep else None
+    if seed_layers:
+        engine.seed(D, seed_layers)    # warm start: pure memoization
 
     def rec_sweep(Dc: KeyPositions, depth_left: int) -> tuple[list, list, float]:
         stats.vertices_visited += 1
@@ -307,7 +332,8 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
                 builders: list[LayerBuilder] | None = None, *,
                 k: int = 5, max_layers: int = 12, sweep: bool = True,
                 score_backend: str = "numpy",
-                layer_cache: LayerCache | None = None) -> TuneResult:
+                layer_cache: LayerCache | None = None,
+                seed_layers=None) -> TuneResult:
     """Beam search over layer stacks: Alg. 2's graph, breadth-first.
 
     A frontier of at most ``k`` partial designs (bottom-up layer stacks)
@@ -327,6 +353,7 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
     """
     if builders is None:
         builders = make_builders()
+    _require_sweep_for_seed(seed_layers, sweep)
     stats = TuneStats()
     t0 = time.perf_counter()
     engine = SweepEngine(builders, profile, stats,
@@ -339,11 +366,34 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
     ideal = ideal_latency_with_index(profile)
     # frontier state: (exact cost of layers so far, collection, layers, names)
     frontier = [(0.0, D, [], [])]
+    if seed_layers:
+        # warm start: besides memoizing the old builds (engine.seed), the
+        # previous design's partial stacks enter the beam as initial
+        # vertices — the frontier starts where the last search ended, and
+        # the seed's complete Eq. (6) cost bounds `best` from the first
+        # round (the search can only match or improve on the old design)
+        acc = 0.0
+        cur_layers: list = []
+        cur_names: list = []
+        for name, layer, Dc, out in engine.seed(D, seed_layers)[:max_layers]:
+            acc += _mean_layer_read_cost(layer, Dc, profile)   # exact
+            stats.candidates_scored += 1
+            cur_layers = cur_layers + [layer]
+            cur_names = cur_names + [name]
+            stats.vertices_visited += 1
+            complete = acc + float(profile(out.size_bytes))    # Eq. (6)
+            if complete < best_cost:
+                best_cost = complete
+                best_layers, best_names = cur_layers, cur_names
+            frontier.append((acc, out, cur_layers, cur_names))
     for _ in range(max_layers):
         children = []
         for cost_so_far, Dc, layers, names in frontier:
-            # stopping criterion, per state (Alg. 2 lines 1–2)
-            if float(profile(Dc.size_bytes)) < ideal or Dc.n <= 1:
+            # stopping criterion, per state (Alg. 2 lines 1–2); the depth
+            # bound re-checked per state because warm-start-injected seed
+            # stacks enter the frontier at arbitrary depth
+            if float(profile(Dc.size_bytes)) < ideal or Dc.n <= 1 \
+                    or len(layers) >= max_layers:
                 continue
             if sweep:
                 for cand in engine.children(Dc):

@@ -248,6 +248,15 @@ def record_keys(kind: str, raw: bytes) -> np.ndarray:
         "key" if kind == "step" else "x1"]
 
 
+def gallop_step(kind: str, a: int, b: int) -> int:
+    """Extension step for a missed window ``[a, b)`` — the window's own
+    width, but never less than one record of the layer's dtype: a
+    zero-width window (``b == a`` after clamping) would otherwise retry
+    with the same bounds forever.  Shared by :class:`SerializedIndex` and
+    the serving engine so their gallop walks stay in lockstep."""
+    return max(b - a, RECORD_BYTES[kind])
+
+
 def window_misses(kind: str, raw: bytes, a: int, b: int, layer_size: int,
                   queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     """Per-query check that a fetched window ``[a, b)`` contains the true
@@ -310,7 +319,7 @@ class SerializedIndex:
                 left, right = window_misses(lm.kind, raw, a, b, lm.size, q1)
                 if not (left[0] or right[0]):
                     break
-                w = b - a        # gallop toward the covering record
+                w = gallop_step(lm.kind, a, b)  # toward the covering record
                 if left[0]:
                     a = max(a - w, 0)
                 else:

@@ -93,6 +93,13 @@ class _LayerEntry:
     scores: dict = dataclasses.field(default_factory=dict)
 
 
+#: default entry cap for facade-retained caches (repro.api.Index): a
+#: long-running observe→retune loop keeps one cache alive across every
+#: retune generation, so it must be bounded — 64k entries comfortably
+#: hold several full tunes while capping worst-case residency
+DEFAULT_CACHE_ENTRIES = 65536
+
+
 class LayerCache:
     """Profile-independent build memo: (collection fingerprint, builder)
     → layer (+ outline, lazily).
@@ -108,10 +115,18 @@ class LayerCache:
     entries but are keyed per profile (``_LayerEntry.scores``), so
     sharing a cache across tiers can never alias costs between profiles
     — while re-tuning the same tier skips rescoring entirely.
+
+    ``max_entries`` bounds the memo (insertion-order eviction via
+    :meth:`trim`, called by the sweep engine after each expansion):
+    evicting an entry only costs a rebuild on the next miss, so
+    long-running retune loops stay memory-bounded.  ``None`` (default)
+    keeps the historical unbounded behavior for single-tune engines.
     """
 
-    def __init__(self):
-        self._entries: dict[tuple, _LayerEntry] = {}
+    def __init__(self, max_entries: int | None = None):
+        from collections import OrderedDict
+        self._entries: OrderedDict = OrderedDict()
+        self.max_entries = max_entries
         self._pinned_profiles: list = []   # see pin_profile
 
     def __len__(self) -> int:
@@ -121,6 +136,12 @@ class LayerCache:
         self._entries.clear()
         self._pinned_profiles.clear()
 
+    def trim(self) -> None:
+        """Evict oldest-inserted entries beyond ``max_entries``."""
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
     def pin_profile(self, profile) -> tuple:
         """Score-memo key for an *unhashable* profile.  Pinning a strong
         reference for the cache's lifetime keeps ``id(profile)`` unique —
@@ -128,6 +149,55 @@ class LayerCache:
         and silently alias another profile's memoized costs."""
         self._pinned_profiles.append(profile)
         return ("unhashable-profile", id(profile))
+
+
+def seed_layer_cache(cache: LayerCache, D: KeyPositions, seed_layers,
+                     builders: list) -> list:
+    """Warm-start seeding: inject a previous design's layers into a
+    :class:`LayerCache` keyed exactly as the builders that would rebuild
+    them, so the next search gets cache hits along the old design's path
+    instead of rebuilding it (ROADMAP: incremental re-tune on drift).
+
+    ``seed_layers`` is the previous design bottom-up as ``(builder_name,
+    layer)`` pairs — ``TuneResult.builder_names`` zipped with
+    ``design.layers``, or the recovered equivalents of a disk-opened index
+    (see ``repro.api.index``).  Layers whose recorded name matches no
+    builder in ``builders`` stop the chain (the collections above them
+    would no longer line up with search vertices).
+
+    The caller guarantees each seed layer is bit-identical to what its
+    named builder would build on its collection (builders are
+    deterministic, so in-memory results always qualify; disk recovery
+    must canonicalize first) — a violated guarantee would poison the
+    memo with a layer the search believes it built.
+
+    Returns the seeded chain as ``(name, layer, collection, outline)``
+    tuples (used by the beam strategy to inject initial vertices).
+    """
+    by_name = {b.name: b for b in builders}
+    chain = []
+    cur = D
+    for name, layer in seed_layers:
+        b = by_name.get(name)
+        if b is None or b.kind not in BUILDER_FAMILIES:
+            break
+        canon = getattr(BUILDER_FAMILIES.get(b.kind), "canonical_lam", None)
+        lam = canon(cur, b.lam) if canon else b.lam
+        key = (cur.fingerprint, b.kind, lam, b.p)
+        out = None
+        entry = cache._entries.get(key)
+        if entry is None:
+            out = outline(layer, cur)
+            cache._entries[key] = _LayerEntry(layer, outline=out)
+        else:                       # already cached (e.g. a shared cache
+            if entry.outline is None:   # from the original tune)
+                entry.outline = outline(entry.layer, cur)
+            out = entry.outline
+            layer = entry.layer
+        chain.append((name, layer, cur, out))
+        cur = out
+    cache.trim()
+    return chain
 
 
 class SweepEngine:
@@ -164,6 +234,16 @@ class SweepEngine:
         for i, b in enumerate(self.builders):
             cols.setdefault((b.kind, b.p), []).append(i)
         self._columns = list(cols.items())
+
+    # -- warm-start seeding --------------------------------------------------
+    def seed(self, D: KeyPositions, seed_layers) -> list:
+        """Inject a previous design into this engine's layer cache (see
+        :func:`seed_layer_cache`); counts the injected layers in
+        ``TuneStats.layers_seeded``."""
+        chain = seed_layer_cache(self.layer_cache, D, seed_layers,
+                                 self.builders)
+        self.stats.layers_seeded += len(chain)
+        return chain
 
     # -- candidate expansion -------------------------------------------------
     def children(self, D: KeyPositions) -> list[Candidate]:
@@ -230,6 +310,9 @@ class SweepEngine:
                     stats.layers_reused += 1
                 lc[_key(i)] = e
                 entries[i] = e
+        self.layer_cache.trim()     # bounded caches evict oldest entries
+        #                             (local `entries` refs keep this
+        #                             expansion's layers alive regardless)
 
         # shrink guard for every candidate in one vectorized comparison
         # (outline extent == layer.size_bytes: outlines span the serialized

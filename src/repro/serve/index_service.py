@@ -29,18 +29,25 @@ bit-for-bit.  Observed hit rates feed back into tuning via
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
+import time
 from collections import OrderedDict
 
 import numpy as np
 
 from repro.core.descent import coalesce_ranges
-from repro.core.serialize import (_BAND_DT, _STEP_DT, page_span,
+from repro.core.serialize import (_BAND_DT, _STEP_DT, gallop_step, page_span,
                                   predict_from_records, read_meta,
                                   record_aligned_range, window_misses)
-from repro.core.storage import CachedProfile, PROFILES, StorageProfile
+from repro.core.storage import (CachedProfile, MeasuredProfile, PROFILES,
+                                StorageProfile)
 
 DEFAULT_PAGE_BYTES = 4096
+
+STATS_SUFFIX = ".stats.json"   # ServeStats snapshots live next to the index
+STATS_WINDOW = 16              # rotating window: snapshots kept per file
+READ_SAMPLE_CAP = 512          # measured (Δ, seconds) pread samples retained
 
 
 def demo_serving_design(D):
@@ -137,6 +144,17 @@ class ServeStats:
     retries: int = 0            # window extensions (band inter-key misses)
     device_batches: int = 0
     modeled_seconds: float = 0.0   # Σ T(Δ) under the configured profile
+    open_modeled_seconds: float = 0.0  # the open-time share of the above
+    data_modeled_seconds: float = 0.0  # Σ T(hi−lo) of returned data ranges
+    # what the *uncached* Alg. 1 walk (lookup_serialized) would pay for the
+    # same traffic under the configured profile: per query, full price for
+    # every layer window (resident ones included) plus the data read —
+    # the deployment tier's Eq. 6 value realized on observed queries
+    walk_modeled_seconds: float = 0.0
+    pread_seconds: float = 0.0  # measured wall-clock inside os.pread
+    # rotating reservoir of measured (Δ bytes, seconds) pread samples — the
+    # raw material of observed_profile(); capped at READ_SAMPLE_CAP
+    read_samples: list = dataclasses.field(default_factory=list)
 
     @property
     def hit_rate(self) -> float:
@@ -147,10 +165,136 @@ class ServeStats:
     def bytes_saved(self) -> int:
         return self.bytes_from_cache
 
+    @property
+    def query_modeled_seconds(self) -> float:
+        """Observed per-query E[T]: what a lookup costs through *this*
+        engine (residency + block cache + coalescing) including the final
+        data-range read, under the configured profile.  Open-time reads
+        are amortized out — per-lookup cost is what Eq. 6 models."""
+        if self.queries == 0:
+            return float("nan")
+        return (self.modeled_seconds - self.open_modeled_seconds
+                + self.data_modeled_seconds) / self.queries
+
+    @property
+    def walk_query_seconds(self) -> float:
+        """Per-query cost of the full-price (cacheless) Alg. 1 walk on the
+        observed traffic — the configured profile's *prediction* for this
+        design, independent of cache warm-up state.  Compared against the
+        recorded ``tune.cost`` this isolates storage-tier drift; compared
+        against :attr:`query_modeled_seconds` it shows the cache's gain
+        (see :mod:`repro.api.drift`)."""
+        if self.queries == 0:
+            return float("nan")
+        return self.walk_modeled_seconds / self.queries
+
+    def record_read(self, nbytes: int, seconds: float) -> None:
+        self.pread_seconds += seconds
+        if len(self.read_samples) >= READ_SAMPLE_CAP:
+            del self.read_samples[0]          # rotate: oldest sample leaves
+        self.read_samples.append((int(nbytes), float(seconds)))
+
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
+        d["read_samples"] = [[int(n), float(s)] for n, s in self.read_samples]
         d["hit_rate"] = self.hit_rate
+        # NaN (no queries yet) is not valid strict JSON — null it out
+        for key in ("query_modeled_seconds", "walk_query_seconds"):
+            v = getattr(self, key)
+            d[key] = v if np.isfinite(v) else None
         return d
+
+    @classmethod
+    def from_snapshot(cls, d: dict) -> "ServeStats":
+        """Inverse of :meth:`snapshot` (derived keys are recomputed, so
+        ``from_snapshot(s.snapshot())`` round-trips exactly)."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        kw = {k: v for k, v in d.items() if k in fields}
+        kw["read_samples"] = [(int(n), float(s))
+                              for n, s in kw.get("read_samples", [])]
+        return cls(**kw)
+
+
+# ---------------------------------------------------------------------------
+# ServeStats persistence (ROADMAP: serve-path autoscaling / observe→retune)
+# ---------------------------------------------------------------------------
+def stats_path(index_path: str) -> str:
+    """Where an index file's ServeStats snapshots live (next to the meta)."""
+    return index_path + STATS_SUFFIX
+
+
+def save_stats_snapshot(index_path: str, stats: ServeStats, *,
+                        profile_name: str | None = None,
+                        window: int = STATS_WINDOW) -> str:
+    """Append one snapshot to ``<index_path>.stats.json``, keeping only the
+    last ``window`` snapshots (rotating).  Returns the stats-file path."""
+    path = stats_path(index_path)
+    history = load_stats_history(index_path)
+    history.append({"profile": profile_name, "stats": stats.snapshot()})
+    history = history[-max(int(window), 1):]
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "snapshots": history}, f)
+    os.replace(tmp, path)      # atomic: a reader never sees a torn file
+    return path
+
+
+def load_stats_history(index_path: str) -> list:
+    """All persisted snapshots (oldest first); [] when none/unreadable."""
+    try:
+        with open(stats_path(index_path)) as f:
+            d = json.load(f)
+        return list(d.get("snapshots") or [])
+    except (OSError, ValueError):
+        return []
+
+
+def load_serve_stats(index_path: str) -> ServeStats | None:
+    """The latest persisted :class:`ServeStats` for an index file."""
+    history = load_stats_history(index_path)
+    if not history:
+        return None
+    return ServeStats.from_snapshot(history[-1]["stats"])
+
+
+def measured_backing_profile(stats: ServeStats,
+                             min_samples: int = 8) -> MeasuredProfile | None:
+    """Monotone ``T(Δ)`` through the *measured* pread samples — per-size
+    median wall-clock, the §3.2 measurement applied to live serving.
+    None when the window holds too few samples or too few distinct sizes
+    to say anything about the latency/bandwidth split."""
+    if len(stats.read_samples) < min_samples:
+        return None
+    sizes = np.asarray([n for n, _ in stats.read_samples], dtype=np.float64)
+    secs = np.asarray([s for _, s in stats.read_samples], dtype=np.float64)
+    uniq = np.unique(sizes)
+    if len(uniq) < 2:
+        return None
+    med = [float(np.median(secs[sizes == u])) for u in uniq]
+    return MeasuredProfile(deltas=tuple(float(u) for u in uniq),
+                           seconds=tuple(med), name="observed-preads")
+
+
+def observed_profile_from_stats(stats: ServeStats, backing: StorageProfile,
+                                cache: StorageProfile | None = None, *,
+                                measured: bool = True,
+                                min_samples: int = 8) -> CachedProfile:
+    """Fold observed serving behavior into an effective ``T(Δ)``.
+
+    The hit rate always comes from the stats; the backing tier is replaced
+    by the *measured* per-pread profile when ``measured=True`` and the
+    sample window supports it, else the modeled ``backing`` is kept (so
+    with ``measured=False`` this is exactly the deployment-configured
+    :meth:`IndexService.cached_profile`).  Pure function of the snapshot —
+    a reloaded snapshot yields the identical profile."""
+    eff = backing
+    if measured:
+        m = measured_backing_profile(stats, min_samples=min_samples)
+        if m is not None:
+            eff = m
+    # default name kept so a measured=False observed profile compares equal
+    # to IndexService.cached_profile() (frozen-dataclass field equality)
+    return CachedProfile(backing=eff, cache=cache, hit_rate=stats.hit_rate)
 
 
 # ---------------------------------------------------------------------------
@@ -184,14 +328,17 @@ class IndexService:
                  cache_bytes=None, cache_profile="host_dram",
                  page_bytes: int | None = None, resident_layers: int = 1,
                  use_device: bool = False, interpret: bool = True,
-                 coalesce_gap: int = 0):
+                 coalesce_gap: int = 0, persist_stats: bool = False):
+        self.fd = None              # __del__ must be safe mid-__init__
+        self.path = path
         self.fd = os.open(path, os.O_RDONLY)
         self.meta = read_meta(self.fd)
         self.tune_meta = self.meta.tune   # facade provenance (may be None)
         self.profile = PROFILES[profile] if isinstance(profile, str) else profile
         self.cache_profile = (PROFILES[cache_profile]
                               if isinstance(cache_profile, str) else cache_profile)
-        self.page_bytes = int(self.meta.page_bytes or page_bytes
+        # precedence: explicit kwarg > file's paged layout > default
+        self.page_bytes = int(page_bytes or self.meta.page_bytes
                               or DEFAULT_PAGE_BYTES)
         if cache_bytes is None:     # spec-recorded cache config, then default
             spec = (self.tune_meta or {}).get("spec") or {}
@@ -199,6 +346,7 @@ class IndexService:
         self.cache = TieredBlockCache(cache_bytes, self.page_bytes)
         self.coalesce_gap = int(coalesce_gap)
         self.interpret = interpret
+        self.persist_stats = bool(persist_stats)
         self.stats = ServeStats()
 
         L = len(self.meta.layers)
@@ -206,11 +354,15 @@ class IndexService:
         self._resident: dict[int, dict] = {}
         for li in range(L - n_res, L):
             lm = self.meta.layers[li]
+            t0 = time.perf_counter()
             raw = os.pread(self.fd, lm.size, lm.offset)
+            self.stats.record_read(lm.size, time.perf_counter() - t0)
             self._resident[li] = self._parse_layer(lm, raw)
             self.stats.open_bytes += lm.size
             if self.profile is not None:
-                self.stats.modeled_seconds += float(self.profile(lm.size))
+                t = float(self.profile(lm.size))
+                self.stats.modeled_seconds += t
+                self.stats.open_modeled_seconds += t
         self._device: dict[int, dict] = {}
         self.device_active = False
         if use_device:
@@ -219,7 +371,14 @@ class IndexService:
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
-        if self.fd is not None:
+        """Idempotent; with ``persist_stats=True`` the final ServeStats
+        snapshot is written to ``<path>.stats.json`` first."""
+        if getattr(self, "fd", None) is not None:
+            if getattr(self, "persist_stats", False):
+                try:
+                    self.save_stats()
+                except OSError:
+                    pass          # a read-only deployment must still close
             os.close(self.fd)
             self.fd = None
 
@@ -228,6 +387,14 @@ class IndexService:
 
     def __exit__(self, *exc) -> None:
         self.close()
+
+    def __del__(self):
+        # mirror repro.api.Index.__del__: don't leak the fd when the caller
+        # skips close()/the context manager
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -- layer materialization ---------------------------------------------
     @staticmethod
@@ -326,7 +493,9 @@ class IndexService:
         ms = np.asarray(missing, dtype=np.int64) * P
         run_s, run_e = coalesce_ranges(ms, ms + P, gap=self.coalesce_gap)
         for rs, re_ in zip(run_s, run_e):
+            t0 = time.perf_counter()
             raw = os.pread(self.fd, int(re_ - rs), int(rs))
+            self.stats.record_read(len(raw), time.perf_counter() - t0)
             self.stats.preads += 1
             self.stats.bytes_fetched += len(raw)
             if self.profile is not None:
@@ -344,6 +513,9 @@ class IndexService:
         a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
         a, b = a.copy(), b.copy()       # per-query windows, grown on misses
         self.stats.ranges_requested += len(q)
+        if self.profile is not None:    # full-price walk: one window/query
+            self.stats.walk_modeled_seconds += float(
+                np.sum(self.profile((b - a).astype(np.float64))))
         out_lo = np.empty(len(q), dtype=np.float64)
         out_hi = np.empty(len(q), dtype=np.float64)
         pending = np.arange(len(q))
@@ -373,13 +545,21 @@ class IndexService:
                     out_lo[ok] = l_
                     out_hi[ok] = h_
                 # gallop the missed windows toward the covering record
-                # (same rule as SerializedIndex.lookup — parity preserved)
-                w = int(ab[ui, 1] - ab[ui, 0])
+                # (same rule as SerializedIndex.lookup — parity preserved);
+                # gallop_step never returns 0, so a degenerate zero-width
+                # window still extends by ≥ one record instead of retrying
+                # the same bounds forever
+                w = gallop_step(lm.kind, int(ab[ui, 0]), int(ab[ui, 1]))
                 lmiss, rmiss = sub[left], sub[right & ~left]
                 a[lmiss] = max(int(ab[ui, 0]) - w, 0)
                 b[rmiss] = min(int(ab[ui, 1]) + w, lm.size)
                 still.extend([lmiss, rmiss])
                 self.stats.retries += len(lmiss) + len(rmiss)
+                if self.profile is not None and (len(lmiss) or len(rmiss)):
+                    # the scalar walk re-reads each extended window
+                    ext = np.concatenate([lmiss, rmiss])
+                    self.stats.walk_modeled_seconds += float(np.sum(
+                        self.profile((b[ext] - a[ext]).astype(np.float64))))
             pending = (np.concatenate(still) if still
                        else np.empty(0, dtype=np.int64))
         return out_lo, out_hi
@@ -404,16 +584,44 @@ class IndexService:
             out = np.empty((len(q), 2), dtype=np.int64)
             out[:, 0] = 0
             out[:, 1] = self.meta.data_size
+            if self.profile is not None:   # (no index): scan the data layer
+                t = len(q) * float(self.profile(self.meta.data_size))
+                self.stats.data_modeled_seconds += t
+                self.stats.walk_modeled_seconds += t
             return out
         lo = hi = None
         for li in range(len(metas) - 1, -1, -1):
             if li in self._resident:
+                if self.profile is not None:
+                    lm = metas[li]
+                    if lo is None:
+                        # Alg. 1 reads the ROOT outright per query;
+                        # residency only amortizes it — the full-price
+                        # walk counter must not
+                        self.stats.walk_modeled_seconds += len(q) * float(
+                            self.profile(lm.size))
+                    else:
+                        # non-root resident layers would be *window*
+                        # reads in the scalar walk — charge the
+                        # record-aligned window, not the layer size
+                        # (first-window cost; the rare gallop retries an
+                        # on-disk walk would pay are not modeled here)
+                        wa, wb = record_aligned_range(lm.kind, lo, hi,
+                                                      lm.size)
+                        self.stats.walk_modeled_seconds += float(np.sum(
+                            self.profile((wb - wa).astype(np.float64))))
                 lo, hi = self._descend_resident(li, q)
             else:
                 lo, hi = self._descend_disk(metas[li], lo, hi, q)
         lo = np.maximum(np.asarray(lo, dtype=np.int64), 0)
         hi = np.minimum(np.maximum(np.asarray(hi, dtype=np.int64), lo + 1),
                         self.meta.data_size)
+        if self.profile is not None:
+            # the caller's final data-range read, modeled on the same tier:
+            # part of Eq. 6's E[T], charged to observed AND walk cost
+            t = float(np.sum(self.profile((hi - lo).astype(np.float64))))
+            self.stats.data_modeled_seconds += t
+            self.stats.walk_modeled_seconds += t
         return np.stack([lo, hi], axis=1)
 
     @property
@@ -437,3 +645,29 @@ class IndexService:
                              "with profile=None — pass one explicitly")
         return CachedProfile(backing=backing, cache=self.cache_profile,
                              hit_rate=self.stats.hit_rate)
+
+    def observed_profile(self, backing: StorageProfile | None = None, *,
+                         measured: bool = True,
+                         min_samples: int = 8) -> CachedProfile:
+        """Effective ``T(Δ)`` from *observed* serving behavior: the block
+        cache's hit rate plus (``measured=True``) the measured per-pread
+        latency in place of the modeled backing tier.  This is the profile
+        a drift-triggered ``Index.retune`` should tune for (see
+        :mod:`repro.api.drift`).  With ``measured=False`` it equals
+        :meth:`cached_profile` exactly."""
+        backing = backing or self.profile
+        if backing is None:
+            raise ValueError("no backing profile: the service was opened "
+                             "with profile=None — pass one explicitly")
+        return observed_profile_from_stats(self.stats, backing,
+                                           self.cache_profile,
+                                           measured=measured,
+                                           min_samples=min_samples)
+
+    def save_stats(self, *, window: int = STATS_WINDOW) -> str:
+        """Persist the current :class:`ServeStats` snapshot next to the
+        index meta (``<path>.stats.json``, rotating window) — the serve
+        side of the observe→retune loop.  Returns the stats-file path."""
+        prof = getattr(self.profile, "name", None)
+        return save_stats_snapshot(self.path, self.stats,
+                                   profile_name=prof, window=window)

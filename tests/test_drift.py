@@ -1,0 +1,338 @@
+"""The observe→retune loop: persisted ServeStats, observed profiles,
+drift detection, and warm-started retune (ROADMAP: incremental re-tune
+on drift / serve-path autoscaling)."""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import Index, TuneSpec, detect_drift, detect_drift_from_file
+from repro.api.drift import drift_from_stats
+from repro.core import KeyPositions, PROFILES
+from repro.serve.index_service import (ServeStats, demo_serving_design,
+                                       load_serve_stats, load_stats_history,
+                                       observed_profile_from_stats,
+                                       save_stats_snapshot, stats_path)
+
+from conftest import make_keys
+
+SPEC = TuneSpec(lam_low=2**8, lam_high=2**15, lam_base=4.0, k=3,
+                max_layers=6, page_bytes=1024,
+                cache_bytes=(64 << 10, 512 << 10))
+
+
+def _serve_some(svc, keys, n_batches=4, batch=200, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        svc.lookup(rng.choice(keys, batch))
+
+
+@pytest.fixture(scope="module")
+def tuned(tmp_path_factory):
+    keys = make_keys("gmm", 60_000, seed=5)
+    D = KeyPositions.fixed_record(keys, 16)
+    idx = Index.tune(D, "azure_ssd", SPEC).build()
+    path = str(tmp_path_factory.mktemp("drift") / "index.air")
+    idx.save(path)
+    return D, idx, path
+
+
+# ---------------------------------------------------------------------------
+# persisted ServeStats: snapshot file round-trip
+# ---------------------------------------------------------------------------
+def test_serve_stats_snapshot_roundtrip_and_observed_profile(tuned):
+    D, idx, path = tuned
+    svc = idx.serve(profile="azure_nfs", persist_stats=True)
+    _serve_some(svc, D.keys)
+    live_stats = dataclasses.replace(
+        svc.stats, read_samples=list(svc.stats.read_samples))
+    live_cached = svc.cached_profile()
+    live_observed = svc.observed_profile()
+    svc.close()                                    # persist_stats → snapshot
+
+    assert os.path.exists(stats_path(path))
+    loaded = load_serve_stats(path)
+    # field-exact round-trip (JSON floats round-trip via repr)
+    assert loaded == live_stats
+    assert loaded.hit_rate == live_stats.hit_rate
+    assert loaded.query_modeled_seconds == live_stats.query_modeled_seconds
+
+    # reloaded snapshot → the SAME observed profile as the live service
+    re_obs = observed_profile_from_stats(loaded, PROFILES["azure_nfs"],
+                                         PROFILES["host_dram"])
+    assert re_obs == live_observed
+    # and with measured=False the observed profile IS cached_profile()
+    re_cfg = observed_profile_from_stats(loaded, PROFILES["azure_nfs"],
+                                         PROFILES["host_dram"],
+                                         measured=False)
+    assert re_cfg == live_cached
+
+
+def test_stats_window_rotates(tuned):
+    D, idx, path = tuned
+    s = ServeStats(queries=1)
+    for i in range(7):
+        s.queries = i
+        save_stats_snapshot(path, s, profile_name="azure_ssd", window=5)
+    hist = load_stats_history(path)
+    assert len(hist) == 5                          # rotating window
+    assert [h["stats"]["queries"] for h in hist] == [2, 3, 4, 5, 6]
+    assert all(h["profile"] == "azure_ssd" for h in hist)
+    os.unlink(stats_path(path))                    # leave fixture clean
+
+
+def test_read_samples_reservoir_is_bounded():
+    from repro.serve.index_service import READ_SAMPLE_CAP
+    s = ServeStats()
+    for i in range(READ_SAMPLE_CAP + 100):
+        s.record_read(64, 1e-6 * i)
+    assert len(s.read_samples) == READ_SAMPLE_CAP
+    # rotation keeps the newest samples
+    assert s.read_samples[-1][1] == pytest.approx(
+        1e-6 * (READ_SAMPLE_CAP + 99))
+
+
+# ---------------------------------------------------------------------------
+# drift detection
+# ---------------------------------------------------------------------------
+def test_no_drift_on_the_tuned_tier(tuned):
+    D, idx, path = tuned
+    with idx.serve(profile="azure_ssd") as svc:
+        _serve_some(svc, D.keys)
+        rep = detect_drift(svc, min_queries=256)
+    # the walk prediction realizes Eq. 6 on observed traffic: ratio ≈ 1
+    # regardless of how warm the cache got
+    assert 0.9 < rep.ratio < 1.1
+    assert rep.action == "none" and not rep.drifted
+    assert rep.confidence == 1.0
+    assert rep.observed_seconds <= rep.predicted_seconds * (1 + 1e-9)
+
+
+def test_drift_on_a_degraded_tier(tuned):
+    D, idx, path = tuned
+    with idx.serve(profile="azure_hdd", persist_stats=True) as svc:
+        _serve_some(svc, D.keys)
+        rep = detect_drift(svc, min_queries=256)
+    assert rep.drifted and rep.action == "retune"
+    assert rep.ratio > 1.25
+    # the recommended profile folds the observed hit rate over the tier
+    assert rep.observed_profile is not None
+    assert rep.observed_profile.hit_rate == rep.hit_rate
+
+    # offline detection from the persisted snapshot agrees exactly
+    off = detect_drift_from_file(path, backing="azure_hdd", min_queries=256)
+    assert off is not None
+    assert off.ratio == rep.ratio and off.action == rep.action
+    # default backing = the profile the snapshot was SERVED under (the
+    # deployment tier), not the stale tuned-for tier from the meta
+    dflt = detect_drift_from_file(path, min_queries=256)
+    assert dflt.observed_profile is not None
+    assert dflt.observed_profile == rep.observed_profile
+    os.unlink(stats_path(path))
+
+
+def test_no_drift_with_extra_resident_layers():
+    # non-root resident layers are WINDOW reads in the scalar walk: the
+    # walk prediction must charge the record-aligned window, not the full
+    # layer size, or a multi-layer index pinned in memory would read as
+    # drifted on its own tuned-for tier
+    keys = make_keys("gmm", 80_000, seed=7)
+    D = KeyPositions.fixed_record(keys, 16)
+    import tempfile
+    design = demo_serving_design(D)          # 3 layers
+    idx = Index.from_design(design, spec=TuneSpec(page_bytes=1024),
+                            profile="azure_ssd")
+    path = os.path.join(tempfile.mkdtemp(), "res.air")
+    idx.save(path)
+    from repro.serve import IndexService
+    with IndexService(path, profile="azure_ssd", resident_layers=3) as svc:
+        _serve_some(svc, D.keys)
+        rep = detect_drift(svc, min_queries=256)
+    # record-alignment overhead keeps the ratio slightly above 1, far
+    # inside the drift band
+    assert 0.9 < rep.ratio < 1.25
+    assert rep.action == "none", rep.describe()
+
+
+def test_drift_needs_enough_queries(tuned):
+    D, idx, path = tuned
+    with idx.serve(profile="azure_hdd") as svc:
+        svc.lookup(D.keys[:8])
+        rep = detect_drift(svc)                    # default MIN_QUERIES=512
+    assert rep.action == "observe" and rep.confidence < 1.0
+
+
+def test_drift_without_provenance_reports_observe():
+    # files written without the facade have no recorded cost
+    keys = make_keys("books", 30_000, seed=2)
+    D = KeyPositions.fixed_record(keys, 16)
+    import tempfile
+
+    from repro.core import write_index
+    path = os.path.join(tempfile.mkdtemp(), "raw.air")
+    write_index(path, demo_serving_design(D), page_bytes=1024)
+    from repro.serve import IndexService
+    with IndexService(path, profile="azure_ssd") as svc:
+        _serve_some(svc, D.keys, n_batches=3)
+        rep = detect_drift(svc, min_queries=16)
+    assert rep.recorded_seconds is None
+    assert not np.isfinite(rep.ratio) and rep.action == "observe"
+
+
+def test_drift_report_json_safe(tuned):
+    import json
+    D, idx, path = tuned
+    with idx.serve(profile="azure_hdd") as svc:
+        _serve_some(svc, D.keys)
+        d = detect_drift(svc, min_queries=256).to_dict()
+    json.dumps(d, allow_nan=False)                 # strict-JSON trendable
+    assert d["action"] == "retune" and d["ratio"] > 1.25
+
+
+def test_drift_symmetric_on_faster_tier():
+    # a tier that got FASTER is drift too: the optimum moves either way
+    s = ServeStats(queries=1000, modeled_seconds=1.0,
+                   walk_modeled_seconds=1.0)
+    rep = drift_from_stats(s, recorded_cost=10.0, min_queries=100)
+    assert rep.ratio < 1 / 1.25 and rep.drifted and rep.action == "retune"
+
+
+# ---------------------------------------------------------------------------
+# warm-started retune
+# ---------------------------------------------------------------------------
+def _designs_equal(a, b) -> bool:
+    if len(a.layers) != len(b.layers):
+        return False
+    for la, lb in zip(a.layers, b.layers):
+        if la.kind != lb.kind:
+            return False
+        fields = (("piece_keys", "piece_pos", "node_piece_off")
+                  if la.kind == "step"
+                  else ("node_keys", "x1", "y1", "m", "delta"))
+        if not all(np.array_equal(getattr(la, f), getattr(lb, f))
+                   for f in fields):
+            return False
+    return True
+
+
+@pytest.mark.parametrize("strategy", ["airtune", "beam"])
+def test_warm_retune_bit_identical_and_cheaper(tuned, strategy):
+    D, idx, path = tuned
+    new_tier = PROFILES["azure_hdd"]
+    cold = idx.retune(new_tier, strategy=strategy).build()
+    warm = idx.retune(new_tier, warm_start=True, strategy=strategy).build()
+    # same optimum (warm start is memoization + seed vertices)...
+    assert _designs_equal(cold.result.design, warm.result.design)
+    assert warm.cost == cold.cost
+    # ...for measurably less work
+    assert warm.stats.layers_reused > cold.stats.layers_reused
+    assert warm.stats.layers_built < cold.stats.layers_built
+    assert warm.stats.layers_seeded > 0
+
+
+def test_warm_retune_from_disk_recovers_seed(tuned):
+    D, idx, path = tuned
+    opened = Index.open(path, data=D)
+    cold = opened.retune("azure_hdd").build()
+    warm = opened.retune("azure_hdd", warm_start=True).build()
+    assert _designs_equal(cold.result.design, warm.result.design)
+    assert warm.cost == cold.cost
+    assert warm.stats.layers_seeded > 0
+    assert warm.stats.layers_reused > cold.stats.layers_reused
+    assert warm.stats.layers_built < cold.stats.layers_built
+
+
+def test_recover_seed_layers_canonicalizes_disk_designs():
+    # the file format drops step node grouping and band clamp_lo; recovery
+    # must restore BOTH bit-exactly, per the recorded builder discipline
+    import tempfile
+
+    from repro.api.index import recover_seed_layers
+    from repro.core import IndexDesign, outline, write_index
+    from repro.core.builders import LayerBuilder
+    from repro.core.serialize import materialize_design
+
+    keys = make_keys("books", 30_000, seed=4)
+    D = KeyPositions.fixed_record(keys, 16)
+    b1 = LayerBuilder(kind="gband", lam=2**9)
+    b2 = LayerBuilder(kind="gstep", lam=2**7, p=8)
+    l1 = b1(D)
+    l2 = b2(outline(l1, D))
+    path = os.path.join(tempfile.mkdtemp(), "two.air")
+    write_index(path, IndexDesign(layers=(l1, l2), data=D), page_bytes=1024)
+    disk = materialize_design(path, D).layers
+    assert disk[0].clamp_lo != l1.clamp_lo or l1.clamp_lo == 0
+    assert len(disk[1].node_piece_off) != len(l2.node_piece_off) \
+        or l2.n_pieces <= b2.p
+    seed = recover_seed_layers((b1.name, b2.name), disk, [b1, b2], D)
+    assert [n for n, _ in seed] == [b1.name, b2.name]
+    r1, r2 = (layer for _, layer in seed)
+    for f in ("node_keys", "x1", "y1", "m", "delta"):
+        assert np.array_equal(getattr(r1, f), getattr(l1, f))
+    assert (r1.clamp_lo, r1.clamp_hi) == (l1.clamp_lo, l1.clamp_hi)
+    for f in ("piece_keys", "piece_pos", "node_piece_off"):
+        assert np.array_equal(getattr(r2, f), getattr(l2, f))
+    # an unknown builder name stops the chain (no poisoned cache entries)
+    partial = recover_seed_layers((b1.name, "ThirdParty(9)"), disk,
+                                  [b1, b2], D)
+    assert [n for n, _ in partial] == [b1.name]
+
+
+def test_warm_seed_survives_band_and_multilayer_designs():
+    # a stacked step<-band<-step design round-trips through the file into
+    # canonical seed layers (regrouped steps, re-clamped bands)
+    keys = make_keys("fb", 40_000, seed=9)
+    D = KeyPositions.fixed_record(keys, 16)
+    import tempfile
+    design = demo_serving_design(D)
+    idx = Index.from_design(design, spec=TuneSpec(page_bytes=1024),
+                            profile="azure_ssd")
+    path = os.path.join(tempfile.mkdtemp(), "multi.air")
+    idx.save(path)
+    opened = Index.open(path, data=D)
+    spec = (opened.spec or TuneSpec()).validate()
+    seed = opened._warm_seed_layers(D, spec)
+    # demo designs are built manually (strategy="manual"): no builder
+    # provenance is recorded, so recovery must yield no seed — and a warm
+    # retune must still work, falling back to a plain search
+    assert seed == []
+    warm = opened.retune("azure_hdd", warm_start=True,
+                         lam_high=2**14, lam_base=4.0).build()
+    cold = opened.retune("azure_hdd",
+                         lam_high=2**14, lam_base=4.0).build()
+    assert _designs_equal(cold.result.design, warm.result.design)
+
+
+def test_layer_cache_entry_cap_bounds_retune_loops():
+    # a long-running observe→retune loop shares one LayerCache across
+    # generations; max_entries must bound it (eviction = rebuild later,
+    # never an error) while results stay identical to unbounded search
+    from repro.core import PROFILES as P
+    from repro.core.airtune import airtune as run_airtune
+    from repro.core.sweep import LayerCache
+    keys = make_keys("gmm", 20_000, seed=3)
+    D = KeyPositions.fixed_record(keys, 16)
+    from repro.core import make_builders
+    builders = make_builders(lam_low=2**8, lam_high=2**14, base=2.0)
+    free = run_airtune(D, P["azure_ssd"], builders, k=3)
+    tiny = LayerCache(max_entries=4)
+    for tier in ("azure_ssd", "azure_hdd", "azure_ssd"):
+        res = run_airtune(D, P[tier], builders, k=3, layer_cache=tiny)
+        assert len(tiny) <= 4
+        if tier == "azure_ssd":
+            assert res.cost == free.cost    # eviction never changes results
+
+
+def test_retune_shares_layer_cache_across_tiers(tuned):
+    # the parent Index retains its LayerCache: two successive warm retunes
+    # to different tiers reuse each other's builds (profile-keyed scores
+    # can never alias — see repro.core.sweep.LayerCache)
+    D, idx, path = tuned
+    w1 = idx.retune("azure_hdd", warm_start=True).build()
+    w2 = idx.retune("azure_nfs", warm_start=True).build()
+    assert w2.stats.layers_built <= w1.stats.layers_built
+    assert w2.stats.layers_reused >= w1.stats.layers_reused
+    # both agree with their cold searches
+    assert w1.cost == idx.retune("azure_hdd").build().cost
+    assert w2.cost == idx.retune("azure_nfs").build().cost

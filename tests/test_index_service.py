@@ -158,6 +158,124 @@ def test_tiered_cache_zero_capacity_tier():
     assert c.get(1) is None               # nothing sticks, nothing crashes
 
 
+def test_tiered_cache_subpage_tier_demotes_through():
+    # middle tier smaller than one page (cap_pages == 0): the demotion
+    # cascade must pass straight through it and terminate
+    c = TieredBlockCache((2 * 64, 32, 2 * 64), page_bytes=64)
+    assert c.cap_pages == [2, 0, 2]
+    for pid in range(5):
+        c.put(pid, bytes(64))
+    assert len(c.tiers[1]) == 0           # nothing sticks in the 0-cap tier
+    # exclusive cascade == one global LRU: {4,3} hot, {2,1} demoted, 0 gone
+    assert sorted(c.tiers[0]) == [3, 4] and sorted(c.tiers[2]) == [1, 2]
+    assert c.get(0) is None and c.misses == 1
+    assert c.get(1) is not None           # promoted through the 0-cap tier
+    assert 1 in c.tiers[0] and c.hits == [0, 0, 1]
+
+
+def _reference_segments(order: list, caps: list) -> list:
+    """Global-LRU reference: the exclusive cascade is a segmented LRU, so
+    tier i must hold slice [Σcaps[:i], Σcaps[:i+1]) of the recency order."""
+    segs, at = [], 0
+    for cap in caps:
+        segs.append(order[at:at + cap])
+        at += cap
+    return segs
+
+
+@pytest.mark.parametrize("caps_bytes", [(256, 512), (256, 32, 512),
+                                        (64, 0, 64, 128), (0, 256)])
+def test_tiered_cache_matches_global_lru_model(caps_bytes):
+    """Property test: after any op sequence, tier contents equal the
+    recency segments of one global LRU of capacity Σ cap_pages, pages
+    live in at most one tier, and every get is consistently a hit/miss."""
+    P = 64
+    c = TieredBlockCache(caps_bytes, page_bytes=P)
+    total = sum(c.cap_pages)
+    rng = np.random.default_rng(hash(caps_bytes) & 0xFFFF)
+    order: list = []            # reference recency order, hottest first
+    gets = hits = 0
+    for _ in range(2000):
+        pid = int(rng.integers(0, 24))    # small id space: force collisions
+        if rng.random() < 0.5:
+            c.put(pid, bytes(P))
+            if pid in order:
+                order.remove(pid)
+            order.insert(0, pid)
+            del order[total:]
+        else:
+            gets += 1
+            got = c.get(pid)
+            assert (got is not None) == (pid in order)
+            if got is not None:
+                hits += 1
+                order.remove(pid)
+                order.insert(0, pid)
+                del order[total:]
+        # invariants: segment equality, exclusivity, capacity, accounting
+        segs = _reference_segments(order, c.cap_pages)
+        for tier, seg, cap in zip(c.tiers, segs, c.cap_pages):
+            assert len(tier) <= cap
+            # OrderedDict order: oldest first; segment is hottest-first
+            assert list(tier) == seg[::-1]
+        resident = [pid for t in c.tiers for pid in t]
+        assert len(resident) == len(set(resident)), "page in two tiers"
+        assert sum(c.hits) == hits and c.misses == gets - hits
+
+
+# ---------------------------------------------------------------------------
+# engine construction / lifecycle bugfixes
+# ---------------------------------------------------------------------------
+def test_explicit_page_bytes_overrides_paged_meta(served):
+    """An explicit ``page_bytes=`` kwarg must win over the file's recorded
+    paged layout (it used to be silently ignored whenever the meta
+    recorded one)."""
+    D, design, path, qs = served
+    with IndexService(path, profile=None, page_bytes=512,
+                      cache_bytes=(1 << 20,)) as svc:
+        assert svc.meta.page_bytes == 1024          # file IS paged...
+        assert svc.page_bytes == 512                # ...but the caller wins
+        assert svc.cache.page_bytes == 512          # cache pages accordingly
+        got = svc.lookup(qs)
+        # every cached page is a 512-byte unit (the file tail may be short)
+        sizes = {len(v) for t in svc.cache.tiers for v in t.values()}
+        assert sizes and all(s <= 512 for s in sizes) and 512 in sizes
+    assert np.array_equal(got, lookup_serialized(path, None, qs))
+    # meta fallback unchanged: no kwarg → the file's layout
+    with IndexService(path, profile=None) as svc:
+        assert svc.page_bytes == 1024
+
+
+def test_close_is_idempotent_and_del_closes(served):
+    import os
+    D, design, path, qs = served
+    svc = IndexService(path, profile=None)
+    svc.lookup(qs[:16])
+    svc.close()
+    svc.close()                                     # double close: no error
+    assert svc.fd is None
+    svc = IndexService(path, profile=None)
+    fd = svc.fd
+    os.fstat(fd)                                    # open while referenced
+    del svc                                         # caller forgot close():
+    import gc
+    gc.collect()
+    with pytest.raises(OSError):                    # ...the finalizer closed
+        os.fstat(fd)
+
+
+def test_gallop_step_never_zero():
+    from repro.core.serialize import RECORD_BYTES, gallop_step
+    # zero-width window (degenerate clamp) still extends by ≥ one record
+    assert gallop_step("step", 100, 100) == RECORD_BYTES["step"]
+    assert gallop_step("band", 0, 0) == RECORD_BYTES["band"]
+    # sub-record windows round up to one record as well
+    assert gallop_step("band", 0, 8) == RECORD_BYTES["band"]
+    # normal windows keep the doubling rule
+    assert gallop_step("step", 0, 64) == 64
+    assert gallop_step("band", 40, 200) == 160
+
+
 # ---------------------------------------------------------------------------
 # CachedProfile
 # ---------------------------------------------------------------------------
