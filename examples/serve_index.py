@@ -12,9 +12,13 @@
    :class:`repro.core.CachedProfile` and :meth:`Index.retune` re-tunes the
    index *for* the cache (paper Fig. 1: a hotter tier wants a shallower
    index) using the spec the file remembers,
-5. closes it end to end: serving on a degraded tier persists ServeStats
-   next to the file, :func:`repro.api.detect_drift` flags the drift, and
-   a warm-started retune (shared ``LayerCache``) searches again for the
+5. pipelines batches through :class:`repro.api.ServeSpec` — a worker
+   thread prefetches batch *i+1*'s pages while one fused Pallas kernel
+   descends batch *i*'s resident prefix — and reads the
+   compute-vs-I/O roofline off ``svc.stats``,
+6. closes it end to end: serving on a degraded tier persists ServeStats
+   next to the file, :meth:`Index.observe` flags the drift, and a
+   warm-started retune (shared ``LayerCache``) searches again for the
    observed profile at a fraction of the cold-search work.
 
 Run:  PYTHONPATH=src python examples/serve_index.py
@@ -27,7 +31,7 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.api import Index, PROFILES, TuneSpec
+from repro.api import Index, PROFILES, ServeSpec, TuneSpec
 from repro.core import KeyPositions, expected_latency
 from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
@@ -74,6 +78,20 @@ print(f"cold batch: {cold_s * 1e6:.1f}us modeled   "
       f"({cold_s / max(warm_s, 1e-12):.0f}x)")
 cold.close()
 
+print("== pipelined batches (ServeSpec: prefetch overlaps descent) ==")
+# a deliberately tiny cache so batches miss: the worker thread prefetches
+# batch i+1's pages while the fused kernel descends batch i
+pipe = reopened.serve(spec=ServeSpec(cache_bytes=(8 << 10,),
+                                     pipeline_depth=2, prefetch_layers=2))
+batches = [rng.choice(D.keys, 400) for _ in range(4)]
+pipe.lookup_batches(batches)
+roof = pipe.stats.roofline()
+print(f"pipelined {pipe.stats.pipelined_batches} batches, "
+      f"{pipe.stats.overlapped_preads} preads overlapped with descent; "
+      f"roofline: {roof['bound']}-bound "
+      f"(io_fraction={roof['io_fraction']:.2f})")
+pipe.close()
+
 print("== re-tune FOR the cache (CachedProfile via Index.retune) ==")
 eff = svc.cached_profile()           # T(Δ) at the observed hit rate
 # warm_start shares the Index's LayerCache across retunes: every layer
@@ -88,13 +106,12 @@ print(f"(current 3-layer design under cached profile: "
 svc.close()
 
 print("== the observe→retune loop (drift → warm-started search) ==")
-from repro.api import detect_drift  # noqa: E402  (narrative example order)
-
 degraded = "azure_hdd"                       # the tier it ACTUALLY runs on
 svc = idx.serve(profile=degraded, persist_stats=True)
 for _ in range(6):
     svc.lookup(rng.choice(D.keys, 512))
-report = detect_drift(svc, min_queries=1024)
+report = idx.observe(svc, min_queries=1024)  # live DriftReport; after
+#   close(), idx.observe_offline() reads the persisted snapshot instead
 print(report.describe())
 observed = svc.observed_profile(measured=False)
 svc.close()                                  # snapshot → index.air.stats.json

@@ -33,10 +33,11 @@ from repro.core.storage import PROFILES, StorageProfile
 from .drift import (DriftReport, detect_drift, detect_drift_from_file,
                     drift_from_stats)
 from .index import Index, resolve_profile
-from .spec import TuneSpec
+from .spec import ServeSpec, TuneSpec
 
 __all__ = [
-    "Index", "TuneSpec", "SearchStrategy", "TuneResult", "TuneStats",
+    "Index", "TuneSpec", "ServeSpec",
+    "SearchStrategy", "TuneResult", "TuneStats",
     "DriftReport", "detect_drift", "detect_drift_from_file",
     "drift_from_stats",
     "BASELINE_FAMILIES", "BUILDER_FAMILIES", "SEARCH_STRATEGIES", "Registry",

@@ -39,7 +39,11 @@ from repro.core.storage import (PROFILES, StorageProfile, profile_from_dict,
                                 profile_to_dict)
 from repro.core.sweep import DEFAULT_CACHE_ENTRIES, LayerCache
 
-from .spec import TuneSpec
+from .spec import ServeSpec, TuneSpec
+
+#: valid Index.serve() keyword overrides (besides ``profile``)
+_SERVE_FIELDS = frozenset(f.name for f in dataclasses.fields(ServeSpec))
+_MISSING = object()
 
 
 def resolve_profile(profile) -> tuple[StorageProfile | None, str | None]:
@@ -138,11 +142,13 @@ class Index:
     :meth:`tune`, :meth:`from_design`, or :meth:`open`."""
 
     def __init__(self, *, data=None, profile=None, profile_name=None,
-                 spec=None, result=None, path=None, file_meta=None):
+                 spec=None, serve_spec=None, result=None, path=None,
+                 file_meta=None):
         self._data: KeyPositions | None = data
         self._profile: StorageProfile | None = profile
         self._profile_name: str | None = profile_name
         self._spec: TuneSpec | None = spec
+        self._serve_spec: ServeSpec | None = serve_spec
         self._result: TuneResult | None = result
         self._path: str | None = path
         self._file_meta = file_meta
@@ -188,15 +194,16 @@ class Index:
 
     @classmethod
     def open(cls, path: str, data: KeyPositions | None = None) -> "Index":
-        """Open a serialized index.  The recorded :class:`TuneSpec` (if the
-        file was written by :meth:`save`) is restored; pass ``data`` to
-        enable full materialization (``.design``) and :meth:`retune`."""
+        """Open a serialized index.  The recorded :class:`TuneSpec` and
+        :class:`ServeSpec` (if the file was written by :meth:`save`) are
+        restored; pass ``data`` to enable full materialization
+        (``.design``) and :meth:`retune`."""
         fd = os.open(path, os.O_RDONLY)
         try:
             meta = read_meta(fd)
         finally:
             os.close(fd)
-        spec = prof = pname = None
+        spec = sspec = prof = pname = None
         if meta.tune:
             if meta.tune.get("spec") is not None:
                 try:
@@ -205,13 +212,18 @@ class Index:
                     spec = None   # forward/hand-edited provenance must not
                     #               make a readable file unopenable; the raw
                     #               dict stays available via file_meta.tune
+            if meta.tune.get("serve") is not None:
+                try:
+                    sspec = ServeSpec.from_dict(meta.tune["serve"])
+                except (TypeError, ValueError):
+                    sspec = None
             pname = meta.tune.get("profile")
             # full parameters first (measured/custom tiers), name fallback
             prof = profile_from_dict(meta.tune.get("profile_params"))
             if prof is None and pname in PROFILES:
                 prof = PROFILES[pname]
         return cls(path=path, file_meta=meta, data=data, spec=spec,
-                   profile=prof, profile_name=pname)
+                   serve_spec=sspec, profile=prof, profile_name=pname)
 
     # -- lifecycle ----------------------------------------------------------
     def build(self) -> "Index":
@@ -247,12 +259,15 @@ class Index:
         return self
 
     def save(self, path: str, *, data_record: int = 0,
-             page_bytes: int | None = None) -> "Index":
+             page_bytes: int | None = None,
+             serve_spec: ServeSpec | None = None) -> "Index":
         """Serialize (building first if needed) with TuneSpec provenance.
 
         ``page_bytes`` defaults to the spec's; the recorded meta lets
         :meth:`open` restore the spec and :class:`repro.serve.IndexService`
-        pick up the spec's cache configuration."""
+        pick up the spec's cache configuration.  ``serve_spec`` (or one
+        already attached to this Index) is recorded alongside — a reopened
+        index then serves with that configuration by default."""
         self.build()
         if self._result is None:       # disk-opened: nothing new to write
             raise ValueError(
@@ -267,9 +282,13 @@ class Index:
         # override is recorded into the spec, not silently dropped
         spec = self._spec.replace(page_bytes=pb) \
             if self._spec is not None else None
+        if serve_spec is not None:
+            self._serve_spec = serve_spec.validate()
         cost = float(self._result.cost)
         tune_meta = {
             "spec": spec.to_dict() if spec is not None else None,
+            "serve": (self._serve_spec.to_dict()
+                      if self._serve_spec is not None else None),
             "strategy": self._result.strategy,
             # NaN is not valid strict JSON — null out unknown costs
             "cost": cost if np.isfinite(cost) else None,
@@ -283,18 +302,69 @@ class Index:
         self._path = path
         return self
 
-    def serve(self, **engine_opts):
+    def serve(self, spec: ServeSpec | None = None, **overrides):
         """Open a batched :class:`repro.serve.IndexService` on the saved
-        file.  Defaults flow from the facade: the tuned-for profile and the
-        spec's cache configuration apply unless overridden."""
+        file.  Defaults flow from the facade: the tuned-for profile applies
+        unless ``profile=`` overrides it, and the :class:`ServeSpec`
+        recorded at save time (else field defaults) configures the engine.
+        Keyword overrides are ServeSpec field replacements — e.g.
+        ``idx.serve(backend="pallas", pipeline_depth=2)``."""
         if self._path is None:
             raise ValueError(
                 "serve() needs an on-disk index: call save(path) first "
                 "(or open an existing file with Index.open)")
         from repro.serve.index_service import IndexService
-        if "profile" not in engine_opts and self._profile is not None:
-            engine_opts["profile"] = self._profile
-        return IndexService(self._path, **engine_opts)
+        profile = overrides.pop("profile", _MISSING)
+        if profile is _MISSING:
+            # the tuned-for tier; an untuned handle gets the engine default
+            profile = self._profile if self._profile is not None \
+                else "azure_ssd"
+        if "use_device" in overrides:
+            from repro.core.deprecation import warn_deprecated
+            warn_deprecated(
+                "repro.serve.Index.serve(use_device=...) is deprecated; "
+                "pass backend='pallas' (a ServeSpec field) instead",
+                stacklevel=3, once=True)
+            overrides["backend"] = ("pallas" if overrides.pop("use_device")
+                                    else "numpy")
+        base = spec if spec is not None else self._serve_spec
+        if overrides:
+            unknown = set(overrides) - _SERVE_FIELDS
+            if unknown:
+                raise TypeError(
+                    f"serve() got unexpected keyword(s) {sorted(unknown)}; "
+                    f"valid ServeSpec fields: {sorted(_SERVE_FIELDS)}")
+            if overrides.get("cache_bytes", _MISSING) is None:
+                overrides.pop("cache_bytes")   # None keeps engine defaults
+            base = (base if base is not None
+                    else ServeSpec()).replace(**overrides)
+        return IndexService(self._path, profile=profile, spec=base)
+
+    def observe(self, service=None, **kwargs):
+        """Drift check against live serving: compare a service's observed
+        behavior (hit rate, measured pread latency) with the cost recorded
+        at tune time → :class:`repro.api.DriftReport`.  With no
+        ``service``, falls back to :meth:`observe_offline` on this Index's
+        file.  Keyword args pass through to ``detect_drift`` (e.g.
+        ``threshold=``)."""
+        from .drift import detect_drift
+        if service is None:
+            return self.observe_offline(**kwargs)
+        return detect_drift(service, **kwargs)
+
+    def observe_offline(self, path: str | None = None, **kwargs):
+        """Drift check from the persisted stats snapshot next to the index
+        file (``persist_stats=True`` serving writes it on close) — the
+        offline half of the observe→retune loop.  None when no snapshot
+        exists yet.  Keyword args pass through to
+        ``detect_drift_from_file``."""
+        path = path if path is not None else self._path
+        if path is None:
+            raise ValueError(
+                "observe_offline() needs an on-disk index: call save(path) "
+                "first (or open an existing file with Index.open)")
+        from .drift import detect_drift_from_file
+        return detect_drift_from_file(path, **kwargs)
 
     def retune(self, profile=None, data: KeyPositions | None = None,
                warm_start: bool = False, **spec_overrides) -> "Index":
@@ -429,6 +499,11 @@ class Index:
     def spec(self) -> TuneSpec | None:
         """The originating TuneSpec (None for files without provenance)."""
         return self._spec
+
+    @property
+    def serve_spec(self) -> ServeSpec | None:
+        """The recorded ServeSpec (None: engine defaults serve)."""
+        return self._serve_spec
 
     @property
     def profile(self) -> StorageProfile | None:

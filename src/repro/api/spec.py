@@ -1,12 +1,15 @@
-"""Declarative tuning specification — the "how" of an index, as data.
+"""Declarative tuning and serving specifications — the "how", as data.
 
 A :class:`TuneSpec` names everything Alg. 2 needs beyond the data and the
 storage profile: which builder families compete (registry names), the
 λ-grid they are instantiated on (Eq. 8), the search strategy and its
-knobs, and the serving-side layout/cache configuration.  It is a frozen
-value object that round-trips through JSON losslessly, so the facade can
-record it into the on-disk index meta — a reopened index remembers how it
-was tuned and can be re-tuned when the storage profile changes.
+knobs, and the serving-side layout/cache configuration.  A
+:class:`ServeSpec` is its serving-side twin: everything the batched engine
+(:class:`repro.serve.IndexService`) needs beyond (file, deployment tier) —
+cache tiers, residency, descent backend, and the two-stage pipeline knobs.
+Both are frozen value objects that round-trip through JSON losslessly, so
+the facade can record them into the on-disk index meta — a reopened index
+remembers how it was tuned AND how it is meant to be served.
 """
 from __future__ import annotations
 
@@ -15,6 +18,10 @@ import json
 
 from repro.core.builders import DEFAULT_FAMILIES, LayerBuilder, make_builders
 from repro.core.registry import BUILDER_FAMILIES, SEARCH_STRATEGIES
+from repro.core.storage import PROFILES
+
+#: resident-prefix descent backends, in fallback order (fused_descent ops)
+SERVE_BACKENDS = ("pallas", "jnp", "numpy")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,4 +122,108 @@ class TuneSpec:
 
     @classmethod
     def from_json(cls, s: str) -> "TuneSpec":
+        return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Everything the serving engine needs beyond (file, deployment tier).
+
+    Consolidates the constructor surface :class:`repro.serve.IndexService`
+    accreted over five PRs into one JSON-round-trippable value object,
+    symmetric with :class:`TuneSpec`: recorded into the on-disk meta by
+    ``Index.save(serve_spec=...)``, restored on ``Index.open``, accepted by
+    ``Index.serve(spec=...)``.  The deployment *tier* stays a separate
+    argument — the same spec serves the same file on any tier.
+
+    Fields
+    ------
+    cache_bytes:     tiered block-cache capacities, hottest first;
+                     ``()`` falls back to the TuneSpec-recorded capacities
+                     in the file meta, else a single 1 MiB tier.
+    cache_profile:   ``PROFILES`` name the cache's hit cost is modeled on
+                     (None: hits are free in ``modeled_seconds``).
+    page_bytes:      cache unit; 0 = the file's paged layout, else 4096.
+    resident_layers: top layers pinned in memory at open (the engine reads
+                     at least the root, per Alg. 1).
+    backend:         resident-prefix descent backend — ``"numpy"`` is the
+                     bit-exact float64 walk; ``"pallas"`` / ``"jnp"`` run
+                     the fused f32 kernel (step layers exact, band layers
+                     δ-slack widened) with the Pallas → jnp → numpy
+                     fallback chain.
+    interpret:       run Pallas in interpret mode (CPU containers).
+    coalesce_gap:    merge missing-page runs separated by ≤ this many
+                     bytes (profitable when ``T(gap) − T(0) < ℓ``).
+    persist_stats:   write a ServeStats snapshot next to the index on
+                     ``close()`` (the observe→retune loop's raw material).
+    pipeline_depth:  batches prefetched ahead by ``lookup_batches``'s
+                     background stage (0 = unpipelined serving).
+    prefetch_layers: disk layers the prefetch stage walks ahead per
+                     future batch (first-window preads only, no gallop).
+    """
+
+    cache_bytes: tuple = ()
+    cache_profile: str | None = "host_dram"
+    page_bytes: int = 0
+    resident_layers: int = 1
+    backend: str = "numpy"
+    interpret: bool = True
+    coalesce_gap: int = 0
+    persist_stats: bool = False
+    pipeline_depth: int = 0
+    prefetch_layers: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "cache_bytes",
+                           tuple(int(c) for c in self.cache_bytes))
+
+    # -- validation ---------------------------------------------------------
+    def validate(self) -> "ServeSpec":
+        """Sanity-check knobs and resolve the cache-profile name.  Returns
+        self for chaining; real raises (user input stays checked under -O).
+        """
+        if self.backend not in SERVE_BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"one of {SERVE_BACKENDS}")
+        if self.cache_profile is not None \
+                and self.cache_profile not in PROFILES:
+            raise ValueError(
+                f"unknown cache_profile {self.cache_profile!r}; named "
+                f"profiles: {', '.join(sorted(PROFILES))}")
+        if self.page_bytes < 0 or any(c < 0 for c in self.cache_bytes):
+            raise ValueError(f"negative sizes: page_bytes={self.page_bytes} "
+                             f"cache_bytes={self.cache_bytes}")
+        if self.resident_layers < 0 or self.pipeline_depth < 0 \
+                or self.coalesce_gap < 0 or self.prefetch_layers < 1:
+            raise ValueError(
+                f"bad knobs: resident_layers={self.resident_layers} "
+                f"pipeline_depth={self.pipeline_depth} "
+                f"coalesce_gap={self.coalesce_gap} "
+                f"prefetch_layers={self.prefetch_layers}")
+        return self
+
+    def replace(self, **changes) -> "ServeSpec":
+        return dataclasses.replace(self, **changes)
+
+    # -- JSON round-trip ----------------------------------------------------
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["cache_bytes"] = list(self.cache_bytes)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown ServeSpec fields {sorted(unknown)}; "
+                f"allowed: {sorted(known)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServeSpec":
         return cls.from_dict(json.loads(s))

@@ -14,15 +14,28 @@ from __future__ import annotations
 import sys
 import warnings
 
+_WARNED: set = set()    # messages already emitted once (see ``once=True``)
 
-def warn_deprecated(message: str, *, stacklevel: int = 3) -> None:
+
+def warn_deprecated(message: str, *, stacklevel: int = 3,
+                    once: bool = False) -> None:
     """Emit a ``DeprecationWarning`` attributed to the shim's caller.
 
     ``stacklevel=3`` assumes the call chain ``caller -> shim ->
     warn_deprecated``; pass a larger value for deeper shims.
+
+    ``once=True`` emits each distinct message at most once per process
+    (kwarg-shim surfaces like ``IndexService``'s legacy constructor would
+    otherwise warn on every open in a serving loop).  The internal-use
+    hard error is NOT deduplicated — repro-internal shim use always
+    raises, warned before or not.
     """
     caller = sys._getframe(stacklevel - 1).f_globals.get("__name__", "")
     if caller == "repro" or caller.startswith("repro."):
         raise AssertionError(
             f"deprecated API used from within repro ({caller}): {message}")
+    if once:
+        if message in _WARNED:
+            return
+        _WARNED.add(message)
     warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)

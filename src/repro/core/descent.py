@@ -53,6 +53,39 @@ def descend_band_layer(node_keys: np.ndarray, x1: np.ndarray, y1: np.ndarray,
     return np.floor(mid - d), np.ceil(mid + d)
 
 
+def descend_layers(layers, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Walk ``queries`` through a resident layer prefix, top-down — the
+    multi-layer composition of the two single-layer steps above, returned
+    per layer (Alg. 1 lines 3–5 over an in-memory prefix).
+
+    ``layers`` is a top-down sequence of parsed layer dicts (the
+    :class:`repro.serve.IndexService` resident representation)::
+
+        {"kind": "step", "keys", "pos_lo", "pos_hi"}
+        {"kind": "band", "x1", "y1", "m", "delta"}
+
+    Returns ``(lo, hi)`` float64 arrays of shape ``(L, Q)``: row ``l`` is
+    layer ``l``'s prediction for every query.  Each layer covers the full
+    key domain, so rows are functions of the query key alone — which is
+    what lets :mod:`repro.kernels.fused_descent` evaluate the whole prefix
+    in one fused dispatch.  Row ``L-1`` (the bottom-most resident layer)
+    is the window the on-disk walk continues from; this float64 path is
+    the bit-exactness reference for every fused backend.
+    """
+    Q = len(queries)
+    lo = np.empty((len(layers), Q), dtype=np.float64)
+    hi = np.empty((len(layers), Q), dtype=np.float64)
+    for li, lay in enumerate(layers):
+        if lay["kind"] == "step":
+            l_, h_ = descend_step_layer(lay["keys"], lay["pos_lo"],
+                                        lay["pos_hi"], queries)
+        else:
+            l_, h_ = descend_band_layer(lay["x1"], lay["x1"], lay["y1"],
+                                        lay["m"], lay["delta"], queries)
+        lo[li], hi[li] = l_, h_
+    return lo, hi
+
+
 def coalesce_ranges(starts, ends, gap: int = 0) -> tuple[np.ndarray, np.ndarray]:
     """Merge byte ranges ``[starts[i], ends[i])`` that overlap or sit within
     ``gap`` bytes of each other into maximal runs.

@@ -3,6 +3,11 @@
   index_lookup     — batched hierarchical index lookup (the paper's Alg. 1
                      adapted to the MXU: compare-count ranks + one-hot
                      gathers instead of pointer-chase binary search)
+  fused_descent    — the whole resident layer prefix in ONE kernel: a
+                     (queries, layers) grid walks every query through all
+                     pinned layers, per-layer step/band branching selected
+                     by a kind vector, parameter planes double-buffered
+                     through VMEM by the grid pipeline (serving hot path)
   flash_attention  — causal blockwise attention (GQA, sliding window,
                      logit softcap) for train/prefill
   decode_attention — flash-decode: one-token attention over a long KV

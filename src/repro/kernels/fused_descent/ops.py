@@ -1,0 +1,155 @@
+"""Public dispatch for the fused multi-layer descent (Pallas → jnp → numpy).
+
+``fused_descent`` is what the serving engine calls per batch: one op walks
+the queries through the whole resident layer prefix and returns the (L, Q)
+per-layer windows.  The numpy backend *is*
+:func:`repro.core.descent.descend_layers` — bit-identical to the per-layer
+path for every registered family.  The device backends compute in
+int32/float32: step rows stay exact, band rows are widened by the δ slack
+of :mod:`repro.kernels.index_lookup` (ranges remain valid under Eq. 1 but
+may be strictly wider), mirroring the engine's previous ``use_device``
+semantics.  Backend failures degrade down the chain like
+``candidate_score`` — a container without jax always lands on numpy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import ref
+
+MAX_VMEM_ENTRIES = 4096  # the fused kernel keeps one layer plane in VMEM
+# numpy twins of kernel.LANE / kernel.KEY_PAD so packing never imports jax
+LANE = 128
+KEY_PAD = np.iinfo(np.int32).max
+# device backends index with int32; KEY_PAD must stay strictly greater than
+# every real key AND every query, hence the -1
+_I32_LIM = 2**31 - 1
+
+
+def band_f32_slack(y1, m, x1) -> np.ndarray:
+    """Worst-case f32 rounding of ``mid = y1 + m·(q − x1)``: a few ULP of
+    |y1| plus key-quantization error |m|·ULP(x1) (same widening as
+    ``index_lookup.ops.device_arrays_from_design``)."""
+    return (8.0 + np.abs(np.asarray(y1, dtype=np.float64)) * 4e-6
+            + np.abs(np.asarray(m, dtype=np.float64))
+            * np.abs(np.asarray(x1, dtype=np.float64)) * 4e-6)
+
+
+def _pad_up(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+def pack_prefix(layers) -> dict | None:
+    """Pack a top-down resident prefix (parsed layer dicts, the
+    :class:`repro.serve.IndexService` representation) into the fused
+    kernel's (L, P) planes.
+
+    Returns None when the prefix is empty, any layer overflows int32, or
+    the common padded width exceeds the VMEM bound — callers then serve on
+    the numpy path, exactly like the per-layer device gating did.
+    Pure numpy: packing works without jax; only dispatch needs it.
+    """
+    L = len(layers)
+    if L == 0:
+        return None
+    widths = [len(lay["keys"] if lay["kind"] == "step" else lay["x1"])
+              for lay in layers]
+    P = _pad_up(max(widths), LANE)
+    if P > MAX_VMEM_ENTRIES:
+        return None
+    kinds = np.zeros(L, dtype=np.int32)
+    keys = np.full((L, P), KEY_PAD, dtype=np.int32)
+    pos_lo = np.zeros((L, P), dtype=np.int32)
+    pos_hi = np.zeros((L, P), dtype=np.int32)
+    x1 = np.zeros((L, P), dtype=np.float32)
+    y1 = np.zeros((L, P), dtype=np.float32)
+    m = np.zeros((L, P), dtype=np.float32)
+    delta = np.zeros((L, P), dtype=np.float32)
+    for l, lay in enumerate(layers):
+        n = widths[l]
+        if lay["kind"] == "step":
+            if (int(lay["keys"].max(initial=0)) >= _I32_LIM
+                    or int(lay["pos_hi"].max(initial=0)) >= _I32_LIM):
+                return None
+            keys[l, :n] = lay["keys"]
+            pos_lo[l, :n] = lay["pos_lo"]
+            pos_hi[l, :n] = lay["pos_hi"]
+        else:
+            if int(lay["x1"].max(initial=0)) >= _I32_LIM:
+                return None
+            kinds[l] = 1
+            keys[l, :n] = lay["x1"]
+            x1[l, :n] = lay["x1"].astype(np.float32)
+            y1[l, :n] = np.asarray(lay["y1"], dtype=np.float32)
+            m[l, :n] = np.asarray(lay["m"], dtype=np.float32)
+            delta[l, :n] = (np.asarray(lay["delta"], dtype=np.float64)
+                            + band_f32_slack(lay["y1"], lay["m"],
+                                             lay["x1"])).astype(np.float32)
+    return {"kinds": kinds, "keys": keys, "pos_lo": pos_lo, "pos_hi": pos_hi,
+            "x1": x1, "y1": y1, "m": m, "delta": delta}
+
+
+def _device_descent(planes: dict, q: np.ndarray, backend: str,
+                    interpret: bool):
+    """One device dispatch over packed planes → float64 (L, Q) rows."""
+    import jax.numpy as jnp
+
+    from . import kernel as K
+
+    qi = jnp.asarray(q.astype(np.int64), jnp.int32)
+    if backend == "jnp":
+        lo, hi = ref.fused_descent_jnp(planes, qi)
+    elif backend == "pallas":
+        nq = qi.shape[0]
+        pad = (-nq) % K.BLOCK_Q
+        if pad:
+            qi = jnp.concatenate([qi, jnp.full((pad,), qi[-1], qi.dtype)])
+        jplanes = [jnp.asarray(planes[k]) for k in
+                   ("kinds", "keys", "pos_lo", "pos_hi", "x1", "y1", "m",
+                    "delta")]
+        lo, hi = K.fused_descent_pallas(qi, *jplanes, interpret=interpret)
+        lo, hi = lo[:, :nq], hi[:, :nq]
+    else:
+        raise ValueError(f"unknown device backend {backend!r}")
+    return (np.asarray(lo, dtype=np.float64),
+            np.asarray(hi, dtype=np.float64))
+
+
+def fused_descent_with_backend(layers, queries, *, backend: str = "pallas",
+                               interpret: bool = True, packed=None):
+    """Like :func:`fused_descent` but also reports the backend that
+    actually served: ``(lo, hi, backend_used)`` — the engine attributes
+    ``device_batches`` from it."""
+    q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
+    if backend != "numpy":
+        if packed is None:
+            packed = pack_prefix(layers)
+        if (packed is not None and len(q)
+                and int(q.max(initial=0)) < _I32_LIM):
+            chain = ("pallas", "jnp") if backend == "pallas" else (backend,)
+            for b in chain:
+                try:
+                    lo, hi = _device_descent(packed, q, b, interpret)
+                except Exception:   # missing jax / kernel failure: degrade
+                    continue
+                return lo, hi, b
+    lo, hi = ref.fused_descent_ref(layers, q)
+    return lo, hi, "numpy"
+
+
+def fused_descent(layers, queries, *, backend: str = "pallas",
+                  interpret: bool = True, packed=None):
+    """Walk ``queries`` through a resident prefix in one fused dispatch →
+    ``(lo, hi)`` float64 arrays of shape (L, Q), row ``l`` = layer ``l``'s
+    window per query (top-down; row L−1 feeds the disk walk).
+
+    Fallback order: requested device backend (Pallas, then jnp) → numpy.
+    ``backend="numpy"`` (and every chain exhaustion) is bit-identical to
+    the per-layer :func:`repro.core.descent.descend_layers` walk; device
+    backends keep step rows exact and widen band rows by the f32 δ slack.
+    ``packed`` lets long-lived callers reuse one :func:`pack_prefix`
+    result across batches.
+    """
+    lo, hi, _ = fused_descent_with_backend(layers, queries, backend=backend,
+                                           interpret=interpret, packed=packed)
+    return lo, hi

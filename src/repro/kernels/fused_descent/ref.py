@@ -1,0 +1,57 @@
+"""References for the fused descent kernel.
+
+Two oracles with different contracts:
+
+  * :func:`fused_descent_ref` — the float64 ground truth.  Delegates to
+    :func:`repro.core.descent.descend_layers`, i.e. literally the per-layer
+    path the serving engine used before fusion; every numpy-backend result
+    of ``ops.fused_descent`` must be bit-identical to it.
+  * :func:`fused_descent_jnp` — pure-jnp f32 oracle over the *packed*
+    planes, mirroring the kernel's semantics (int32 keys, f32 band math on
+    the slack-widened δ, per-layer ``hi ≥ lo+1`` on band rows).  This is
+    both the kernel's test oracle and the middle link of the
+    Pallas → jnp → numpy fallback chain; it may differ from the kernel by
+    a few ULP of the f32 band midpoint (FMA contraction), never more.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.descent import descend_layers
+
+
+def fused_descent_ref(layers, queries: np.ndarray):
+    """Float64 (L, Q) lo/hi rows — the bit-exactness reference."""
+    return descend_layers(layers, np.asarray(queries, dtype=np.uint64))
+
+
+def fused_descent_jnp(planes: dict, queries):
+    """jnp f32 oracle over packed planes → (lo, hi) int32 of shape (L, Q).
+
+    ``planes`` is the dict built by ``ops.pack_prefix`` (numpy or jnp
+    arrays); ``queries`` int32, in-range per the packer's guards.
+    """
+    import jax.numpy as jnp
+
+    q = jnp.asarray(queries, jnp.int32)
+    qf = q.astype(jnp.float32)
+    kinds = np.asarray(planes["kinds"])
+    keys = jnp.asarray(planes["keys"])
+    los, his = [], []
+    for l in range(keys.shape[0]):
+        # rank − 1 == searchsorted-right − 1: the covering partition
+        i = jnp.clip(jnp.searchsorted(keys[l], q, side="right") - 1, 0, None)
+        if kinds[l] == 1:
+            x1 = jnp.asarray(planes["x1"])[l][i]
+            y1 = jnp.asarray(planes["y1"])[l][i]
+            m = jnp.asarray(planes["m"])[l][i]
+            d = jnp.asarray(planes["delta"])[l][i]
+            mid = y1 + m * (qf - x1)
+            lo = jnp.floor(mid - d).astype(jnp.int32)
+            hi = jnp.maximum(jnp.ceil(mid + d).astype(jnp.int32), lo + 1)
+        else:
+            lo = jnp.asarray(planes["pos_lo"])[l][i]
+            hi = jnp.asarray(planes["pos_hi"])[l][i]
+        los.append(lo)
+        his.append(hi)
+    return jnp.stack(los), jnp.stack(his)

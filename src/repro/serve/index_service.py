@@ -14,29 +14,41 @@ serves *batches* against one serialized index through three mechanisms:
   2. **read coalescing** — all pages a batch misses are merged into maximal
      runs (:func:`repro.core.descent.coalesce_ranges`) before any
      ``pread`` is issued: one seek per run, not per query;
-  3. **resident layers** — the top ``resident_layers`` index layers are
-     pinned in memory at open (the root is always read in full, per
-     Alg. 1) and descended fully vectorized; with ``use_device=True`` the
-     descent of resident layers routes through the Pallas
-     ``index_lookup`` kernels when keys/positions fit int32, with the
-     numpy :mod:`repro.core.descent` path as fallback.
+  3. **resident layers** — the top ``spec.resident_layers`` index layers
+     are pinned in memory at open (the root is always read in full, per
+     Alg. 1) and descended in ONE fused dispatch per batch
+     (:mod:`repro.kernels.fused_descent`): the numpy backend is the
+     bit-exact float64 walk; ``backend="pallas"``/``"jnp"`` run the fused
+     f32 kernel with the Pallas → jnp → numpy fallback chain;
+  4. **two-stage pipeline** — :meth:`IndexService.lookup_batches` with
+     ``spec.pipeline_depth > 0`` overlaps the fused descent + disk walk of
+     batch *i* (stage 2, this thread) with the coalesced first-window
+     preads of batches *i+1..i+depth* (stage 1, a single background
+     worker).  The prefetch stage only warms the block cache — windows are
+     identical to unpipelined serving — and its preads are tagged
+     ``overlapped`` in the stats so per-pread latency fits stay honest.
 
+Configuration arrives as a :class:`repro.api.ServeSpec` (``spec=``); the
+pre-spec keyword surface survives as warn-once deprecation shims.
 Per-layer descent is the same :mod:`repro.core.descent` step used by
 ``lookup_batch`` and ``SerializedIndex``, so all three paths agree
 bit-for-bit.  Observed hit rates feed back into tuning via
-:meth:`IndexService.cached_profile` (→ :class:`repro.core.CachedProfile`).
+:meth:`IndexService.cached_profile` (→ :class:`repro.core.CachedProfile`);
+:meth:`ServeStats.roofline` attributes served time to compute vs I/O so
+the serve bench can trend which side of the roofline the engine sits on.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import threading
 import time
 from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.descent import coalesce_ranges
+from repro.core.descent import coalesce_ranges, descend_layers
 from repro.core.serialize import (_BAND_DT, _STEP_DT, gallop_step, page_span,
                                   predict_from_records, read_meta,
                                   record_aligned_range, window_misses)
@@ -105,6 +117,15 @@ class TieredBlockCache:
         self.misses += 1
         return None
 
+    def peek(self, page_id):
+        """→ page bytes without promotion or hit/miss accounting — the
+        prefetch stage reads through this so overlapped work never skews
+        the hit-rate the tuner feeds on."""
+        for tier in self.tiers:
+            if page_id in tier:
+                return tier[page_id]
+        return None
+
     def put(self, page_id, data) -> None:
         for tier in self.tiers:
             tier.pop(page_id, None)
@@ -142,18 +163,34 @@ class ServeStats:
     bytes_from_cache: int = 0
     open_bytes: int = 0         # root + resident layers read at open
     retries: int = 0            # window extensions (band inter-key misses)
-    device_batches: int = 0
+    device_batches: int = 0     # batches whose resident descent ran fused
+    #                             on a device backend (pallas or jnp)
+    pipelined_batches: int = 0  # batches served through lookup_batches'
+    #                             two-stage pipeline
+    overlapped_preads: int = 0  # preads issued by the prefetch stage while
+    #                             stage 2 was descending another batch
     modeled_seconds: float = 0.0   # Σ T(Δ) under the configured profile
     open_modeled_seconds: float = 0.0  # the open-time share of the above
     data_modeled_seconds: float = 0.0  # Σ T(hi−lo) of returned data ranges
+    # roofline attribution (see .roofline()): measured wall inside the
+    # fused resident descent (stage-2 compute) vs Σ T(run) of every pread
+    # actually issued under the deployment profile (serving I/O; open-time
+    # resident loads excluded) — plus the prefetch stage's own wall
+    pread_modeled_seconds: float = 0.0
+    descent_seconds: float = 0.0
+    prefetch_seconds: float = 0.0
+    overlapped_pread_seconds: float = 0.0  # measured wall of tagged preads
     # what the *uncached* Alg. 1 walk (lookup_serialized) would pay for the
     # same traffic under the configured profile: per query, full price for
     # every layer window (resident ones included) plus the data read —
     # the deployment tier's Eq. 6 value realized on observed queries
     walk_modeled_seconds: float = 0.0
     pread_seconds: float = 0.0  # measured wall-clock inside os.pread
-    # rotating reservoir of measured (Δ bytes, seconds) pread samples — the
-    # raw material of observed_profile(); capped at READ_SAMPLE_CAP
+    # rotating reservoir of measured (Δ bytes, seconds, overlapped) pread
+    # samples — the raw material of observed_profile(); capped at
+    # READ_SAMPLE_CAP.  ``overlapped`` tags preads issued by the prefetch
+    # stage: they ran concurrently with compute and other I/O, so their
+    # wall time measures queueing as much as the tier.
     read_samples: list = dataclasses.field(default_factory=list)
 
     @property
@@ -188,16 +225,39 @@ class ServeStats:
             return float("nan")
         return self.walk_modeled_seconds / self.queries
 
-    def record_read(self, nbytes: int, seconds: float) -> None:
+    def record_read(self, nbytes: int, seconds: float,
+                    overlapped: bool = False) -> None:
         self.pread_seconds += seconds
         if len(self.read_samples) >= READ_SAMPLE_CAP:
             del self.read_samples[0]          # rotate: oldest sample leaves
-        self.read_samples.append((int(nbytes), float(seconds)))
+        self.read_samples.append((int(nbytes), float(seconds),
+                                  bool(overlapped)))
+
+    def roofline(self) -> dict:
+        """Compute-vs-I/O attribution of served traffic: measured wall
+        inside the fused resident descent (stage-2 compute) vs the modeled
+        cost ``Σ T(run)`` of every pread actually issued under the
+        deployment tier (overlapped or not; open-time loads excluded).
+        ``bound`` names the roofline side — ``"pread"`` is the goal state,
+        the regime the paper's storage-aware tuning optimizes for.  The
+        serve bench trends this dict per PR (``BENCH_serve.json``)."""
+        compute = float(self.descent_seconds)
+        io = float(self.pread_modeled_seconds)
+        total = compute + io
+        return {
+            "compute_seconds": compute,
+            "io_seconds": io,
+            "io_fraction": (io / total) if total > 0 else None,
+            "bound": (("pread" if io >= compute else "descent")
+                      if total > 0 else None),
+        }
 
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
-        d["read_samples"] = [[int(n), float(s)] for n, s in self.read_samples]
+        d["read_samples"] = [[int(n), float(s), bool(o)]
+                             for n, s, o in self.read_samples]
         d["hit_rate"] = self.hit_rate
+        d["roofline"] = self.roofline()
         # NaN (no queries yet) is not valid strict JSON — null it out
         for key in ("query_modeled_seconds", "walk_query_seconds"):
             v = getattr(self, key)
@@ -207,11 +267,14 @@ class ServeStats:
     @classmethod
     def from_snapshot(cls, d: dict) -> "ServeStats":
         """Inverse of :meth:`snapshot` (derived keys are recomputed, so
-        ``from_snapshot(s.snapshot())`` round-trips exactly)."""
+        ``from_snapshot(s.snapshot())`` round-trips exactly).  Pre-pipeline
+        snapshots carried 2-element read samples — they load as
+        non-overlapped."""
         fields = {f.name for f in dataclasses.fields(cls)}
         kw = {k: v for k, v in d.items() if k in fields}
-        kw["read_samples"] = [(int(n), float(s))
-                              for n, s in kw.get("read_samples", [])]
+        kw["read_samples"] = [
+            (int(r[0]), float(r[1]), bool(r[2]) if len(r) > 2 else False)
+            for r in kw.get("read_samples", [])]
         return cls(**kw)
 
 
@@ -262,11 +325,22 @@ def measured_backing_profile(stats: ServeStats,
     """Monotone ``T(Δ)`` through the *measured* pread samples — per-size
     median wall-clock, the §3.2 measurement applied to live serving.
     None when the window holds too few samples or too few distinct sizes
-    to say anything about the latency/bandwidth split."""
-    if len(stats.read_samples) < min_samples:
+    to say anything about the latency/bandwidth split.
+
+    Samples tagged ``overlapped`` (issued by the pipeline's prefetch stage
+    while compute and other I/O were in flight) measure queueing, not the
+    tier — fitting them would *under-price* the tier exactly when
+    pipelining hides latency best.  They are excluded whenever enough
+    blocking samples remain; a fully-pipelined window falls back to all
+    samples rather than refusing to fit."""
+    blocking = [r for r in stats.read_samples
+                if not (len(r) > 2 and r[2])]
+    samples = blocking if len(blocking) >= min_samples \
+        else stats.read_samples
+    if len(samples) < min_samples:
         return None
-    sizes = np.asarray([n for n, _ in stats.read_samples], dtype=np.float64)
-    secs = np.asarray([s for _, s in stats.read_samples], dtype=np.float64)
+    sizes = np.asarray([r[0] for r in samples], dtype=np.float64)
+    secs = np.asarray([r[1] for r in samples], dtype=np.float64)
     uniq = np.unique(sizes)
     if len(uniq) < 2:
         return None
@@ -300,57 +374,111 @@ def observed_profile_from_stats(stats: ServeStats, backing: StorageProfile,
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
+#: pre-ServeSpec constructor keywords, kept as warn-once deprecation shims
+_LEGACY_KWARGS = ("cache_bytes", "cache_profile", "page_bytes",
+                  "resident_layers", "use_device", "interpret",
+                  "coalesce_gap", "persist_stats")
+
+
+def _fold_legacy_kwargs(spec, legacy: dict):
+    """Fold pre-spec constructor keywords into a ServeSpec, warning once
+    per keyword (hard error for ``repro.*`` callers — the repo itself must
+    stay on the spec surface).  ``spec`` may be None."""
+    from repro.api.spec import ServeSpec   # lazy: api sits above serve
+    from repro.core.deprecation import warn_deprecated
+    changes = {}
+    for name, val in legacy.items():
+        if name not in _LEGACY_KWARGS:
+            raise TypeError(
+                f"IndexService got an unexpected keyword {name!r}")
+        warn_deprecated(
+            f"repro.serve.IndexService({name}=...) is deprecated; pass "
+            f"spec=repro.api.ServeSpec(...) instead",
+            stacklevel=4, once=True)
+        if name == "use_device":
+            changes["backend"] = "pallas" if val else "numpy"
+        elif name == "cache_bytes":
+            if val is not None:      # None kept the engine default — still does
+                changes["cache_bytes"] = tuple(val)
+        elif name == "page_bytes":
+            changes["page_bytes"] = int(val or 0)
+        elif name == "cache_profile":
+            if val is None or isinstance(val, str):
+                changes["cache_profile"] = val
+            else:                    # profile object: map back to its name
+                pname = getattr(val, "name", None)
+                if pname not in PROFILES:
+                    raise TypeError(
+                        "cache_profile objects are no longer accepted; "
+                        "pass a PROFILES name (or None) via ServeSpec")
+                changes["cache_profile"] = pname
+        else:
+            changes[name] = val
+    if not changes:
+        return spec
+    return (spec or ServeSpec()).replace(**changes)
+
+
 class IndexService:
     """Serve batched lookups against a serialized index file.
 
     Parameters
     ----------
-    path:            index file written by :func:`repro.core.write_index`
-                     (usually via ``repro.api.Index.save``).
-    profile:         storage tier of the file (name in ``PROFILES`` or a
-                     :class:`StorageProfile`); drives ``modeled_seconds``.
-    cache_bytes:     per-tier capacities of the block cache, hottest first.
-                     ``None`` (default) uses the ``cache_bytes`` of the
-                     TuneSpec recorded in the file meta when present, else
-                     a single 1 MiB tier.
-    cache_profile:   tier the cache lives in (modeled hit cost; host DRAM).
-    page_bytes:      cache unit; defaults to the file's paged layout, or
-                     ``DEFAULT_PAGE_BYTES`` for densely-packed files.
-    resident_layers: top layers pinned in memory at open (≥ 1: the root is
-                     always read in full, per Alg. 1).
-    use_device:      descend resident layers on the Pallas index-lookup
-                     kernels when keys/positions fit int32.
-    coalesce_gap:    merge missing-page runs separated by ≤ this many bytes
-                     (profitable when ``T(gap) − T(0) < ℓ``).
+    path:     index file written by :func:`repro.core.write_index`
+              (usually via ``repro.api.Index.save``).
+    profile:  storage tier of the file (name in ``PROFILES`` or a
+              :class:`StorageProfile`); drives ``modeled_seconds``.  Kept
+              outside the spec on purpose — the same spec serves the same
+              file on any tier.
+    spec:     a :class:`repro.api.ServeSpec` with everything else: cache
+              tiers, residency, descent backend, pipeline knobs.  ``None``
+              uses the spec recorded in the file meta by
+              ``Index.save(serve_spec=...)`` when present, else defaults.
+              See the ServeSpec docstring for the field reference.
+
+    The pre-spec keyword surface (``cache_bytes=``, ``use_device=``, ...)
+    survives as warn-once deprecation shims that fold into the spec;
+    internal (``repro.*``) callers hard-error instead.
     """
 
-    def __init__(self, path: str, *, profile="azure_ssd",
-                 cache_bytes=None, cache_profile="host_dram",
-                 page_bytes: int | None = None, resident_layers: int = 1,
-                 use_device: bool = False, interpret: bool = True,
-                 coalesce_gap: int = 0, persist_stats: bool = False):
+    def __init__(self, path: str, *, profile="azure_ssd", spec=None,
+                 **legacy):
         self.fd = None              # __del__ must be safe mid-__init__
+        self._executor = None
+        if legacy:
+            spec = _fold_legacy_kwargs(spec, legacy)
         self.path = path
         self.fd = os.open(path, os.O_RDONLY)
         self.meta = read_meta(self.fd)
         self.tune_meta = self.meta.tune   # facade provenance (may be None)
+        if spec is None:
+            spec = self._spec_from_meta()
+        if spec is None:
+            from repro.api.spec import ServeSpec
+            spec = ServeSpec()
+        self.spec = spec.validate()
         self.profile = PROFILES[profile] if isinstance(profile, str) else profile
-        self.cache_profile = (PROFILES[cache_profile]
-                              if isinstance(cache_profile, str) else cache_profile)
-        # precedence: explicit kwarg > file's paged layout > default
-        self.page_bytes = int(page_bytes or self.meta.page_bytes
+        self.cache_profile = (PROFILES[spec.cache_profile]
+                              if spec.cache_profile else None)
+        # precedence: spec field > file's paged layout > default
+        self.page_bytes = int(spec.page_bytes or self.meta.page_bytes
                               or DEFAULT_PAGE_BYTES)
-        if cache_bytes is None:     # spec-recorded cache config, then default
-            spec = (self.tune_meta or {}).get("spec") or {}
-            cache_bytes = tuple(spec.get("cache_bytes") or ()) or (1 << 20,)
+        cache_bytes = spec.cache_bytes
+        if not cache_bytes:         # TuneSpec-recorded capacities, then default
+            tspec = (self.tune_meta or {}).get("spec") or {}
+            cache_bytes = tuple(tspec.get("cache_bytes") or ()) or (1 << 20,)
         self.cache = TieredBlockCache(cache_bytes, self.page_bytes)
-        self.coalesce_gap = int(coalesce_gap)
-        self.interpret = interpret
-        self.persist_stats = bool(persist_stats)
+        self.coalesce_gap = int(spec.coalesce_gap)
+        self.interpret = spec.interpret
+        self.persist_stats = bool(spec.persist_stats)
+        self.backend = spec.backend
         self.stats = ServeStats()
+        # one lock covers cache + stats: the prefetch worker shares both
+        # with the serving thread; preads themselves run outside it
+        self._mu = threading.Lock()
 
         L = len(self.meta.layers)
-        n_res = min(max(int(resident_layers), 1), L) if L else 0
+        n_res = min(max(int(spec.resident_layers), 1), L) if L else 0
         self._resident: dict[int, dict] = {}
         for li in range(L - n_res, L):
             lm = self.meta.layers[li]
@@ -363,16 +491,43 @@ class IndexService:
                 t = float(self.profile(lm.size))
                 self.stats.modeled_seconds += t
                 self.stats.open_modeled_seconds += t
-        self._device: dict[int, dict] = {}
+        # the resident prefix, top-down (root first) — the fused kernel's
+        # layer order; row L−1 of its output feeds the disk walk
+        self._prefix_lis = list(range(L - 1, L - n_res - 1, -1))
+        self._prefix = [self._resident[li] for li in self._prefix_lis]
+        self._packed = None
         self.device_active = False
-        if use_device:
-            self._device = self._to_device(self._resident)
-            self.device_active = bool(self._device)
+        if self.backend != "numpy" and self._prefix:
+            from repro.kernels import fused_descent as fd
+            self._packed = fd.pack_prefix(self._prefix)
+            if self._packed is not None:
+                try:
+                    import jax  # noqa: F401  (gated: CPU-only containers)
+                except Exception:
+                    self._packed = None
+            self.device_active = self._packed is not None
+
+    def _spec_from_meta(self):
+        """The ServeSpec recorded by ``Index.save(serve_spec=...)``, or
+        None (missing / forward-version meta serves on defaults)."""
+        d = (self.tune_meta or {}).get("serve")
+        if d is None:
+            return None
+        from repro.api.spec import ServeSpec
+        try:
+            return ServeSpec.from_dict(d)
+        except (TypeError, ValueError):
+            return None
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
-        """Idempotent; with ``persist_stats=True`` the final ServeStats
-        snapshot is written to ``<path>.stats.json`` first."""
+        """Idempotent; drains the prefetch worker, then (with
+        ``persist_stats=True``) writes the final ServeStats snapshot to
+        ``<path>.stats.json`` before releasing the fd."""
+        ex = getattr(self, "_executor", None)
+        if ex is not None:
+            ex.shutdown(wait=True)   # no prefetch pread may outlive the fd
+            self._executor = None
         if getattr(self, "fd", None) is not None:
             if getattr(self, "persist_stats", False):
                 try:
@@ -409,103 +564,70 @@ class IndexService:
                 "y1": rec["y1"].astype(np.float64), "m": rec["m"].copy(),
                 "delta": rec["delta"].copy()}
 
-    def _to_device(self, resident: dict) -> dict:
-        """Kernel-ready int32/f32 arrays for resident layers; {} when jax is
-        unavailable or any layer overflows int32 (numpy path then serves)."""
-        try:
-            import jax.numpy as jnp  # noqa: F401  (gated: CPU-only containers)
-        except Exception:
-            return {}
-        dev = {}
-        for li, lay in resident.items():
-            if lay["kind"] == "step":
-                if (int(lay["keys"].max(initial=0)) >= 2**31
-                        or int(lay["pos_hi"].max(initial=0)) >= 2**31):
-                    return {}
-                dev[li] = {
-                    "kind": "step",
-                    "piece_keys": jnp.asarray(lay["keys"], jnp.int32),
-                    "piece_pos": jnp.asarray(
-                        np.append(lay["pos_lo"], lay["pos_hi"][-1]), jnp.int32),
-                }
-            else:
-                if int(lay["x1"].max(initial=0)) >= 2**31:
-                    return {}
-                # widen δ by the worst-case f32 rounding (same slack as
-                # kernels.index_lookup.ops.device_arrays_from_design)
-                slack = (8.0 + np.abs(lay["y1"]) * 4e-6
-                         + np.abs(lay["m"]) * lay["x1"].astype(np.float64) * 4e-6)
-                dev[li] = {
-                    "kind": "band",
-                    "node_keys": jnp.asarray(lay["x1"], jnp.int32),
-                    "x1": jnp.asarray(lay["x1"], jnp.float32),
-                    "y1": jnp.asarray(lay["y1"], jnp.float32),
-                    "m": jnp.asarray(lay["m"], jnp.float32),
-                    "delta": jnp.asarray(lay["delta"] + slack, jnp.float32),
-                }
-        return dev
-
     # -- descent ------------------------------------------------------------
-    def _descend_resident(self, li: int, q: np.ndarray):
-        if self.device_active and li in self._device \
-                and int(q.max(initial=0)) < 2**31:
-            from repro.kernels.index_lookup import ops
-            import jax.numpy as jnp
-            lay = self._device[li]
-            qd = jnp.asarray(q, jnp.int32)
-            if lay["kind"] == "step":
-                lo, hi = ops.lookup_step_layer(qd, lay["piece_keys"],
-                                               lay["piece_pos"],
-                                               interpret=self.interpret)
-            else:
-                lo, hi = ops.lookup_band_layer(qd, lay["node_keys"],
-                                               lay["x1"], lay["y1"], lay["m"],
-                                               lay["delta"],
-                                               interpret=self.interpret)
-            self.stats.device_batches += 1
-            return np.asarray(lo, np.int64), np.asarray(hi, np.int64)
-        lay = self._resident[li]
-        if lay["kind"] == "step":
-            from repro.core.descent import descend_step_layer
-            return descend_step_layer(lay["keys"], lay["pos_lo"],
-                                      lay["pos_hi"], q)
-        from repro.core.descent import descend_band_layer
-        return descend_band_layer(lay["x1"], lay["x1"], lay["y1"], lay["m"],
-                                  lay["delta"], q)
+    def _descend_prefix(self, q: np.ndarray):
+        """Fused walk through the whole resident prefix → float64 (L, Q)
+        lo/hi rows plus the backend that served.  Device-eligible batches
+        go through the Pallas → jnp → numpy chain; everything else is the
+        bit-exact float64 walk (= the old per-layer path exactly)."""
+        from repro.kernels import fused_descent as fd
+        if self.device_active:
+            return fd.fused_descent_with_backend(
+                self._prefix, q, backend=self.backend,
+                interpret=self.interpret, packed=self._packed)
+        lo, hi = descend_layers(self._prefix, q)
+        return lo, hi, "numpy"
 
     def _ensure_pages(self, page_ids: list) -> dict:
         """All requested pages → bytes, via cache then coalesced preads."""
         P = self.page_bytes
         pages, missing = {}, []
-        for pid in page_ids:
-            data = self.cache.get(pid)
-            if data is None:
-                missing.append(pid)
-            else:
-                pages[pid] = data
-                self.stats.pages_hit += 1
-                self.stats.bytes_from_cache += len(data)
-        if self.cache_profile is not None and pages:
-            self.stats.modeled_seconds += len(pages) * float(
-                self.cache_profile(P))
-        if not missing:
-            return pages
+        with self._mu:
+            for pid in page_ids:
+                data = self.cache.get(pid)
+                if data is None:
+                    missing.append(pid)
+                else:
+                    pages[pid] = data
+                    self.stats.pages_hit += 1
+                    self.stats.bytes_from_cache += len(data)
+            if self.cache_profile is not None and pages:
+                self.stats.modeled_seconds += len(pages) * float(
+                    self.cache_profile(P))
+        if missing:
+            pages.update(self._fetch_missing(missing))
+        return pages
+
+    def _fetch_missing(self, missing: list, *,
+                       overlapped: bool = False) -> dict:
+        """Coalesce missing page ids into runs and pread them into the
+        cache.  The preads run outside the lock (so prefetch I/O really
+        overlaps stage-2 compute); cache/stats mutation re-acquires it."""
+        P = self.page_bytes
+        pages = {}
         ms = np.asarray(missing, dtype=np.int64) * P
         run_s, run_e = coalesce_ranges(ms, ms + P, gap=self.coalesce_gap)
         for rs, re_ in zip(run_s, run_e):
             t0 = time.perf_counter()
             raw = os.pread(self.fd, int(re_ - rs), int(rs))
-            self.stats.record_read(len(raw), time.perf_counter() - t0)
-            self.stats.preads += 1
-            self.stats.bytes_fetched += len(raw)
-            if self.profile is not None:
-                self.stats.modeled_seconds += float(self.profile(re_ - rs))
-            for k in range(-(-len(raw) // P)):
-                pid = int(rs) // P + k
-                chunk = raw[k * P:(k + 1) * P]
-                pages[pid] = chunk
-                self.cache.put(pid, chunk)
-                self.stats.pages_fetched += 1
+            dt = time.perf_counter() - t0
+            with self._mu:
+                self.stats.record_read(len(raw), dt, overlapped=overlapped)
+                self.stats.preads += 1
+                if overlapped:
+                    self.stats.overlapped_preads += 1
+                    self.stats.overlapped_pread_seconds += dt
+                self.stats.bytes_fetched += len(raw)
+                if self.profile is not None:
+                    t = float(self.profile(re_ - rs))
+                    self.stats.modeled_seconds += t
+                    self.stats.pread_modeled_seconds += t
+                for k in range(-(-len(raw) // P)):
+                    pid = int(rs) // P + k
+                    chunk = raw[k * P:(k + 1) * P]
+                    pages[pid] = chunk
+                    self.cache.put(pid, chunk)
+                    self.stats.pages_fetched += 1
         return pages
 
     def _descend_disk(self, lm, lo, hi, q: np.ndarray):
@@ -568,15 +690,18 @@ class IndexService:
     def lookup(self, queries) -> np.ndarray:
         """Batched Alg. 1 → (q, 2) int64 array of data-layer byte ranges.
 
-        On the numpy path the results are bit-identical to
-        ``lookup_serialized`` on the same file — the cache and coalescing
-        only change *how* bytes are obtained.  The device path widens
-        resident *band* layers by the f32-rounding slack (ranges stay
-        valid but may be strictly wider).
+        The resident prefix is descended in ONE fused dispatch (all layers,
+        all queries); remaining layers walk the file through the block
+        cache.  On the numpy backend the results are bit-identical to
+        ``lookup_serialized`` on the same file — fusion, the cache and
+        coalescing only change *how* windows are computed and bytes
+        obtained.  Device backends widen resident *band* layers by the
+        f32-rounding slack (ranges stay valid but may be strictly wider).
         """
         q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
-        self.stats.queries += len(q)
-        self.stats.batches += 1
+        with self._mu:
+            self.stats.queries += len(q)
+            self.stats.batches += 1
         metas = self.meta.layers
         if len(q) == 0:
             return np.empty((0, 2), dtype=np.int64)
@@ -586,33 +711,43 @@ class IndexService:
             out[:, 1] = self.meta.data_size
             if self.profile is not None:   # (no index): scan the data layer
                 t = len(q) * float(self.profile(self.meta.data_size))
-                self.stats.data_modeled_seconds += t
-                self.stats.walk_modeled_seconds += t
+                with self._mu:
+                    self.stats.data_modeled_seconds += t
+                    self.stats.walk_modeled_seconds += t
             return out
         lo = hi = None
-        for li in range(len(metas) - 1, -1, -1):
-            if li in self._resident:
-                if self.profile is not None:
+        n_res = len(self._prefix)
+        if n_res:
+            t0 = time.perf_counter()
+            plo, phi, used = self._descend_prefix(q)
+            dt = time.perf_counter() - t0
+            walk = 0.0
+            if self.profile is not None:
+                for r, li in enumerate(self._prefix_lis):
                     lm = metas[li]
-                    if lo is None:
+                    if r == 0:
                         # Alg. 1 reads the ROOT outright per query;
                         # residency only amortizes it — the full-price
                         # walk counter must not
-                        self.stats.walk_modeled_seconds += len(q) * float(
-                            self.profile(lm.size))
+                        walk += len(q) * float(self.profile(lm.size))
                     else:
                         # non-root resident layers would be *window*
                         # reads in the scalar walk — charge the
                         # record-aligned window, not the layer size
                         # (first-window cost; the rare gallop retries an
                         # on-disk walk would pay are not modeled here)
-                        wa, wb = record_aligned_range(lm.kind, lo, hi,
-                                                      lm.size)
-                        self.stats.walk_modeled_seconds += float(np.sum(
+                        wa, wb = record_aligned_range(
+                            lm.kind, plo[r - 1], phi[r - 1], lm.size)
+                        walk += float(np.sum(
                             self.profile((wb - wa).astype(np.float64))))
-                lo, hi = self._descend_resident(li, q)
-            else:
-                lo, hi = self._descend_disk(metas[li], lo, hi, q)
+            with self._mu:
+                self.stats.descent_seconds += dt
+                self.stats.walk_modeled_seconds += walk
+                if used != "numpy":
+                    self.stats.device_batches += 1
+            lo, hi = plo[-1], phi[-1]
+        for li in range(len(metas) - n_res - 1, -1, -1):
+            lo, hi = self._descend_disk(metas[li], lo, hi, q)
         lo = np.maximum(np.asarray(lo, dtype=np.int64), 0)
         hi = np.minimum(np.maximum(np.asarray(hi, dtype=np.int64), lo + 1),
                         self.meta.data_size)
@@ -620,9 +755,129 @@ class IndexService:
             # the caller's final data-range read, modeled on the same tier:
             # part of Eq. 6's E[T], charged to observed AND walk cost
             t = float(np.sum(self.profile((hi - lo).astype(np.float64))))
-            self.stats.data_modeled_seconds += t
-            self.stats.walk_modeled_seconds += t
+            with self._mu:
+                self.stats.data_modeled_seconds += t
+                self.stats.walk_modeled_seconds += t
         return np.stack([lo, hi], axis=1)
+
+    def lookup_batches(self, batches) -> list:
+        """Serve a sequence of query batches through the two-stage
+        pipeline: while this thread descends + walks batch *i* (stage 2),
+        a single background worker pre-issues the coalesced first-window
+        preads of batches *i+1..i+depth* (stage 1), so storage latency
+        hides behind compute.  Returns one ``lookup``-shaped array per
+        batch — identical to calling :meth:`lookup` sequentially
+        (``spec.pipeline_depth == 0`` does exactly that)."""
+        batches = [np.atleast_1d(np.asarray(b, dtype=np.uint64))
+                   for b in batches]
+        depth = int(self.spec.pipeline_depth)
+        if depth <= 0 or len(batches) <= 1:
+            return [self.lookup(b) for b in batches]
+        if self._executor is None:
+            from concurrent.futures import ThreadPoolExecutor
+            self._executor = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="airindex-prefetch")
+        pending: dict[int, object] = {}
+        out = []
+        for i in range(len(batches)):
+            for j in range(i + 1, min(i + depth, len(batches) - 1) + 1):
+                if j not in pending:
+                    pending[j] = self._executor.submit(
+                        self._prefetch_batch, batches[j])
+            out.append(self.lookup(batches[i]))
+            with self._mu:
+                self.stats.pipelined_batches += 1
+            fut = pending.pop(i + 1, None)
+            if fut is not None:
+                # batch i+1 must be fully staged before stage 2 touches it:
+                # the cache probe is the only coupling, but waiting keeps
+                # the hit accounting deterministic
+                fut.result()
+        for fut in pending.values():
+            fut.result()
+        return out
+
+    def _prefetch_batch(self, q: np.ndarray) -> int:
+        """Stage 1 of the pipeline: descend the resident prefix for a
+        *future* batch and pread its missing first-window pages into the
+        cache (tagged ``overlapped``).  Walks up to
+        ``spec.prefetch_layers`` disk layers deep, advancing through
+        already-cached records only — no gallop, no stats that belong to
+        serving (the later :meth:`lookup` charges those).  Returns the
+        number of pages staged."""
+        t_start = time.perf_counter()
+        metas = self.meta.layers
+        n_res = len(self._prefix)
+        n_disk = len(metas) - n_res
+        staged = 0
+        if n_disk <= 0 or len(q) == 0:
+            return 0
+        if n_res:
+            plo, phi, _ = self._descend_prefix(q)
+            lo, hi = plo[-1], phi[-1]
+        else:
+            lo = hi = None
+        depth = min(max(int(self.spec.prefetch_layers), 1), n_disk)
+        P = self.page_bytes
+        for d in range(depth):
+            lm = metas[n_disk - 1 - d]
+            a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
+            ab = np.unique(np.stack([a, b], axis=1), axis=0)
+            fa, fb = lm.offset + ab[:, 0], lm.offset + ab[:, 1]
+            pa, pb = page_span(fa, fb - fa, P)
+            need: set = set()
+            for x, y in zip(pa.tolist(), pb.tolist()):
+                need.update(range(x, y))
+            with self._mu:
+                missing = [pid for pid in sorted(need)
+                           if pid not in self.cache]
+            if missing:
+                staged += len(self._fetch_missing(missing, overlapped=True))
+            if d + 1 < depth:
+                lo, hi, q = self._advance_windows(lm, a, b, q)
+                if len(q) == 0:
+                    break
+        with self._mu:
+            self.stats.prefetch_seconds += time.perf_counter() - t_start
+        return staged
+
+    def _advance_windows(self, lm, a, b, q: np.ndarray):
+        """Predict the next layer's windows from *cached* pages only
+        (``peek``: no promotion, no hit/miss skew).  Queries whose window
+        pages were evicted, or whose covering record lies outside the
+        first window, simply drop out of the prefetch — stage 2 serves
+        them at full fidelity."""
+        P = self.page_bytes
+        ab, inv = np.unique(np.stack([a, b], axis=1), axis=0,
+                            return_inverse=True)
+        inv = inv.reshape(-1)
+        fa, fb = lm.offset + ab[:, 0], lm.offset + ab[:, 1]
+        pa, pb = page_span(fa, fb - fa, P)
+        idx = np.arange(len(q))
+        los, his, qs = [], [], []
+        for ui in range(len(ab)):
+            with self._mu:
+                chunks = [self.cache.peek(p)
+                          for p in range(int(pa[ui]), int(pb[ui]))]
+            if any(c is None for c in chunks):
+                continue            # evicted under pressure: stop here
+            base = int(pa[ui]) * P
+            raw = b"".join(chunks)[int(fa[ui]) - base:int(fb[ui]) - base]
+            sub = idx[inv == ui]
+            left, right = window_misses(lm.kind, raw, int(ab[ui, 0]),
+                                        int(ab[ui, 1]), lm.size, q[sub])
+            ok = sub[~(left | right)]
+            if len(ok) == 0:
+                continue
+            l_, h_ = predict_from_records(lm.kind, raw, q[ok], lm.end_pos)
+            los.append(l_)
+            his.append(h_)
+            qs.append(q[ok])
+        if not qs:
+            e = np.empty(0, dtype=np.float64)
+            return e, e, np.empty(0, dtype=np.uint64)
+        return (np.concatenate(los), np.concatenate(his),
+                np.concatenate(qs))
 
     @property
     def tune_spec(self):

@@ -7,7 +7,8 @@ import os
 import numpy as np
 import pytest
 
-from repro.api import Index, TuneSpec, detect_drift, detect_drift_from_file
+from repro.api import (Index, ServeSpec, TuneSpec, detect_drift,
+                       detect_drift_from_file)
 from repro.api.drift import drift_from_stats
 from repro.core import KeyPositions, PROFILES
 from repro.serve.index_service import (ServeStats, demo_serving_design,
@@ -146,7 +147,8 @@ def test_no_drift_with_extra_resident_layers():
     path = os.path.join(tempfile.mkdtemp(), "res.air")
     idx.save(path)
     from repro.serve import IndexService
-    with IndexService(path, profile="azure_ssd", resident_layers=3) as svc:
+    with IndexService(path, profile="azure_ssd",
+                      spec=ServeSpec(resident_layers=3)) as svc:
         _serve_some(svc, D.keys)
         rep = detect_drift(svc, min_queries=256)
     # record-alignment overhead keeps the ratio slightly above 1, far

@@ -1,0 +1,240 @@
+"""Fused multi-layer descent: bit-identity of the numpy backend with the
+per-layer walk, device-backend step-exactness / band containment, ragged
+batches, the Pallas → jnp → numpy fallback chain, and packing guards —
+across layer-family mixes (gstep/gband/eband/rmi_leaf) and prefix depths."""
+import numpy as np
+import pytest
+
+from repro.api import ServeSpec
+from repro.core import IndexDesign, KeyPositions, write_index
+from repro.core.baselines import build_rmi_leaf
+from repro.core.builders import build_eband, build_gband, build_gstep
+from repro.core.descent import descend_band_layer, descend_step_layer
+from repro.kernels import fused_descent as fd
+from repro.core.nodes import outline
+from repro.serve.index_service import IndexService
+
+from conftest import make_keys
+
+# bottom-up family stacks, λ shrinking upward (demo_serving_design's
+# shape); every registered serving family appears in some prefix
+MIXES = {
+    "gstep3": ("gstep", "gstep", "gstep"),
+    "step-band-step": ("gstep", "gband", "gstep"),
+    "band-eband-step": ("gband", "eband", "gstep"),
+    "rmi-step-step": ("rmi_leaf", "gstep", "gstep"),
+}
+
+_BUILD = {
+    "gstep": lambda D, lam: build_gstep(D, 8, lam),
+    "gband": build_gband,
+    "eband": build_eband,
+    "rmi_leaf": lambda D, lam: build_rmi_leaf(
+        D, max(int(len(D.keys) // lam), 1)),
+}
+
+
+def _design(D, kinds):
+    layers, cur = [], D
+    for kind, lam in zip(kinds, (2**10, 2**9, 2**7)):
+        lay = _BUILD[kind](cur, lam)
+        layers.append(lay)
+        cur = outline(lay, cur)
+    return IndexDesign(layers=tuple(layers), data=D)
+
+
+@pytest.fixture(scope="module")
+def stacks(tmp_path_factory):
+    """{mix name: top-down parsed resident prefix (all 3 layers)} plus
+    in-domain queries — parsed through the real IndexService path.
+    Keys stay below 2**30 so the device backends are eligible (int32
+    packing guard, same bound as the previous use_device gating)."""
+    rng0 = np.random.default_rng(11)
+    keys = np.unique(rng0.integers(1, 2**30, 60_000).astype(np.uint64))
+    D = KeyPositions.fixed_record(keys, 16)
+    rng = np.random.default_rng(5)
+    qs = rng.choice(D.keys, 600)
+    root = tmp_path_factory.mktemp("fused")
+    out = {}
+    for name, kinds in MIXES.items():
+        path = str(root / f"{name}.air")
+        write_index(path, _design(D, kinds), page_bytes=1024)
+        with IndexService(path, profile=None,
+                          spec=ServeSpec(resident_layers=3)) as svc:
+            out[name] = svc._prefix
+    return out, qs
+
+
+def _per_layer_walk(prefix, q):
+    """The pre-fusion reference: one descend_* call per layer."""
+    lo = np.empty((len(prefix), len(q)), dtype=np.float64)
+    hi = np.empty_like(lo)
+    for r, lay in enumerate(prefix):
+        if lay["kind"] == "step":
+            l_, h_ = descend_step_layer(lay["keys"], lay["pos_lo"],
+                                        lay["pos_hi"], q)
+        else:
+            l_, h_ = descend_band_layer(lay["x1"], lay["x1"], lay["y1"],
+                                        lay["m"], lay["delta"], q)
+        lo[r], hi[r] = l_, h_
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# numpy backend == per-layer walk, bit for bit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(MIXES))
+@pytest.mark.parametrize("depth", [0, 1, 2, 3])
+def test_numpy_backend_bit_identical_to_per_layer(stacks, name, depth):
+    prefixes, qs = stacks
+    layers = prefixes[name][:depth]
+    for n in (1, 7, 256, 600):
+        q = qs[:n]
+        want_lo, want_hi = _per_layer_walk(layers, q)
+        lo, hi, used = fd.fused_descent_with_backend(layers, q,
+                                                     backend="numpy")
+        assert used == "numpy"
+        assert lo.shape == (depth, n) and hi.shape == (depth, n)
+        np.testing.assert_array_equal(lo, want_lo)
+        np.testing.assert_array_equal(hi, want_hi)
+
+
+def test_empty_prefix_all_backends(stacks):
+    _, qs = stacks
+    for backend in ("numpy", "jnp", "pallas"):
+        lo, hi, used = fd.fused_descent_with_backend([], qs, backend=backend)
+        assert used == "numpy"          # nothing to pack → numpy serves
+        assert lo.shape == (0, len(qs))
+
+
+# ---------------------------------------------------------------------------
+# device backends: step rows exact, band rows valid-but-wider, pallas≈jnp
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(MIXES))
+def test_device_backends_step_exact_band_contained(stacks, name):
+    prefixes, qs = stacks
+    for depth in (1, 2, 3):
+        layers = prefixes[name][:depth]
+        rlo, rhi = fd.fused_descent(layers, qs, backend="numpy")
+        plo, phi, pu = fd.fused_descent_with_backend(layers, qs,
+                                                     backend="pallas")
+        jlo, jhi, ju = fd.fused_descent_with_backend(layers, qs,
+                                                     backend="jnp")
+        assert pu == "pallas" and ju == "jnp"
+        packed = fd.pack_prefix(layers)
+        for r, lay in enumerate(layers):
+            if packed["kinds"][r] == 0:          # step: exact on both
+                np.testing.assert_array_equal(plo[r], rlo[r])
+                np.testing.assert_array_equal(phi[r], rhi[r])
+                np.testing.assert_array_equal(jlo[r], rlo[r])
+                np.testing.assert_array_equal(jhi[r], rhi[r])
+            else:                                # band: contained + bounded
+                assert np.all(plo[r] <= rlo[r]) and np.all(phi[r] >= rhi[r])
+                assert np.all(jlo[r] <= rlo[r]) and np.all(jhi[r] >= rhi[r])
+                bound = 2.0 * float(np.max(fd.band_f32_slack(
+                    lay["y1"], lay["m"], lay["x1"]))) + 4.0
+                assert np.max((phi[r] - plo[r]) - (rhi[r] - rlo[r])) <= bound
+        # pallas vs jnp differ only by f32 FMA contraction on band mids
+        assert np.max(np.abs(plo - jlo)) <= 4
+        assert np.max(np.abs(phi - jhi)) <= 4
+
+
+def test_ragged_batches_match_full_batch(stacks):
+    prefixes, qs = stacks
+    layers = prefixes["step-band-step"]
+    flo, fhi = fd.fused_descent(layers, qs, backend="pallas")
+    off = 0
+    for n in (1, 7, 255, 256, 81):
+        blo, bhi = fd.fused_descent(layers, qs[off:off + n],
+                                    backend="pallas")
+        np.testing.assert_array_equal(blo, flo[:, off:off + n])
+        np.testing.assert_array_equal(bhi, fhi[:, off:off + n])
+        off += n
+
+
+# ---------------------------------------------------------------------------
+# fallback chain (candidate_score idiom): pallas → jnp → numpy
+# ---------------------------------------------------------------------------
+def test_fallback_chain_degrades_to_jnp_then_numpy(stacks, monkeypatch):
+    prefixes, qs = stacks
+    layers = prefixes["gstep3"]
+    want_lo, want_hi = fd.fused_descent(layers, qs, backend="numpy")
+
+    import repro.kernels.fused_descent.kernel as kernel
+    import repro.kernels.fused_descent.ref as ref
+
+    def boom(*a, **k):
+        raise RuntimeError("backend down")
+
+    monkeypatch.setattr(kernel, "fused_descent_pallas", boom)
+    lo, hi, used = fd.fused_descent_with_backend(layers, qs,
+                                                 backend="pallas")
+    assert used == "jnp"
+    np.testing.assert_array_equal(lo, want_lo)   # all-step: jnp is exact
+
+    monkeypatch.setattr(ref, "fused_descent_jnp", boom)
+    lo, hi, used = fd.fused_descent_with_backend(layers, qs,
+                                                 backend="pallas")
+    assert used == "numpy"
+    np.testing.assert_array_equal(lo, want_lo)
+    np.testing.assert_array_equal(hi, want_hi)
+
+
+# ---------------------------------------------------------------------------
+# packing guards: ineligible prefixes must decline, not break
+# ---------------------------------------------------------------------------
+def test_pack_prefix_guards():
+    assert fd.pack_prefix([]) is None
+    over = {"kind": "step",
+            "keys": np.array([0, 2**31 - 1], dtype=np.uint64),
+            "pos_lo": np.array([0, 8], dtype=np.int64),
+            "pos_hi": np.array([8, 16], dtype=np.int64)}
+    assert fd.pack_prefix([over]) is None
+    n = fd.MAX_VMEM_ENTRIES + 1
+    wide = {"kind": "step", "keys": np.arange(n, dtype=np.uint64),
+            "pos_lo": np.arange(n, dtype=np.int64),
+            "pos_hi": np.arange(1, n + 1, dtype=np.int64)}
+    assert fd.pack_prefix([wide]) is None
+
+
+# ---------------------------------------------------------------------------
+# engine integration: fused windows feed the disk walk correctly
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("depth", [1, 2, 3])
+def test_engine_numpy_backend_parity_across_depths(stacks, tmp_path, depth):
+    from repro.core.serialize import lookup_serialized
+    keys = make_keys("fb", 50_000, seed=13)
+    D = KeyPositions.fixed_record(keys, 16)
+    path = str(tmp_path / "mix.air")
+    write_index(path, _design(D, MIXES["step-band-step"]), page_bytes=1024)
+    rng = np.random.default_rng(2)
+    qs = rng.choice(D.keys, 400)
+    want = lookup_serialized(path, None, qs)
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(resident_layers=depth)) as svc:
+        got = svc.lookup(qs)
+    assert np.array_equal(got, want)
+
+
+def test_engine_device_backend_valid_and_attributed(stacks, tmp_path):
+    rng0 = np.random.default_rng(13)
+    keys = np.unique(rng0.integers(1, 2**30, 50_000).astype(np.uint64))
+    D = KeyPositions.fixed_record(keys, 16)
+    path = str(tmp_path / "dev.air")
+    write_index(path, _design(D, MIXES["band-eband-step"]), page_bytes=1024)
+    rng = np.random.default_rng(3)
+    qs = rng.choice(D.keys, 300)
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(resident_layers=3)) as ref_svc:
+        want = ref_svc.lookup(qs)
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(resident_layers=3,
+                                     backend="pallas")) as svc:
+        assert svc.device_active
+        got = svc.lookup(qs)
+        assert svc.stats.device_batches == 1
+        assert svc.stats.descent_seconds > 0
+    # device band widening may only widen the final data window
+    assert np.all(got[:, 0] <= want[:, 0]) and np.all(got[:, 1] >= want[:, 1])
+    idx = np.searchsorted(D.keys, qs)
+    assert np.all((got[:, 0] <= D.lo[idx]) & (got[:, 1] >= D.hi[idx]))

@@ -6,6 +6,7 @@ import pytest
 from repro.core import (CachedProfile, IndexDesign, KeyPositions, PROFILES,
                         airtune, build_gstep, coalesce_ranges, lookup_batch,
                         make_builders, outline, page_span, write_index)
+from repro.api import ServeSpec
 from repro.core.serialize import lookup_serialized
 from repro.serve.index_service import (IndexService, TieredBlockCache,
                                        demo_serving_design)
@@ -37,7 +38,8 @@ def test_engine_matches_file_and_memory(served):
     want_file = lookup_serialized(path, None, qs)
     mem = lookup_batch(design, qs)
     with IndexService(path, profile="azure_ssd",
-                      cache_bytes=(64 << 10, 512 << 10)) as svc:
+                      spec=ServeSpec(cache_bytes=(64 << 10,
+                                                  512 << 10))) as svc:
         got = svc.lookup(qs)
         assert np.array_equal(got, want_file)
         assert np.array_equal(got[:, 0], mem.lo)
@@ -83,7 +85,8 @@ def test_engine_serves_unpaged_legacy_files(served):
 def test_warm_batch_reads_strictly_fewer_bytes(served):
     D, design, path, qs = served
     with IndexService(path, profile="azure_nfs",
-                      cache_bytes=(64 << 10, 512 << 10)) as svc:
+                      spec=ServeSpec(cache_bytes=(64 << 10,
+                                                  512 << 10))) as svc:
         svc.lookup(qs)
         cold = svc.stats.snapshot()
         assert cold["bytes_fetched"] > 0 and cold["preads"] > 0
@@ -98,7 +101,8 @@ def test_warm_batch_reads_strictly_fewer_bytes(served):
 
 def test_tiny_cache_still_correct(served):
     D, design, path, qs = served
-    with IndexService(path, profile=None, cache_bytes=(0,)) as svc:
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(cache_bytes=(0,))) as svc:
         got = svc.lookup(qs)
     assert np.array_equal(got, lookup_serialized(path, None, qs))
 
@@ -127,7 +131,8 @@ def test_coalesce_ranges_contained_and_empty():
 
 def test_batch_coalesces_to_few_preads(served):
     D, design, path, qs = served
-    with IndexService(path, profile=None, cache_bytes=(4 << 20,)) as svc:
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(cache_bytes=(4 << 20,))) as svc:
         svc.lookup(qs)
         # 600 queries x 2 disk layers, but contiguous pages merge into runs
         assert svc.stats.preads < svc.stats.ranges_requested / 10
@@ -231,8 +236,9 @@ def test_explicit_page_bytes_overrides_paged_meta(served):
     paged layout (it used to be silently ignored whenever the meta
     recorded one)."""
     D, design, path, qs = served
-    with IndexService(path, profile=None, page_bytes=512,
-                      cache_bytes=(1 << 20,)) as svc:
+    with IndexService(path, profile=None,
+                      spec=ServeSpec(page_bytes=512,
+                                     cache_bytes=(1 << 20,))) as svc:
         assert svc.meta.page_bytes == 1024          # file IS paged...
         assert svc.page_bytes == 512                # ...but the caller wins
         assert svc.cache.page_bytes == 512          # cache pages accordingly
@@ -297,7 +303,7 @@ def test_cached_profile_between_tiers_and_monotone():
 def test_observed_cached_profile_retunes(served):
     D, design, path, qs = served
     with IndexService(path, profile="azure_nfs",
-                      cache_bytes=(1 << 20,)) as svc:
+                      spec=ServeSpec(cache_bytes=(1 << 20,))) as svc:
         svc.lookup(qs)
         svc.lookup(qs)
         eff = svc.cached_profile()
@@ -339,8 +345,87 @@ def test_device_resident_descend_matches_numpy(tmp_path):
     write_index(path, design, page_bytes=1024)
     qs = rng.choice(D.keys, 256)
     want = lookup_serialized(path, None, qs)
-    with IndexService(path, use_device=True, resident_layers=2) as svc:
+    with IndexService(path, spec=ServeSpec(backend="pallas",
+                                           resident_layers=2)) as svc:
         assert svc.device_active
         got = svc.lookup(qs)
         assert svc.stats.device_batches > 0
     assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# two-stage pipeline: prefetch must never change windows, only timing
+# ---------------------------------------------------------------------------
+def test_pipelined_batches_identical_to_sequential(served):
+    D, design, path, qs = served
+    rng = np.random.default_rng(7)
+    batches = [rng.choice(D.keys, n) for n in (300, 1, 257, 64, 300, 128)]
+    # small tiers force evictions between batches — the prefetch stage's
+    # peek/drop-out paths actually execute under this pressure
+    base = ServeSpec(cache_bytes=(16 << 10, 64 << 10))
+    with IndexService(path, profile="azure_ssd", spec=base) as svc:
+        want = [svc.lookup(b) for b in batches]
+    with IndexService(path, profile="azure_ssd",
+                      spec=base.replace(pipeline_depth=2,
+                                        prefetch_layers=2)) as svc:
+        got = svc.lookup_batches(batches)
+        assert svc.stats.pipelined_batches == len(batches)
+        roof = svc.stats.roofline()
+        assert roof["io_seconds"] > 0 and roof["io_fraction"] is not None
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        assert np.array_equal(w, g)
+
+
+def test_prefetch_stage_warms_cache_and_tags_overlapped(served):
+    D, design, path, qs = served
+    with IndexService(path, profile="azure_ssd",
+                      spec=ServeSpec(cache_bytes=(256 << 10,),
+                                     pipeline_depth=1,
+                                     prefetch_layers=2)) as svc:
+        staged = svc._prefetch_batch(qs[:200])    # cold cache: must pread
+        assert staged > 0
+        assert svc.stats.overlapped_preads > 0
+        assert svc.stats.overlapped_pread_seconds > 0
+        assert svc.stats.prefetch_seconds > 0
+        assert any(len(r) > 2 and r[2] for r in svc.stats.read_samples)
+        # the prefetch probe must not have skewed hit/miss accounting
+        assert svc.stats.pages_hit == 0 and svc.cache.misses == 0
+        before = svc.stats.preads
+        got = svc.lookup(qs[:200])                # serves mostly from cache
+        assert svc.stats.pages_hit > 0
+        # first-window pages were staged; only gallop extensions may read
+        assert svc.stats.preads - before <= before
+    assert np.array_equal(got, lookup_serialized(path, None, qs[:200]))
+
+
+def test_lookup_batches_depth_zero_is_plain_sequential(served):
+    D, design, path, qs = served
+    batches = [qs[:100], qs[100:350], qs[350:]]
+    spec = ServeSpec(cache_bytes=(64 << 10,))
+    with IndexService(path, profile=None, spec=spec) as svc:
+        want = [svc.lookup(b) for b in batches]
+    with IndexService(path, profile=None, spec=spec) as svc:
+        got = svc.lookup_batches(batches)
+        assert svc.stats.pipelined_batches == 0
+        assert svc._executor is None          # stage 1 never spun up
+    for w, g in zip(want, got):
+        assert np.array_equal(w, g)
+
+
+def test_measured_profile_excludes_overlapped_samples():
+    from repro.serve.index_service import ServeStats, measured_backing_profile
+    s = ServeStats()
+    for i in range(12):     # blocking samples: a plausible ~1ms/4KiB tier
+        s.record_read(4096 * (1 + i % 3), 1e-3 * (1 + i % 3))
+    for _ in range(30):     # overlapped: latency hidden by the pipeline
+        s.record_read(4096, 1e-6, overlapped=True)
+    prof = measured_backing_profile(s)
+    assert prof is not None
+    # the queue-hidden samples must not drag the fitted tier toward zero
+    assert float(prof(4096)) >= 0.5e-3
+    # but when ONLY overlapped samples exist, fall back rather than refuse
+    s2 = ServeStats()
+    for i in range(12):
+        s2.record_read(4096 * (1 + i % 3), 1e-3, overlapped=True)
+    assert measured_backing_profile(s2) is not None

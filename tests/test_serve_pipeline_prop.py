@@ -1,0 +1,50 @@
+"""Property test: the two-stage pipeline is invisible in results — for any
+batch schedule, pipeline depth, prefetch depth, and cache size, pipelined
+``lookup_batches`` returns windows identical to unpipelined serving."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional test dep (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.api import ServeSpec                           # noqa: E402
+from repro.core import KeyPositions, write_index          # noqa: E402
+from repro.serve.index_service import (IndexService,      # noqa: E402
+                                       demo_serving_design)
+
+from conftest import make_keys                            # noqa: E402
+
+_KEYS = make_keys("books", 80_000, seed=21)
+_D = KeyPositions.fixed_record(_KEYS, 16)
+
+
+@pytest.fixture(scope="module")
+def served_path(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("pipe") / "index.air")
+    write_index(path, demo_serving_design(_D), page_bytes=1024)
+    return path
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       n_batches=st.integers(2, 6),
+       depth=st.integers(1, 3),
+       prefetch=st.integers(1, 2),
+       cache_kib=st.sampled_from([2, 8, 32, 128]))
+def test_pipelined_identical_under_cache_pressure(served_path, seed,
+                                                  n_batches, depth,
+                                                  prefetch, cache_kib):
+    rng = np.random.default_rng(seed)
+    batches = [rng.choice(_KEYS, int(rng.integers(1, 400)))
+               for _ in range(n_batches)]
+    base = ServeSpec(cache_bytes=(cache_kib << 10,))
+    with IndexService(served_path, profile=None, spec=base) as svc:
+        want = [svc.lookup(b) for b in batches]
+    with IndexService(served_path, profile=None,
+                      spec=base.replace(pipeline_depth=depth,
+                                        prefetch_layers=prefetch)) as svc:
+        got = svc.lookup_batches(batches)
+        assert svc.stats.pipelined_batches == n_batches
+    for w, g in zip(want, got):
+        assert np.array_equal(w, g)
