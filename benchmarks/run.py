@@ -242,6 +242,7 @@ def bench_lookup_throughput():
 SERVE_JSON_PATH = None     # set by main() via --serve-json
 TUNE_JSON_PATH = None      # set by main() via --tune-json
 BASELINE_JSON_PATH = None  # set by main() via --baseline-json
+FLEET_JSON_PATH = None     # set by main() via --fleet-json
 
 
 def bench_serve():
@@ -255,6 +256,23 @@ def bench_serve():
         with open(SERVE_JSON_PATH, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {SERVE_JSON_PATH}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet vs monolith (repro.fleet) — BENCH_fleet.json
+# ---------------------------------------------------------------------------
+def bench_fleet():
+    try:
+        from benchmarks import serve_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import serve_bench
+    results = serve_bench.run_fleet_bench()
+    serve_bench.emit_fleet(results)
+    if FLEET_JSON_PATH:
+        import json
+        with open(FLEET_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {FLEET_JSON_PATH}", flush=True)
 
 
 # ---------------------------------------------------------------------------
@@ -340,6 +358,7 @@ BENCHES = [
     bench_sec22_heterogeneous,
     bench_lookup_throughput,
     bench_serve,
+    bench_fleet,
     bench_tune,
     bench_baseline,
     bench_roofline,
@@ -365,13 +384,16 @@ def _take_json_flag(argv: list, flag: str, default_path: str):
 
 
 def main() -> None:
-    global SERVE_JSON_PATH, TUNE_JSON_PATH, BASELINE_JSON_PATH
+    global SERVE_JSON_PATH, TUNE_JSON_PATH, BASELINE_JSON_PATH, \
+        FLEET_JSON_PATH
     argv = list(sys.argv[1:])
     # emit BENCH_*.json (perf trajectories)
     SERVE_JSON_PATH = _take_json_flag(argv, "--serve-json", "BENCH_serve.json")
     TUNE_JSON_PATH = _take_json_flag(argv, "--tune-json", "BENCH_tune.json")
     BASELINE_JSON_PATH = _take_json_flag(argv, "--baseline-json",
                                          "BENCH_baseline.json")
+    FLEET_JSON_PATH = _take_json_flag(argv, "--fleet-json",
+                                      "BENCH_fleet.json")
     only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:

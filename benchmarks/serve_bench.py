@@ -48,6 +48,9 @@ from repro.api import Index, ServeSpec, TuneSpec, detect_drift
 from repro.core import KeyPositions, PROFILES, expected_latency
 from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
 from repro.core.serialize import lookup_serialized
+from repro.core.storage import CachedProfile
+from repro.fleet import Fleet, FleetSpec, demand_from_design
+from repro.serve import IndexService
 from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
 
@@ -255,61 +258,292 @@ def bench_drift(D: KeyPositions, workdir: str) -> dict:
     }
 
 
+#: serve-path tuning ladder — every *tunable* family is tuned once per
+#: rung and keeps its realized-best candidate.  The raw tier alone
+#: mis-prices the serve path (index-layer reads hit the block cache, the
+#: final data read never does), so families also tune for the cached
+#: deployment at a high and a fully-warmed hit rate; selection is by
+#: *observed* per-query cost through the engine, which is fair to every
+#: family because they all get the same ladder and the same stream.
+SERVE_LADDER = ("raw", 0.9, 1.0)
+
+
+def _ladder_profile(tier: str, rung):
+    if rung == "raw":
+        return PROFILES[tier]
+    return CachedProfile(backing=PROFILES[tier],
+                         cache=PROFILES["host_dram"], hit_rate=float(rung))
+
+
+def _serve_design(design, tier, stream, workdir, tag) -> dict:
+    """One candidate through the engine: same cache spec, same stream."""
+    path = os.path.join(workdir, f"baseline_{tag}.air")
+    Index.from_design(design, spec=TuneSpec(page_bytes=PAGE),
+                      profile=tier).save(path)
+    svc = None
+    try:
+        svc = IndexService(path, profile=tier,
+                           spec=ServeSpec(cache_bytes=(64 << 10, 512 << 10)))
+        t0 = time.perf_counter()
+        for qs in stream:
+            svc.lookup(qs)
+        wall = time.perf_counter() - t0
+        s = svc.stats
+        return {
+            "layers": len(design.layers),
+            "eq6_cost_us": expected_latency(design, PROFILES[tier]) * 1e6,
+            "observed_us": s.query_modeled_seconds * 1e6,
+            "walk_us": s.walk_query_seconds * 1e6,
+            "hit_rate": s.hit_rate,
+            "preads": s.preads,
+            "bytes_fetched": s.bytes_fetched,
+            "qps": len(stream) * len(stream[0]) / max(wall, 1e-9),
+        }
+    finally:
+        if svc is not None:
+            svc.close()
+        os.unlink(path)
+
+
 def bench_baseline_serve(D: KeyPositions, tier: str, workdir: str, *,
                          n_batches: int = 8, batch: int = 512) -> dict:
-    """§7.2 on the real serve path: the AirTune design and the fixed-shape
-    baseline designs served through the SAME engine + cache against the
-    same skewed stream; the dominance margin is per-query observed E[T]."""
-    profile = PROFILES[tier]
-    designs = {
-        "airtune": Index.tune(D, tier, DRIFT_SPEC).build().result.design,
-        "btree": build_fixed_btree(D),
-        "rmi": tune_rmi(D, profile).design,
-        "pgm": tune_pgm(D, profile).design,
+    """§7.2 on the real serve path: every family's candidates served
+    through the SAME engine + cache against the same skewed stream, the
+    dominance margin compared between per-family *realized-best*
+    candidates (per-query observed E[T]).
+
+    Each tunable family (airtune, rmi, pgm) tunes once per
+    ``SERVE_LADDER`` rung — the raw tier plus cached deployments at
+    h=0.9 / h=1.0 — and is judged by its best observed cost; btree is
+    fixed-shape.  This closes the raw-tier mispricing gap (a raw-tuned
+    design pays coarse data reads the cached path never amortizes away)
+    without hand-picking a profile for AirTune only."""
+    tuners = {
+        "airtune": lambda prof: Index.tune(D, prof, DRIFT_SPEC)
+                                     .build().result.design,
+        "rmi": lambda prof: tune_rmi(D, prof).design,
+        "pgm": lambda prof: tune_pgm(D, prof).design,
     }
     rng = np.random.default_rng(23)
     stream = [_skewed_queries(D.keys, batch, rng) for _ in range(n_batches)]
-    rows = {}
-    for name, design in designs.items():
-        path = os.path.join(workdir, f"baseline_{name}.air")
-        Index.from_design(design, spec=TuneSpec(page_bytes=PAGE),
-                          profile=tier).save(path)
-        svc = None
-        try:
-            from repro.serve import IndexService
-            svc = IndexService(path, profile=tier,
-                               spec=ServeSpec(
-                                   cache_bytes=(64 << 10, 512 << 10)))
-            t0 = time.perf_counter()
-            for qs in stream:
-                svc.lookup(qs)
-            wall = time.perf_counter() - t0
-            s = svc.stats
-            rows[name] = {
-                "layers": len(design.layers),
-                "eq6_cost_us": expected_latency(design, profile) * 1e6,
-                "observed_us": s.query_modeled_seconds * 1e6,
-                "walk_us": s.walk_query_seconds * 1e6,
-                "hit_rate": s.hit_rate,
-                "preads": s.preads,
-                "bytes_fetched": s.bytes_fetched,
-                "qps": n_batches * batch / max(wall, 1e-9),
-            }
-        finally:
-            if svc is not None:
-                svc.close()
-            os.unlink(path)
+    rows, ladder = {}, {}
+    for name, tuner in tuners.items():
+        best = None
+        ladder[name] = {}
+        for rung in SERVE_LADDER:
+            design = tuner(_ladder_profile(tier, rung))
+            r = _serve_design(design, tier, stream, workdir,
+                              f"{name}_{rung}")
+            r["rung"] = str(rung)
+            ladder[name][str(rung)] = r["observed_us"]
+            if best is None or r["observed_us"] < best["observed_us"]:
+                best = r
+        rows[name] = best
+    r = _serve_design(build_fixed_btree(D), tier, stream, workdir, "btree")
+    r["rung"] = "fixed"
+    ladder["btree"] = {"fixed": r["observed_us"]}
+    rows["btree"] = r
     air = rows["airtune"]["observed_us"]
-    for name, r in rows.items():
+    for name, row in rows.items():
         if name != "airtune":
-            r["margin_vs_airtune"] = r["observed_us"] / max(air, 1e-12)
-    margins = [r["margin_vs_airtune"] for n, r in rows.items()
+            row["margin_vs_airtune"] = row["observed_us"] / max(air, 1e-12)
+    margins = [row["margin_vs_airtune"] for n, row in rows.items()
                if n != "airtune"]
-    return {"tier": tier, "designs": rows,
+    return {"tier": tier, "designs": rows, "ladder": ladder,
             "min_margin": min(margins),
             # §7.2 on the serve path: AirTune ≤ every baseline (small
             # slack: cache/residency interactions are not in the model)
             "dominates": bool(min(margins) >= 0.999)}
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet vs one monolithic index under skewed hot/cold traffic
+# ---------------------------------------------------------------------------
+# Large records put the monolith's Eq. 6 optimum at a 2-layer design with
+# a multi-MB disk-resident bottom layer — the regime where a cache byte
+# budget is a real resource.  The budget is half the monolith's raw
+# working set, so the monolith is capacity-constrained by construction;
+# the fleet must win it back through per-shard tuning plus marginal-gain
+# budgeting (Fleet.retune_budgeted), not through extra memory.
+FLEET_N_KEYS = 400_000
+FLEET_RECORD = 1024
+FLEET_SHARDS = 4
+FLEET_WEIGHTS = (0.90, 0.06, 0.03, 0.01)   # hot/cold traffic per shard
+FLEET_TIER = "azure_ssd"
+FLEET_BATCHES, FLEET_BATCH = 24, 512
+FLEET_TUNE = TuneSpec(lam_low=2**8, lam_high=2**17, lam_base=2.0, k=4,
+                      max_layers=8, page_bytes=PAGE)
+
+
+def _fleet_stream(keys: np.ndarray, shard_map, rng) -> list:
+    """Skewed-across, uniform-within: batch keys drawn per shard with
+    FLEET_WEIGHTS, uniform inside each shard's key range."""
+    sl = shard_map.slice_bounds(keys)
+    batches = []
+    for _ in range(FLEET_BATCHES):
+        sid = rng.choice(len(FLEET_WEIGHTS), size=FLEET_BATCH,
+                         p=FLEET_WEIGHTS)
+        b = np.empty(FLEET_BATCH, dtype=np.uint64)
+        for s in range(len(FLEET_WEIGHTS)):
+            m = sid == s
+            if m.any():
+                b[m] = keys[rng.integers(sl[s][0], sl[s][1],
+                                         size=int(m.sum()))]
+        batches.append(b)
+    return batches
+
+
+def _fleet_identity(fleet, batches, tier: str) -> dict:
+    """The acceptance gate: fleet scatter-gather must be bit-identical to
+    sequential per-shard IndexService lookups (+ base), and
+    ``lookup_batches`` identical to per-batch ``lookup``."""
+    flat = np.concatenate(batches)
+    want = np.empty((len(flat), 2), dtype=np.int64)
+    for sid, pos in fleet.shard_map.sub_batches(flat):
+        with IndexService(fleet.shards[sid].path, profile=tier) as ref:
+            want[pos] = ref.lookup(flat[pos]) + fleet.bases[sid]
+    with fleet.serve(persist_stats=False) as svc:
+        got = svc.lookup(flat)
+        got_b = np.concatenate(svc.lookup_batches(batches))
+    return {
+        "scatter_gather_identical": bool(np.array_equal(got, want)),
+        "batches_identical": bool(np.array_equal(got_b, want)),
+    }
+
+
+def _serve_mono(idx: Index, budget: int, batches, workdir, tag) -> dict:
+    path = os.path.join(workdir, f"mono_{tag}.air")
+    idx.save(path)
+    with IndexService(path, profile=FLEET_TIER,
+                      spec=ServeSpec(cache_bytes=(budget,))) as svc:
+        svc.lookup_batches(batches)
+        s = svc.stats
+        return {"candidate": tag, "design": idx.describe(),
+                "observed_us": s.query_modeled_seconds * 1e6,
+                "hit_rate": s.hit_rate, "preads": s.preads}
+
+
+def _serve_fleet(fleet, budget: int, batches) -> dict:
+    with fleet.serve(total_cache_bytes=budget) as svc:
+        svc.lookup_batches(batches)
+        return svc.stats_summary()
+
+
+def run_fleet_bench(n_keys: int = FLEET_N_KEYS,
+                    record: int = FLEET_RECORD) -> dict:
+    """Per-shard-tuned fleet vs one monolithic index, same storage tier,
+    same total cache budget, same skewed stream.
+
+    Phase 1 serves both raw-tier-tuned; phase 2 gives the fleet
+    ``Fleet.retune_budgeted`` (steady-state per-shard retune + water-
+    filled budget) and gives the monolith the same intelligence as three
+    candidates — raw-tuned, fully-cached-tuned, and planned-hit-rate-
+    tuned — keeping its realized best.  Gates: scatter-gather identity
+    (fatal) and phase-2 fleet strictly below the monolith's best (fatal).
+    """
+    workdir = tempfile.mkdtemp(prefix="fleet_bench_")
+    keys = sosd_like("gmm", n_keys)
+    D = KeyPositions.fixed_record(keys, record)
+    backing = PROFILES[FLEET_TIER]
+    dram = PROFILES["host_dram"]
+    fspec = FleetSpec(n_shards=FLEET_SHARDS, tune=FLEET_TUNE,
+                      serve=ServeSpec(persist_stats=True))
+
+    # monolith candidates: raw + the same ladder the fleet gets
+    t0 = time.perf_counter()
+    mono_raw = Index.tune(D, FLEET_TIER, FLEET_TUNE).build()
+    mono_tune_s = time.perf_counter() - t0
+    ws_raw = demand_from_design(0, mono_raw.result.design,
+                                backing, cache=dram).working_set
+    mono_h1 = Index.tune(D, CachedProfile(backing=backing, cache=dram,
+                                          hit_rate=1.0), FLEET_TUNE).build()
+    ws_h1 = demand_from_design(0, mono_h1.result.design,
+                               backing, cache=dram).working_set
+    # budget = 1.25x one shard's slice of the monolith's fully-cached
+    # working set: scarce against the monolith's fine design (~0.31x) and
+    # against the fleet's total steady-state demand, so water-filling has
+    # to choose — roughly the hot shards' working sets and nothing else
+    budget = max(PAGE, (int(1.25 * ws_h1 / FLEET_SHARDS) + PAGE - 1)
+                 // PAGE * PAGE)
+    monos = [(mono_raw, "raw"), (mono_h1, "h1.0")]
+    hp = min(1.0, budget / ws_h1) if ws_h1 > 0 else 0.0
+    if 0.0 < hp < 1.0:
+        monos.append((Index.tune(D, CachedProfile(backing=backing,
+                                                  cache=dram, hit_rate=hp),
+                                 FLEET_TUNE).build(), f"h{hp:.2f}"))
+
+    # fleet phase 1: raw per-shard tuning
+    t0 = time.perf_counter()
+    fleet1 = Fleet.tune(D, FLEET_TIER, fspec).build()
+    fleet_tune_s = time.perf_counter() - t0
+    dir1 = os.path.join(workdir, "fleet_raw")
+    fleet1.save(dir1)
+
+    rng = np.random.default_rng(42)
+    batches = _fleet_stream(keys, fleet1.shard_map, rng)
+
+    identity = _fleet_identity(fleet1, batches, FLEET_TIER)
+    phase1 = _serve_fleet(fleet1, budget, batches)   # persists shard stats
+
+    mono_rows = [_serve_mono(idx, budget, batches, workdir, tag)
+                 for idx, tag in monos]
+
+    # fleet phase 2: observed-traffic retune + water-filled budget
+    t0 = time.perf_counter()
+    fleet2, plan = Fleet.open(dir1, data=D).retune_budgeted(
+        data=D, total_cache_bytes=budget)
+    fleet2.build()
+    retune_s = time.perf_counter() - t0
+    dir2 = os.path.join(workdir, "fleet_budgeted")
+    fleet2.save(dir2)
+    phase2 = _serve_fleet(Fleet.open(dir2), budget, batches)
+
+    mono_best = min(mono_rows, key=lambda r: r["observed_us"])
+    us_fleet = phase2["query_modeled_us"]
+    return {
+        "n_keys": int(D.n), "record": record, "tier": FLEET_TIER,
+        "n_shards": FLEET_SHARDS, "weights": list(FLEET_WEIGHTS),
+        "cache_budget_bytes": budget,
+        "mono_working_set_raw": int(ws_raw),
+        "identity": identity,
+        "mono": mono_rows,
+        "mono_best": mono_best,
+        "fleet_phase1": phase1,
+        "fleet_phase2": phase2,
+        "plan": plan.to_dict(),
+        "shard_designs": [idx.describe() for idx in fleet2.shards],
+        "wall": {"mono_tune_s": mono_tune_s, "fleet_tune_s": fleet_tune_s,
+                 "fleet_retune_s": retune_s},
+        "fleet_vs_mono": us_fleet / max(mono_best["observed_us"], 1e-12),
+        "identical": bool(identity["scatter_gather_identical"]
+                          and identity["batches_identical"]),
+        "fleet_beats_monolith": bool(
+            us_fleet < 0.999 * mono_best["observed_us"]),
+    }
+
+
+def emit_fleet(results: dict) -> None:
+    emit("fleet_identity", 0.0,
+         f"scatter_gather={results['identity']['scatter_gather_identical']} "
+         f"batches={results['identity']['batches_identical']}")
+    emit("fleet_phase1_raw", results["fleet_phase1"]["query_modeled_us"],
+         f"hit_rate={results['fleet_phase1']['hit_rate']:.3f} "
+         f"preads={results['fleet_phase1']['preads']}")
+    for r in results["mono"]:
+        emit(f"fleet_mono_{r['candidate']}", r["observed_us"],
+             f"hit_rate={r['hit_rate']:.3f} preads={r['preads']}")
+    emit("fleet_phase2_budgeted",
+         results["fleet_phase2"]["query_modeled_us"],
+         f"hit_rate={results['fleet_phase2']['hit_rate']:.3f} "
+         f"preads={results['fleet_phase2']['preads']} "
+         f"budget={results['cache_budget_bytes']}")
+    shares = (results["fleet_phase2"].get("plan") or {}).get("shares", {})
+    emit("fleet_cache_plan", 0.0,
+         f"shares={shares} budget={results['cache_budget_bytes']}")
+    emit("fleet_vs_monolith", 0.0,
+         f"ratio={results['fleet_vs_mono']:.4f} "
+         f"mono_best={results['mono_best']['candidate']} "
+         f"beats={results['fleet_beats_monolith']}")
 
 
 def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
@@ -413,8 +647,41 @@ def main() -> None:
                     help="also dump results as JSON (e.g. BENCH_serve.json)")
     ap.add_argument("--n-keys", type=int, default=N_KEYS)
     ap.add_argument("--n-queries", type=int, default=4096)
+    ap.add_argument("--fleet-json", metavar="PATH", default=None,
+                    help="run the sharded-fleet scenario and dump its "
+                         "results (e.g. BENCH_fleet.json)")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="run only the sharded-fleet scenario")
+    ap.add_argument("--fleet-n-keys", type=int, default=FLEET_N_KEYS)
     args = ap.parse_args()
     print("name,us_per_call,derived")
+
+    fleet_results = None
+    if args.fleet_json or args.fleet_only:
+        fleet_results = run_fleet_bench(args.fleet_n_keys)
+        emit_fleet(fleet_results)
+        if args.fleet_json:
+            with open(args.fleet_json, "w") as f:
+                json.dump(fleet_results, f, indent=2)
+            print(f"# wrote {args.fleet_json}", flush=True)
+        if args.fleet_only:
+            fatal = []
+            if not fleet_results["identical"]:
+                fatal.append("fleet scatter-gather diverged from "
+                             "sequential per-shard lookups")
+            if not fleet_results["fleet_beats_monolith"]:
+                fatal.append(
+                    f"per-shard-tuned fleet did not beat the monolith: "
+                    f"fleet={fleet_results['fleet_phase2']['query_modeled_us']:.1f}us vs "
+                    f"mono={fleet_results['mono_best']['observed_us']:.1f}us "
+                    f"(ratio={fleet_results['fleet_vs_mono']:.4f}, "
+                    f"need < 0.999)")
+            if fatal:
+                for msg in fatal:
+                    print(f"::error::{msg}")
+                sys.exit(1)
+            return
+
     results = run_serve_bench(args.n_keys, args.n_queries)
     if args.json:
         with open(args.json, "w") as f:
@@ -436,14 +703,14 @@ def main() -> None:
         print("::warning::pipelined serving slower than unpipelined "
               f"(qps_on={results['pipeline']['qps_on']:.0f} "
               f"qps_off={results['pipeline']['qps_off']:.0f})")
-    if not results["baseline_serve_dominates_all_tiers"]:
-        # trended, not enforced: cache/residency interactions are outside
-        # the Eq. 6 model the dominance claim is proven under
-        print("::warning::baseline design beat AirTune on the serve path "
-              f"(min margins: "
-              f"{[bs['min_margin'] for bs in results['baseline_serve']]})")
-
     fatal = []
+    if not results["baseline_serve_dominates_all_tiers"]:
+        # fatal since the ladder closed the raw-tier mispricing gap:
+        # every family tunes over the same cached-deployment ladder and
+        # is judged by realized cost, so a loss here is a real regression
+        fatal.append("baseline design beat AirTune on the serve path "
+                     f"(min margins: "
+                     f"{[bs['min_margin'] for bs in results['baseline_serve']]})")
     if not results["acceptance_warm_beats_cold_all_tiers"]:
         fatal.append("warm cache pass did not beat the cold pass")
     if not results["drift"]["drift_detected"]:
@@ -465,6 +732,14 @@ def main() -> None:
             f"{results['pipeline']['roofline_on']['io_fraction']:.3f} "
             f"(need >= 0.8, bound="
             f"{results['pipeline']['roofline_on']['bound']})")
+    if fleet_results is not None:
+        if not fleet_results["identical"]:
+            fatal.append("fleet scatter-gather diverged from sequential "
+                         "per-shard lookups")
+        if not fleet_results["fleet_beats_monolith"]:
+            fatal.append(
+                f"per-shard-tuned fleet did not beat the monolith "
+                f"(ratio={fleet_results['fleet_vs_mono']:.4f}, need < 0.999)")
     if fatal:
         for msg in fatal:
             print(f"::error::{msg}")

@@ -35,8 +35,13 @@ from .drift import (DriftReport, detect_drift, detect_drift_from_file,
 from .index import Index, resolve_profile
 from .spec import ServeSpec, TuneSpec
 
+# fleet sits above the facade (its modules import repro.api.index/spec
+# directly), so this re-export must come after the locals above
+from repro.fleet import Fleet, FleetService, FleetSpec, ShardMap  # noqa: E402
+
 __all__ = [
     "Index", "TuneSpec", "ServeSpec",
+    "Fleet", "FleetSpec", "FleetService", "ShardMap",
     "SearchStrategy", "TuneResult", "TuneStats",
     "DriftReport", "detect_drift", "detect_drift_from_file",
     "drift_from_stats",

@@ -177,16 +177,42 @@ def detect_drift_from_file(index_path: str, *,
     the observed_profile must describe the deployment tier, not the
     tuned-for tier the report may be flagging as stale — falling back to
     the meta's tuned-for profile for snapshots without a profile name.
-    Returns None when no snapshot has been persisted yet."""
+    Returns None when no snapshot has been persisted yet.
+
+    Robust to damage: a corrupt or truncated stats file never raises —
+    unreadable snapshots are skipped newest-first (``load_stats_history``
+    warns), and a stats file that exists but yields nothing usable
+    produces a low-confidence ``action="observe"`` report (empty stats →
+    confidence 0) rather than an exception, so a fleet startup reading N
+    of these degrades per shard instead of failing."""
     import os
+    import warnings
 
     from repro.core.serialize import read_meta
-    from repro.serve.index_service import load_stats_history
+    from repro.serve.index_service import load_stats_history, stats_path
 
     history = load_stats_history(index_path)
-    if not history:
+    if not history and not os.path.exists(stats_path(index_path)):
         return None
-    stats = ServeStats.from_snapshot(history[-1]["stats"])
+    stats = used_snap = None
+    for snap in reversed(history):
+        try:
+            stats = ServeStats.from_snapshot(snap["stats"])
+            used_snap = snap
+            break
+        except (KeyError, TypeError, ValueError, IndexError):
+            warnings.warn(
+                f"stats file {stats_path(index_path)!r}: skipping a "
+                f"snapshot that does not decode as ServeStats",
+                RuntimeWarning, stacklevel=2)
+    if stats is None:
+        # file present but nothing loadable: report "keep observing" at
+        # zero confidence instead of raising
+        warnings.warn(
+            f"stats file {stats_path(index_path)!r} holds no usable "
+            f"snapshot; returning a low-confidence observe report",
+            RuntimeWarning, stacklevel=2)
+        stats = ServeStats()
     fd = os.open(index_path, os.O_RDONLY)
     try:
         meta = read_meta(fd)
@@ -199,8 +225,8 @@ def detect_drift_from_file(index_path: str, *,
         cache = PROFILES["host_dram"]
     if isinstance(backing, str):
         backing = PROFILES[backing]
-    if backing is None:
-        served = history[-1].get("profile")
+    if backing is None and used_snap is not None:
+        served = used_snap.get("profile")
         if served in PROFILES:
             backing = PROFILES[served]
     if backing is None:

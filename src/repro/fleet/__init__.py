@@ -1,0 +1,30 @@
+"""``repro.fleet`` — sharded multi-tenant serving (ROADMAP: past one
+``IndexService`` per process).
+
+A fleet is N key-range shards, each its own on-disk index file with its
+own Alg. 2 search, served through scatter-gather with one *global*
+cache-byte budget allocated across shards by marginal E[T(Δ)] gain::
+
+    from repro.fleet import Fleet, FleetSpec
+
+    fleet = Fleet.tune(D, "azure_ssd",
+                       FleetSpec(n_shards=4, cache_budget_bytes=2 << 20))
+    fleet.save("fleet_dir/")
+    with Fleet.open("fleet_dir/").serve() as svc:
+        ranges = svc.lookup(keys)          # global byte ranges
+
+See :mod:`repro.fleet.fleet` (facade), :mod:`repro.fleet.spec`
+(ShardMap/FleetSpec), :mod:`repro.fleet.service` (scatter-gather), and
+:mod:`repro.fleet.budget` (water-filling allocator).
+"""
+from .budget import (CachePlan, ShardDemand, allocate_cache_budget,
+                     demand_from_design, demand_from_meta, split_cache_tiers)
+from .fleet import Fleet
+from .service import FleetService
+from .spec import FleetSpec, ShardMap
+
+__all__ = [
+    "Fleet", "FleetSpec", "FleetService", "ShardMap",
+    "CachePlan", "ShardDemand", "allocate_cache_budget",
+    "demand_from_design", "demand_from_meta", "split_cache_tiers",
+]

@@ -1,0 +1,160 @@
+"""Scatter-gather serving across a fleet of per-shard index services.
+
+A :class:`FleetService` is to a fleet what
+:class:`repro.serve.IndexService` is to one file: batched lookups in,
+``(q, 2)`` byte ranges out.  Each batch is routed by the fleet's
+:class:`~repro.fleet.ShardMap` (one vectorized searchsorted), the
+per-shard sub-batches run through each shard's own engine — block cache,
+coalesced preads, fused resident descent, and (via
+:meth:`lookup_batches`) the two-stage prefetch pipeline, all per shard —
+and the results gather back in input order.  Shard files store positions
+rebased to 0 (see :mod:`repro.fleet.fleet`); the gather side adds each
+shard's base back, so callers see one global byte space.
+
+The scatter-gather is *bit-identical* to looking each key up in its
+shard's service directly: routing only decides which engine serves a key,
+never how.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.index_service import IndexService
+
+from .spec import ShardMap
+
+
+class FleetService:
+    """Serve batched lookups across per-shard :class:`IndexService`\\ s.
+
+    Parameters
+    ----------
+    shard_map: the fleet's key-range partition (routes queries).
+    paths:     per-shard index-file paths, in shard order.
+    bases:     per-shard global byte offsets (added to results — shard
+               files are written rebased to 0).
+    profile:   deployment tier, shared by every shard (``modeled_seconds``
+               accounting; same semantics as IndexService).
+    specs:     per-shard :class:`repro.api.ServeSpec` list — usually the
+               fleet spec's serve template with each shard's
+               ``cache_bytes`` overridden by the budget allocator.
+    plan:      the :class:`repro.fleet.CachePlan` that produced those
+               cache sizes (introspection only; may be None).
+    """
+
+    def __init__(self, shard_map: ShardMap, paths, bases, *,
+                 profile="azure_ssd", specs=None, plan=None):
+        paths = list(paths)
+        bases = [int(b) for b in bases]
+        if len(paths) != shard_map.n_shards or len(bases) != len(paths):
+            raise ValueError(
+                f"shard count mismatch: map has {shard_map.n_shards}, "
+                f"got {len(paths)} paths / {len(bases)} bases")
+        if specs is None:
+            specs = [None] * len(paths)
+        if len(specs) != len(paths):
+            raise ValueError(f"{len(specs)} specs for {len(paths)} shards")
+        self.shard_map = shard_map
+        self.paths = paths
+        self.bases = bases
+        self.plan = plan
+        self.services: list[IndexService] = []
+        try:
+            for path, spec in zip(paths, specs):
+                self.services.append(
+                    IndexService(path, profile=profile, spec=spec))
+        except Exception:
+            self.close()
+            raise
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.services)
+
+    # -- lookups ------------------------------------------------------------
+    def lookup(self, queries) -> np.ndarray:
+        """Batched Alg. 1 across the fleet → (q, 2) int64 global byte
+        ranges, in input order.  Identical to routing each key and calling
+        its shard's service alone — scatter-gather changes scheduling,
+        not results."""
+        q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
+        out = np.empty((len(q), 2), dtype=np.int64)
+        for sid, pos in self.shard_map.sub_batches(q):
+            out[pos] = self.services[sid].lookup(q[pos]) + self.bases[sid]
+        return out
+
+    def lookup_batches(self, batches) -> list:
+        """Serve a sequence of batches, keeping each shard's two-stage
+        prefetch pipeline fed: every shard receives its sub-batches of
+        *all* batches in one ``lookup_batches`` call (so its stage-1
+        worker prefetches across batch boundaries), then results gather
+        per input batch in input order."""
+        batches = [np.atleast_1d(np.asarray(b, dtype=np.uint64))
+                   for b in batches]
+        outs = [np.empty((len(b), 2), dtype=np.int64) for b in batches]
+        per_shard: dict[int, list] = {}
+        for bi, b in enumerate(batches):
+            for sid, pos in self.shard_map.sub_batches(b):
+                per_shard.setdefault(sid, []).append((bi, pos))
+        for sid in sorted(per_shard):
+            subs = per_shard[sid]
+            res = self.services[sid].lookup_batches(
+                [batches[bi][pos] for bi, pos in subs])
+            for (bi, pos), r in zip(subs, res):
+                outs[bi][pos] = r + self.bases[sid]
+        return outs
+
+    # -- observation ---------------------------------------------------------
+    def stats_summary(self) -> dict:
+        """Fleet-wide aggregates plus per-shard snapshots.  The fleet's
+        per-query observed cost is the traffic-weighted mean of the
+        shards' (Eq. 6-comparable, open-amortized) per-query costs."""
+        per_shard = []
+        tq = modeled = walk = 0.0
+        preads = bytes_fetched = hits = fetched = 0
+        for sid, svc in enumerate(self.services):
+            st = svc.stats
+            per_shard.append({
+                "shard": sid, "queries": st.queries,
+                "hit_rate": st.hit_rate, "preads": st.preads,
+                "bytes_fetched": st.bytes_fetched,
+                "query_modeled_us": (st.query_modeled_seconds * 1e6
+                                     if st.queries else None),
+                "cache_bytes": list(svc.cache.cap_pages[i] * svc.page_bytes
+                                    for i in range(svc.cache.n_tiers)),
+            })
+            tq += st.queries
+            modeled += (st.modeled_seconds - st.open_modeled_seconds
+                        + st.data_modeled_seconds)
+            walk += st.walk_modeled_seconds
+            preads += st.preads
+            bytes_fetched += st.bytes_fetched
+            hits += st.pages_hit
+            fetched += st.pages_fetched
+        touched = hits + fetched
+        return {
+            "queries": int(tq),
+            "preads": preads,
+            "bytes_fetched": bytes_fetched,
+            "hit_rate": (hits / touched) if touched else 0.0,
+            "query_modeled_us": (modeled / tq * 1e6) if tq else None,
+            "walk_query_us": (walk / tq * 1e6) if tq else None,
+            "plan": self.plan.to_dict() if self.plan is not None else None,
+            "shards": per_shard,
+        }
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Close every shard service (each persists its own ServeStats
+        snapshot next to its file when its spec says so)."""
+        for svc in self.services:
+            try:
+                svc.close()
+            except Exception:
+                pass        # best effort: one shard must not strand the rest
+
+    def __enter__(self) -> "FleetService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

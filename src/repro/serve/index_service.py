@@ -44,6 +44,7 @@ import json
 import os
 import threading
 import time
+import warnings
 from collections import OrderedDict
 
 import numpy as np
@@ -270,11 +271,22 @@ class ServeStats:
         ``from_snapshot(s.snapshot())`` round-trips exactly).  Pre-pipeline
         snapshots carried 2-element read samples — they load as
         non-overlapped."""
-        fields = {f.name for f in dataclasses.fields(cls)}
-        kw = {k: v for k, v in d.items() if k in fields}
+        if not isinstance(d, dict):
+            raise TypeError(f"snapshot must be an object, "
+                            f"got {type(d).__name__}")
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        # coerce scalars through the field's declared type so a corrupt
+        # value (e.g. "queries": "oops") raises here — load_serve_stats
+        # turns that into a warn-and-skip, never a poisoned ServeStats
+        kw = {}
+        for k, v in d.items():
+            f = fields.get(k)
+            if f is None or k == "read_samples":
+                continue
+            kw[k] = int(v) if isinstance(f.default, int) else float(v)
         kw["read_samples"] = [
             (int(r[0]), float(r[1]), bool(r[2]) if len(r) > 2 else False)
-            for r in kw.get("read_samples", [])]
+            for r in d.get("read_samples", [])]
         return cls(**kw)
 
 
@@ -303,21 +315,67 @@ def save_stats_snapshot(index_path: str, stats: ServeStats, *,
 
 
 def load_stats_history(index_path: str) -> list:
-    """All persisted snapshots (oldest first); [] when none/unreadable."""
+    """All persisted snapshots (oldest first); [] when none/unreadable.
+
+    Never raises: a fleet startup reads N of these, and one corrupt or
+    truncated file must not take the whole fleet down.  A file that exists
+    but cannot be decoded (torn write, hand edit, wrong schema) warns and
+    loads as empty; individual malformed snapshot entries are skipped with
+    a warning rather than poisoning the readable ones."""
+    path = stats_path(index_path)
     try:
-        with open(stats_path(index_path)) as f:
+        with open(path) as f:
             d = json.load(f)
-        return list(d.get("snapshots") or [])
-    except (OSError, ValueError):
+    except OSError:
+        return []          # no snapshot yet: the normal cold-start case
+    except ValueError:
+        warnings.warn(f"corrupt stats file {path!r}: not valid JSON; "
+                      f"treating as empty", RuntimeWarning, stacklevel=2)
         return []
+    if not isinstance(d, dict):
+        warnings.warn(f"corrupt stats file {path!r}: expected an object, "
+                      f"got {type(d).__name__}; treating as empty",
+                      RuntimeWarning, stacklevel=2)
+        return []
+    snaps = d.get("snapshots") or []
+    if not isinstance(snaps, list):
+        warnings.warn(f"corrupt stats file {path!r}: 'snapshots' is not a "
+                      f"list; treating as empty", RuntimeWarning,
+                      stacklevel=2)
+        return []
+    good = [s for s in snaps if isinstance(s, dict)]
+    if len(good) != len(snaps):
+        warnings.warn(f"stats file {path!r}: skipped "
+                      f"{len(snaps) - len(good)} malformed snapshot(s)",
+                      RuntimeWarning, stacklevel=2)
+    return good
 
 
 def load_serve_stats(index_path: str) -> ServeStats | None:
-    """The latest persisted :class:`ServeStats` for an index file."""
-    history = load_stats_history(index_path)
-    if not history:
-        return None
-    return ServeStats.from_snapshot(history[-1]["stats"])
+    """The latest *loadable* persisted :class:`ServeStats` for an index
+    file — snapshots that fail to decode are skipped (newest first, with
+    a warning) rather than raised, so one torn snapshot degrades to the
+    previous one instead of failing fleet startup."""
+    for snap in reversed(load_stats_history(index_path)):
+        try:
+            return ServeStats.from_snapshot(snap["stats"])
+        except (KeyError, TypeError, ValueError, IndexError):
+            warnings.warn(
+                f"stats file {stats_path(index_path)!r}: skipping a "
+                f"snapshot that does not decode as ServeStats",
+                RuntimeWarning, stacklevel=2)
+    return None
+
+
+def cacheable_working_set(meta, resident_layers: int = 1) -> int:
+    """Bytes the block cache can usefully hold for an index file: the
+    serialized sizes of every *non-resident* layer (the engine pins the
+    top ``resident_layers`` in memory at open; the data layer is read by
+    the caller, not through the cache).  The fleet's budget allocator
+    water-fills against exactly this figure per shard."""
+    L = len(meta.layers)
+    n_res = min(max(int(resident_layers), 1), L) if L else 0
+    return int(sum(lm.size for lm in meta.layers[:L - n_res]))
 
 
 def measured_backing_profile(stats: ServeStats,

@@ -1,0 +1,125 @@
+"""Direct unit tests for ``repro.dist.sharding``: param / batch /
+decode-state sharding rules and the residual-stream constraint.
+
+Runs in a subprocess with 8 forced host devices so the main test session
+keeps its single-device view (conftest contract).
+"""
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist.sharding import (batch_sharding, constrain_residual,
+                                 decode_state_shardings, param_shardings,
+                                 replicated, set_activation_mesh)
+
+
+class Spec:
+    def __init__(self, shape):
+        self.shape = tuple(shape)
+
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+out = {}
+
+# -- param_shardings: tensor-parallel on the largest trailing divisible dim
+params = {
+    "emb": Spec((128, 64)),          # trailing dim 64 % 4 == 0 -> model
+    "blocks": Spec((6, 128, 64)),    # leading dim 6 is the layer stack
+    "scalar": Spec(()),              # nothing shardable
+    "odd": Spec((7, 9)),             # nothing divides 4 -> replicated
+}
+ps = param_shardings(None, params, mesh)
+out["param_specs"] = {k: str(s.spec) for k, s in ps.items()}
+
+# ZeRO-1: moments additionally sharded over the data axis
+zs = param_shardings(None, params, mesh, zero=True)
+out["zero_specs"] = {k: str(s.spec) for k, s in zs.items()}
+
+# -- batch_sharding: leading dim over data axes, indivisible -> replicated
+bs = batch_sharding(mesh, {"x": Spec((4, 16)), "odd": Spec((3, 16)),
+                           "empty": Spec(())})
+out["batch_specs"] = {k: str(s.spec) for k, s in bs.items()}
+
+# -- decode_state_shardings: (L, B, H, ...) -> batch axis 1, heads axis 2
+ds = decode_state_shardings(None, {"kv": Spec((6, 4, 8, 64)),
+                                   "odd_b": Spec((6, 3, 8, 64)),
+                                   "vec": Spec((6,))}, mesh)
+out["decode_specs"] = {k: str(s.spec) for k, s in ds.items()}
+
+out["replicated"] = str(replicated(mesh).spec)
+
+# -- constrain_residual: no-op without a mesh, sharded with one
+x = jnp.zeros((4, 16))
+y = constrain_residual(x)
+out["residual_no_mesh_identity"] = bool(y is x)
+set_activation_mesh(mesh)
+with mesh:
+    z = jax.jit(constrain_residual)(x)
+    out["residual_sharded"] = str(z.sharding.spec)
+    odd = jnp.zeros((3, 16))
+    out["residual_odd_identity"] = bool(constrain_residual(odd) is odd)
+set_activation_mesh(None)
+out["residual_cleared_identity"] = bool(constrain_residual(x) is x)
+
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _run():
+    out = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env={"PYTHONPATH": "src",
+                                         "PATH": "/usr/bin:/bin",
+                                         "JAX_PLATFORMS": "cpu"},
+                         cwd=REPO_ROOT, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    line = [ln for ln in out.stdout.splitlines()
+            if ln.startswith("RESULT")][0]
+    return json.loads(line.split(" ", 1)[1])
+
+
+def test_sharding_rules_on_a_2x4_mesh():
+    got = _run()
+    # params: model axis on the largest trailing divisible dim; the layer
+    # stack dim of scanned block params is never sharded
+    assert got["param_specs"] == {
+        "emb": "PartitionSpec(None, 'model')",
+        "blocks": "PartitionSpec(None, None, 'model')",
+        "scalar": "PartitionSpec()",
+        "odd": "PartitionSpec(None, None)",
+    }
+    # ZeRO-1 adds a data-axis dim where one divides (emb: 128 % 2 == 0)
+    assert got["zero_specs"]["emb"] == "PartitionSpec('data', 'model')"
+    assert got["zero_specs"]["blocks"] \
+        == "PartitionSpec('data', None, 'model')"
+    # batches: leading dim over data, indivisible leaves replicated
+    # (specs are padded to full rank, so trailing dims show as None)
+    assert got["batch_specs"] == {
+        "x": "PartitionSpec('data', None)",
+        "odd": "PartitionSpec(None, None)",
+        "empty": "PartitionSpec()",
+    }
+    # decode state: (L, B, H, hd) -> batch on 'data', heads on 'model'
+    assert got["decode_specs"]["kv"] \
+        == "PartitionSpec(None, 'data', 'model', None)"
+    assert got["decode_specs"]["odd_b"] \
+        == "PartitionSpec(None, None, 'model', None)"
+    assert got["decode_specs"]["vec"] == "PartitionSpec(None,)"
+    assert got["replicated"] == "PartitionSpec()"
+
+
+def test_constrain_residual_mesh_lifecycle():
+    got = _run()
+    assert got["residual_no_mesh_identity"] is True
+    assert got["residual_sharded"] == "PartitionSpec('data',)"
+    assert got["residual_odd_identity"] is True
+    assert got["residual_cleared_identity"] is True

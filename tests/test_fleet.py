@@ -1,0 +1,357 @@
+"""Sharded fleet: ShardMap routing, FleetSpec round-trips, the budget
+allocator's water-filling properties, the Fleet lifecycle (tune → save →
+open → serve), scatter-gather bit-identity, and robustness of persisted
+stats loading (the fleet startup path reads N of them)."""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import Index, ServeSpec, TuneSpec, detect_drift_from_file
+from repro.core import KeyPositions, PROFILES
+from repro.fleet import (CachePlan, Fleet, FleetSpec, ShardMap,
+                         allocate_cache_budget, demand_from_design,
+                         demand_from_meta, split_cache_tiers)
+from repro.fleet.budget import ShardDemand
+from repro.serve import IndexService, cacheable_working_set
+from repro.serve.index_service import (load_serve_stats, load_stats_history,
+                                       stats_path)
+
+from conftest import make_keys
+
+SPEC = TuneSpec(lam_low=2**8, lam_high=2**14, lam_base=4.0, k=3,
+                max_layers=4, page_bytes=1024)
+FSPEC = FleetSpec(n_shards=4, tune=SPEC,
+                  serve=ServeSpec(persist_stats=True))
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = make_keys("gmm", 40_000, seed=5)
+    return KeyPositions.fixed_record(keys, 16)
+
+
+@pytest.fixture(scope="module")
+def saved_fleet(data, tmp_path_factory):
+    d = str(tmp_path_factory.mktemp("fleet") / "f")
+    fleet = Fleet.tune(data, "azure_ssd", FSPEC).build()
+    fleet.save(d)
+    return d, fleet
+
+
+# ---------------------------------------------------------------------------
+# ShardMap
+# ---------------------------------------------------------------------------
+def test_shard_map_routes_every_key_to_its_range(data):
+    sm = ShardMap.even_keys(data.keys, 4)
+    sids = sm.route(data.keys)
+    assert sm.n_shards == 4
+    # bounds are the first key of each shard: routing must agree with the
+    # slice boundaries even_keys cut
+    sl = sm.slice_bounds(data.keys)
+    for s, (a, b) in enumerate(sl):
+        assert (sids[a:b] == s).all()
+        assert b - a > 0
+
+
+def test_shard_map_sub_batches_partition_exactly(data):
+    sm = ShardMap.even_keys(data.keys, 3)
+    rng = np.random.default_rng(0)
+    q = rng.choice(data.keys, 257)
+    seen = np.zeros(len(q), dtype=bool)
+    for sid, pos in sm.sub_batches(q):
+        assert not seen[pos].any()
+        seen[pos] = True
+        assert (sm.route(q[pos]) == sid).all()
+    assert seen.all()
+
+
+def test_shard_map_requires_sorted_distinct_bounds():
+    with pytest.raises(ValueError):
+        ShardMap(bounds=(10, 10))
+    with pytest.raises(ValueError):
+        ShardMap(bounds=(20, 10))
+
+
+def test_shard_map_round_trips():
+    sm = ShardMap(bounds=(100, 2**40, 2**63))
+    assert ShardMap.from_dict(sm.to_dict()) == sm
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec
+# ---------------------------------------------------------------------------
+def test_fleet_spec_round_trips_nested_specs():
+    spec = FleetSpec(n_shards=8, tune=SPEC,
+                     serve=ServeSpec(cache_bytes=(4096,), persist_stats=True),
+                     cache_budget_bytes=1 << 20, budget_quantum=8192)
+    again = FleetSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.tune == SPEC
+    assert again.quantum == 8192
+
+
+def test_fleet_spec_rejects_unknown_fields():
+    with pytest.raises(ValueError):
+        FleetSpec.from_dict({"n_shards": 2, "cache_budget": 1})
+
+
+def test_fleet_spec_quantum_falls_back_to_page_bytes():
+    assert FleetSpec(tune=SPEC).quantum == SPEC.page_bytes
+
+
+# ---------------------------------------------------------------------------
+# budget allocator
+# ---------------------------------------------------------------------------
+def _demand(shard, traffic, ws, saving=1e-4):
+    return ShardDemand(shard=shard, traffic=traffic, working_set=ws,
+                       saving=saving)
+
+
+def test_water_filling_funds_hot_shards_first():
+    demands = [_demand(0, 100.0, 8192), _demand(1, 10.0, 8192),
+               _demand(2, 1.0, 8192)]
+    plan = allocate_cache_budget(demands, 12288, quantum=4096)
+    assert plan.for_shard(0) == 8192          # hot: full working set
+    assert plan.for_shard(1) == 4096          # warm: the remainder
+    assert plan.for_shard(2) == 0             # cold: priced out
+    assert plan.allocated_bytes <= 12288
+
+
+def test_water_filling_never_over_allocates_a_working_set():
+    plan = allocate_cache_budget([_demand(0, 5.0, 5000)], 1 << 20,
+                                 quantum=4096)
+    # saturation: ceil(5000/4096) pages, not the whole budget
+    assert plan.for_shard(0) == 8192
+    assert plan.unallocated_bytes == (1 << 20) - 8192
+
+
+def test_zero_working_set_earns_nothing():
+    plan = allocate_cache_budget([_demand(0, 100.0, 0)], 1 << 20,
+                                 quantum=4096)
+    assert plan.for_shard(0) == 0
+
+
+def test_duplicate_shard_rejected():
+    with pytest.raises(ValueError):
+        allocate_cache_budget([_demand(0, 1.0, 1), _demand(0, 2.0, 1)],
+                              4096, quantum=4096)
+
+
+def test_predicted_gain_monotone_in_budget():
+    demands = [_demand(0, 9.0, 50_000), _demand(1, 3.0, 50_000)]
+    gains = [allocate_cache_budget(demands, b, quantum=4096).predicted_gain
+             for b in (0, 16 << 10, 64 << 10, 256 << 10)]
+    assert all(a <= b + 1e-12 for a, b in zip(gains, gains[1:]))
+
+
+def test_split_cache_tiers_preserves_total_and_quantum():
+    tiers = split_cache_tiers(24576, (64 << 10, 512 << 10), quantum=4096)
+    assert sum(tiers) == 24576
+    assert all(t % 4096 == 0 for t in tiers)
+    assert split_cache_tiers(8192, (), quantum=4096) == (8192,)
+
+
+def test_demand_from_meta_uses_exact_file_layer_sizes(data, saved_fleet):
+    _, fleet = saved_fleet
+    idx = fleet.shards[0]
+    d = demand_from_meta(0, idx.file_meta, PROFILES["azure_ssd"],
+                         cache=PROFILES["host_dram"])
+    assert d.working_set == cacheable_working_set(idx.file_meta, 1)
+    assert d.saving >= 0.0
+
+
+def test_demand_from_design_matches_working_set(data):
+    idx = Index.tune(data, "azure_ssd", SPEC).build()
+    d = demand_from_design(0, idx.result.design, PROFILES["azure_ssd"],
+                           cache=PROFILES["host_dram"])
+    layers = idx.result.design.layers
+    non_resident = layers[:len(layers) - 1]
+    assert d.working_set == sum(lay.size_bytes for lay in non_resident)
+    assert d.saving >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# Fleet lifecycle + scatter-gather identity
+# ---------------------------------------------------------------------------
+def test_fleet_lookup_covers_every_key(data, saved_fleet):
+    _, fleet = saved_fleet
+    rng = np.random.default_rng(1)
+    q = rng.choice(data.keys, 500)
+    got = fleet.lookup(q)
+    order = np.searchsorted(data.keys, q)
+    # Alg. 1 returns the final search window (global offsets after the
+    # shard base is added back): it must contain each record's true range
+    assert (got[:, 0] <= data.lo[order]).all()
+    assert (got[:, 1] >= data.hi[order]).all()
+    assert (got[:, 1] > got[:, 0]).all()
+
+
+def test_fleet_open_restores_manifest(data, saved_fleet):
+    d, fleet = saved_fleet
+    again = Fleet.open(d, data=data)
+    assert again.spec == fleet.spec
+    assert again.shard_map == fleet.shard_map
+    assert again.bases == fleet.bases
+    assert [i.path for i in again.shards] == [i.path for i in fleet.shards]
+    again.close()
+
+
+def test_fleet_open_rejects_mismatched_data(saved_fleet):
+    d, _ = saved_fleet
+    other = KeyPositions.fixed_record(make_keys("uniform", 10_000, seed=9),
+                                      16)
+    with pytest.raises(ValueError):
+        Fleet.open(d, data=other)
+
+
+def test_scatter_gather_bit_identical_to_sequential(data, saved_fleet):
+    d, fleet = saved_fleet
+    rng = np.random.default_rng(2)
+    q = rng.choice(data.keys, 700)
+    # reference: each shard served alone, one at a time, plus its base
+    want = np.empty((len(q), 2), dtype=np.int64)
+    for sid, pos in fleet.shard_map.sub_batches(q):
+        with IndexService(fleet.shards[sid].path,
+                          profile="azure_ssd") as ref:
+            want[pos] = ref.lookup(q[pos]) + fleet.bases[sid]
+    with fleet.serve(persist_stats=False) as svc:
+        got = svc.lookup(q)
+    assert np.array_equal(got, want)
+
+
+def test_lookup_batches_identical_to_lookup(data, saved_fleet):
+    _, fleet = saved_fleet
+    rng = np.random.default_rng(3)
+    batches = [rng.choice(data.keys, 128) for _ in range(6)]
+    with fleet.serve(persist_stats=False,
+                     pipeline_depth=2, prefetch_layers=2) as svc:
+        want = [svc.lookup(b) for b in batches]
+        got = svc.lookup_batches(batches)
+    assert all(np.array_equal(w, g) for w, g in zip(want, got))
+
+
+def test_fleet_serve_splits_budget_and_reports_plan(data, saved_fleet):
+    _, fleet = saved_fleet
+    with fleet.serve(total_cache_bytes=64 << 10,
+                     persist_stats=False) as svc:
+        svc.lookup(data.keys[:256])
+        summary = svc.stats_summary()
+    assert summary["plan"] is not None
+    assert summary["plan"]["total_bytes"] == 64 << 10
+    assert summary["queries"] == 256
+    assert len(summary["shards"]) == fleet.n_shards
+
+
+def test_fleet_retune_budgeted_smoke(data, saved_fleet):
+    d, _ = saved_fleet
+    fleet = Fleet.open(d, data=data)
+    retuned, plan = fleet.retune_budgeted(data=data,
+                                          total_cache_bytes=128 << 10)
+    assert isinstance(plan, CachePlan)
+    assert retuned.spec.cache_budget_bytes == 128 << 10
+    assert retuned.n_shards == fleet.n_shards
+    # every shard has a design again (unsaved fleet, ready to build/save)
+    retuned.build()
+    rng = np.random.default_rng(4)
+    q = rng.choice(data.keys, 200)
+    assert np.array_equal(retuned.lookup(q), fleet.lookup(q))
+    fleet.close()
+
+
+def test_fleet_retune_budgeted_requires_budget(data, saved_fleet):
+    d, _ = saved_fleet
+    fleet = Fleet.open(d, data=data)
+    with pytest.raises(ValueError):
+        fleet.retune_budgeted(data=data)
+    fleet.close()
+
+
+# ---------------------------------------------------------------------------
+# cacheable_working_set
+# ---------------------------------------------------------------------------
+def test_cacheable_working_set_counts_non_resident_layers(data, tmp_path):
+    idx = Index.tune(data, "azure_nfs", SPEC).build()
+    path = str(tmp_path / "ws.air")
+    idx.save(path)
+    with IndexService(path, profile="azure_nfs") as svc:
+        meta = svc.meta
+    L = len(meta.layers)
+    assert cacheable_working_set(meta, resident_layers=L) == 0
+    total = sum(lm.size for lm in meta.layers)
+    # resident_layers=0 clamps to 1: the engine always pins the root
+    assert cacheable_working_set(meta, resident_layers=0) \
+        == cacheable_working_set(meta, resident_layers=1) \
+        == total - meta.layers[-1].size
+
+
+# ---------------------------------------------------------------------------
+# persisted-stats robustness (the fleet startup path)
+# ---------------------------------------------------------------------------
+def _serve_some(path, n=600):
+    rng = np.random.default_rng(0)
+    with IndexService(path, profile="azure_ssd",
+                      spec=ServeSpec(persist_stats=True)) as svc:
+        svc.lookup(rng.choice(np.arange(1, n, dtype=np.uint64), 256))
+
+
+@pytest.fixture()
+def stats_file(data, tmp_path):
+    idx = Index.tune(data, "azure_ssd", SPEC).build()
+    path = str(tmp_path / "s.air")
+    idx.save(path)
+    rng = np.random.default_rng(0)
+    with IndexService(path, profile="azure_ssd",
+                      spec=ServeSpec(persist_stats=True)) as svc:
+        svc.lookup(rng.choice(data.keys, 256))
+    assert os.path.exists(stats_path(path))
+    return path
+
+
+def test_truncated_stats_file_warns_not_raises(stats_file):
+    with open(stats_path(stats_file), "r+") as f:
+        raw = f.read()
+        f.seek(0)
+        f.truncate()
+        f.write(raw[:len(raw) // 2])      # mid-JSON truncation
+    with pytest.warns(RuntimeWarning):
+        assert load_stats_history(stats_file) == []
+    with pytest.warns(RuntimeWarning):
+        assert load_serve_stats(stats_file) is None
+    with pytest.warns(RuntimeWarning):
+        report = detect_drift_from_file(stats_file)
+    assert report is not None
+    assert report.action == "observe"
+    assert report.confidence == 0.0
+
+
+def test_wrong_top_level_type_warns_not_raises(stats_file):
+    with open(stats_path(stats_file), "w") as f:
+        json.dump(["not", "a", "dict"], f)
+    with pytest.warns(RuntimeWarning):
+        assert load_stats_history(stats_file) == []
+
+
+def test_undecodable_snapshot_skipped_newer_first(stats_file):
+    history = load_stats_history(stats_file)
+    history.append({"stats": {"queries": "corrupt"}, "profile": None})
+    with open(stats_path(stats_file), "w") as f:
+        json.dump({"snapshots": history}, f)
+    # newest snapshot is garbage: load_serve_stats falls back to the older
+    # good one instead of raising
+    with pytest.warns(RuntimeWarning):
+        stats = load_serve_stats(stats_file)
+    assert stats is not None and stats.queries > 0
+
+
+def test_missing_stats_file_is_silent(tmp_path, data):
+    idx = Index.tune(data, "azure_ssd", SPEC).build()
+    path = str(tmp_path / "nostats.air")
+    idx.save(path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # cold start must not warn
+        assert load_stats_history(path) == []
+        assert load_serve_stats(path) is None
+        assert detect_drift_from_file(path) is None
