@@ -243,6 +243,7 @@ SERVE_JSON_PATH = None     # set by main() via --serve-json
 TUNE_JSON_PATH = None      # set by main() via --tune-json
 BASELINE_JSON_PATH = None  # set by main() via --baseline-json
 FLEET_JSON_PATH = None     # set by main() via --fleet-json
+CHAOS_JSON_PATH = None     # set by main() via --chaos-json
 
 
 def bench_serve():
@@ -273,6 +274,28 @@ def bench_fleet():
         with open(FLEET_JSON_PATH, "w") as f:
             json.dump(results, f, indent=2)
         print(f"# wrote {FLEET_JSON_PATH}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection gate (retries, checksums, hot swap) — BENCH_chaos.json
+# ---------------------------------------------------------------------------
+def bench_chaos():
+    try:
+        from benchmarks import serve_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import serve_bench
+    results = serve_bench.run_chaos_bench()
+    serve_bench.emit_chaos(results)
+    if CHAOS_JSON_PATH:
+        import json
+        with open(CHAOS_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {CHAOS_JSON_PATH}", flush=True)
+    fatal = serve_bench.chaos_fatal_warnings(results)
+    if fatal:
+        for msg in fatal:
+            print(f"::error::{msg}")
+        raise SystemExit(1)
 
 
 # ---------------------------------------------------------------------------
@@ -359,6 +382,7 @@ BENCHES = [
     bench_lookup_throughput,
     bench_serve,
     bench_fleet,
+    bench_chaos,
     bench_tune,
     bench_baseline,
     bench_roofline,
@@ -385,7 +409,7 @@ def _take_json_flag(argv: list, flag: str, default_path: str):
 
 def main() -> None:
     global SERVE_JSON_PATH, TUNE_JSON_PATH, BASELINE_JSON_PATH, \
-        FLEET_JSON_PATH
+        FLEET_JSON_PATH, CHAOS_JSON_PATH
     argv = list(sys.argv[1:])
     # emit BENCH_*.json (perf trajectories)
     SERVE_JSON_PATH = _take_json_flag(argv, "--serve-json", "BENCH_serve.json")
@@ -394,6 +418,8 @@ def main() -> None:
                                          "BENCH_baseline.json")
     FLEET_JSON_PATH = _take_json_flag(argv, "--fleet-json",
                                       "BENCH_fleet.json")
+    CHAOS_JSON_PATH = _take_json_flag(argv, "--chaos-json",
+                                      "BENCH_chaos.json")
     only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:

@@ -25,6 +25,16 @@ Exercises :class:`repro.serve.IndexService` against a paged index file:
     design, so ``BENCH_serve.json`` trends the dominance margin on the
     *real* partial-read path, not just the Eq. 6 model.
 
+``--chaos`` / ``--chaos-only`` add the fault-injection gate: every
+recoverable fault schedule (transient EIO, torn reads, stalls, corrupt
+pages, flaky start, persistent coalesced-run failure) must serve
+bit-identical results through the retry/repair machinery (FATAL);
+past-the-budget failures must surface their typed errors (FATAL); hot
+swap under live traffic must never mix epochs within a batch (FATAL); a
+dead fleet shard must honor the fail-stop and ``partial_results``
+contracts (FATAL); qps degradation under faults only warns.
+``--chaos-json PATH`` dumps ``BENCH_chaos.json``.
+
 Prints the repo's ``name,us_per_call,derived`` CSV; ``--json PATH`` also
 dumps a machine-readable ``BENCH_serve.json`` so later PRs have a perf
 trajectory to compare against (``benchmarks/run.py --serve-json`` wires
@@ -44,13 +54,15 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
-from repro.api import Index, ServeSpec, TuneSpec, detect_drift
+from repro.api import Index, RetryPolicy, ServeSpec, TuneSpec, detect_drift
 from repro.core import KeyPositions, PROFILES, expected_latency
 from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
-from repro.core.serialize import lookup_serialized
+from repro.core.serialize import lookup_serialized, write_index
 from repro.core.storage import CachedProfile
-from repro.fleet import Fleet, FleetSpec, demand_from_design
-from repro.serve import IndexService
+from repro.fleet import Fleet, FleetSpec, ShardUnavailableError, \
+    demand_from_design
+from repro.serve import (FaultInjectingBackend, FileBackend, IndexService,
+                         ReadError, StorageError)
 from repro.serve.index_service import demo_serving_design
 from repro.data.datasets import sosd_like
 
@@ -546,6 +558,365 @@ def emit_fleet(results: dict) -> None:
          f"beats={results['fleet_beats_monolith']}")
 
 
+# ---------------------------------------------------------------------------
+# chaos gate (--chaos / --chaos-only) — BENCH_chaos.json
+# ---------------------------------------------------------------------------
+CHAOS_PAGE = 1024
+CHAOS_RETRY = RetryPolicy(max_attempts=4, backoff_s=1e-5, max_backoff_s=1e-3)
+CHAOS_SPEC = ServeSpec(cache_bytes=(64 << 10,), retry=CHAOS_RETRY)
+# every recoverable schedule the engine must serve bit-identically through;
+# corrupt schedules gate on multi-page reads so the engine's single-page
+# repair refetch comes back clean (its window key differs, but an unbounded
+# rate would re-corrupt it)
+CHAOS_SCHEDULES = (
+    ("eio", dict(eio_rate=0.3, eio_attempts=2)),
+    ("torn_read", dict(short_rate=0.4, short_attempts=2)),
+    ("stall", dict(stall_rate=0.3, stall_seconds=2e-4, stall_attempts=1)),
+    ("corrupt", dict(corrupt_rate=1.0, corrupt_attempts=1,
+                     only_over_bytes=CHAOS_PAGE)),
+    ("flaky_start", dict(fail_first=3)),
+    # coalesced runs fail persistently, single pages succeed: the engine
+    # must fall back to page-granularity fetches (graceful degradation)
+    ("degraded_split", dict(eio_rate=1.0, eio_attempts=None,
+                            only_over_bytes=CHAOS_PAGE)),
+    ("combined", dict(eio_rate=0.4, eio_attempts=1, short_rate=0.4,
+                      short_attempts=1, corrupt_rate=0.8, corrupt_attempts=1,
+                      stall_rate=0.3, stall_seconds=2e-4, stall_attempts=1,
+                      only_over_bytes=CHAOS_PAGE)),
+)
+
+
+def _chaos_counters(svc: IndexService) -> dict:
+    s = svc.stats
+    return {"preads": s.preads, "io_retries": s.io_retries,
+            "io_timeouts": s.io_timeouts, "degraded_runs": s.degraded_runs,
+            "corrupt_pages": s.corrupt_pages,
+            "tainted_samples": sum(1 for r in s.read_samples if r[3])}
+
+
+def _chaos_design(D: KeyPositions):
+    """A dense 3-layer stack (hundreds of disk pages) — the demo design is
+    a handful of pages that fit the cache whole, which would let most
+    fault schedules run to completion without a single pread to fault."""
+    from repro.core import IndexDesign
+    from repro.core.builders import build_gband, build_gstep
+    from repro.core.nodes import outline
+    l1 = build_gstep(D, 8, 2**6)
+    o1 = outline(l1, D)
+    l2 = build_gband(o1, 2**9)
+    l3 = build_gstep(outline(l2, o1), 8, 2**7)
+    return IndexDesign(layers=(l1, l2, l3), data=D)
+
+
+def _chaos_alt_design(D: KeyPositions):
+    """A structurally different stack over the same data, distinguishable
+    from the demo design by its windows — what a retune would hot-swap in."""
+    from repro.core import IndexDesign
+    from repro.core.builders import build_gband, build_gstep
+    from repro.core.nodes import outline
+    l1 = build_gstep(D, 8, 2**9)
+    o1 = outline(l1, D)
+    l2 = build_gband(o1, 2**8)
+    l3 = build_gstep(outline(l2, o1), 8, 2**6)
+    return IndexDesign(layers=(l1, l2, l3), data=D)
+
+
+def _chaos_schedules_row(path, queries, want, meta_end: int,
+                         resident_bytes: int) -> list:
+    # schedules gate past the meta region: a dense schedule over the
+    # multi-window header parse can exhaust the whole open budget before
+    # a single data page is served (persistent header failure is its own
+    # scenario under typed_failures); open-time resident-layer loads and
+    # all serving preads still run through the fault schedule
+    rows = []
+    for name, kw in CHAOS_SCHEDULES:
+        kw = dict(kw)
+        if name == "degraded_split":
+            # persistent failure for *coalesced* runs only: the gate must
+            # also clear the one-shot resident-layer blob load at open,
+            # which has no finer granularity to degrade to
+            kw["only_over_bytes"] = max(CHAOS_PAGE, resident_bytes)
+        svc = IndexService(
+            path, profile=None, spec=CHAOS_SPEC,
+            backend_factory=lambda p: FaultInjectingBackend(
+                FileBackend(p), seed=11, page_bytes=CHAOS_PAGE,
+                only_from_offset=meta_end, **kw))
+        try:
+            t0 = time.perf_counter()
+            got = svc.lookup(queries)
+            wall = time.perf_counter() - t0
+            rows.append({"schedule": name,
+                         "identical": bool(np.array_equal(want, got)),
+                         "qps": len(queries) / max(wall, 1e-9),
+                         **_chaos_counters(svc)})
+        finally:
+            svc.close()
+    return rows
+
+
+def _chaos_typed_failures(path, queries, meta_end: int) -> dict:
+    """Past-the-budget failures must surface as *typed* errors, never as
+    silent wrong answers or a bare OSError out of the engine's guts."""
+    from repro.serve import CorruptPageError
+    out = {}
+    # the typed error may surface at open (resident-layer load) or at the
+    # first lookup — both are honest fail-stops; a silent wrong answer or
+    # a bare OSError out of the engine's guts is the regression
+    svc = None
+    try:
+        svc = IndexService(
+            path, profile=None, spec=CHAOS_SPEC,
+            backend_factory=lambda p: FaultInjectingBackend(
+                FileBackend(p), seed=2, eio_rate=1.0, eio_attempts=None,
+                only_from_offset=meta_end))
+        svc.lookup(queries)
+        out["persistent_eio"] = {"raised": None, "ok": False}
+    except ReadError as e:
+        out["persistent_eio"] = {"raised": type(e).__name__,
+                                 "attempts": e.attempts,
+                                 "ok": e.attempts == CHAOS_RETRY.max_attempts}
+    except StorageError as e:   # wrong subtype: typed but not honest
+        out["persistent_eio"] = {"raised": type(e).__name__, "ok": False}
+    finally:
+        if svc is not None:
+            svc.close()
+    svc = None
+    try:
+        svc = IndexService(
+            path, profile=None, spec=CHAOS_SPEC,
+            backend_factory=lambda p: FaultInjectingBackend(
+                FileBackend(p), seed=2, corrupt_rate=1.0,
+                corrupt_attempts=10**9, page_bytes=CHAOS_PAGE,
+                only_from_offset=meta_end))
+        svc.lookup(queries)
+        out["persistent_corruption"] = {"raised": None, "ok": False}
+    except CorruptPageError as e:
+        out["persistent_corruption"] = {"raised": type(e).__name__,
+                                        "page_id": e.page_id, "ok": True}
+    except StorageError as e:
+        out["persistent_corruption"] = {"raised": type(e).__name__,
+                                        "ok": False}
+    finally:
+        if svc is not None:
+            svc.close()
+    return out
+
+
+def _chaos_swap(path_a, path_b, keys) -> dict:
+    """Hot-swap under live traffic: a hammer thread runs ``lookup_batches``
+    while the main thread swaps between two designs — every batch must be
+    served wholly by one epoch (old or new windows, never a row-mix)."""
+    import threading
+    rng = np.random.default_rng(3)
+    batches = [rng.choice(keys, 256) for _ in range(6)]
+    spec = CHAOS_SPEC.replace(pipeline_depth=2)
+    with IndexService(path_a, profile=None, spec=spec) as svc:
+        want_a = [svc.lookup(b) for b in batches]
+    with IndexService(path_b, profile=None, spec=spec) as svc:
+        want_b = [svc.lookup(b) for b in batches]
+
+    results, errors, stop = [], [], threading.Event()
+    svc = IndexService(path_a, profile=None, spec=spec)
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                results.append(svc.lookup_batches(batches))
+        except Exception as e:
+            errors.append(f"{type(e).__name__}: {e}")
+
+    t = threading.Thread(target=hammer)
+    t0 = time.perf_counter()
+    t.start()
+    n_swaps = 8
+    try:
+        for k in range(n_swaps):
+            svc.swap(path_b if k % 2 == 0 else path_a)
+            time.sleep(0.005)
+    finally:
+        stop.set()
+        t.join()
+        wall = time.perf_counter() - t0
+        swaps_recorded = svc.stats.swaps
+        svc.close()
+    mixed = 0
+    for run in results:
+        for i, got in enumerate(run):
+            if not (np.array_equal(got, want_a[i])
+                    or np.array_equal(got, want_b[i])):
+                mixed += 1
+    served = sum(len(run) * 256 for run in results)
+    return {"swaps": n_swaps, "swaps_recorded": swaps_recorded,
+            "batch_runs": len(results), "errors": errors,
+            "mixed_batches": mixed,
+            "qps_during_swaps": served / max(wall, 1e-9),
+            "ok": bool(results) and not errors and mixed == 0}
+
+
+class _ChaosDeadShard(FileBackend):
+    """Healthy through open, then every pread raises — a shard whose disk
+    died under a live fleet."""
+
+    armed = False
+
+    def pread(self, nbytes, offset):
+        if _ChaosDeadShard.armed:
+            import errno
+            raise OSError(errno.EIO, "chaos: dead shard")
+        return super().pread(nbytes, offset)
+
+
+def _chaos_fleet(D: KeyPositions, workdir: str) -> dict:
+    """One shard of three dies under traffic: the default contract is a
+    typed fail-stop, ``partial_results=True`` must keep serving the two
+    healthy shards bit-identically with an honest unavailable mask."""
+    from repro.fleet.fleet import _partition
+    from repro.fleet.service import FleetService
+    from repro.fleet.spec import ShardMap
+    shard_map = ShardMap.even_keys(D.keys, 3)
+    parts, bases = _partition(D, shard_map)
+    paths = []
+    for i, part in enumerate(parts):
+        p = os.path.join(workdir, f"chaos_shard_{i}.air")
+        write_index(p, _chaos_design(part), page_bytes=CHAOS_PAGE)
+        paths.append(p)
+    rng = np.random.default_rng(2)
+    qs = rng.choice(D.keys, 1024)
+    with FleetService(shard_map, paths, bases, profile=None,
+                      specs=[CHAOS_SPEC] * 3) as svc:
+        want = svc.lookup(qs)
+    sick = 1
+    _ChaosDeadShard.armed = False
+
+    def factory(p):
+        return _ChaosDeadShard(p) if p == paths[sick] else FileBackend(p)
+
+    row = {"n_shards": 3, "sick_shard": sick}
+    with FleetService(shard_map, paths, bases, profile=None,
+                      specs=[CHAOS_SPEC] * 3,
+                      backend_factories=factory) as svc:
+        _ChaosDeadShard.armed = True
+        try:
+            svc.lookup(qs)
+            row["fail_stop"] = {"raised": None, "ok": False}
+        except ShardUnavailableError as e:
+            row["fail_stop"] = {"raised": type(e).__name__, "shard": e.shard,
+                                "ok": e.shard == sick}
+        out, avail = svc.lookup(qs, partial_results=True)
+        sick_keys = shard_map.route(qs) == sick
+        row["degraded"] = {
+            "mask_honest": bool(np.array_equal(avail, ~sick_keys)),
+            "healthy_identical": bool(
+                np.array_equal(out[avail], want[avail])),
+            "unavailable_fraction": float(sick_keys.mean()),
+        }
+        summary = svc.stats_summary()
+        row["summary_unhealthy"] = summary["unhealthy_shards"]
+        row["ok"] = bool(row["fail_stop"]["ok"]
+                         and row["degraded"]["mask_honest"]
+                         and row["degraded"]["healthy_identical"]
+                         and summary["unhealthy_shards"] == 1)
+    _ChaosDeadShard.armed = False
+    return row
+
+
+def run_chaos_bench(n_keys: int = 60_000, n_queries: int = 2048) -> dict:
+    keys = sosd_like("gmm", n_keys)
+    D = KeyPositions.fixed_record(keys, RECORD)
+    workdir = tempfile.mkdtemp(prefix="chaos_bench_")
+    path = os.path.join(workdir, "index.air")
+    write_index(path, _chaos_design(D), page_bytes=CHAOS_PAGE)
+    alt = os.path.join(workdir, "alt.air")
+    write_index(alt, _chaos_alt_design(D), page_bytes=CHAOS_PAGE)
+    rng = np.random.default_rng(0)
+    queries = rng.choice(D.keys, n_queries)
+
+    svc = IndexService(path, profile=None, spec=CHAOS_SPEC)
+    try:
+        meta_end = min(lm.offset for lm in svc.meta.layers)
+        n_res = len(svc._st.prefix)
+        resident_bytes = max(
+            (lm.size for lm in svc.meta.layers[len(svc.meta.layers) - n_res:]),
+            default=0)
+        t0 = time.perf_counter()
+        want = svc.lookup(queries)
+        clean_wall = time.perf_counter() - t0
+    finally:
+        svc.close()
+    clean_qps = n_queries / max(clean_wall, 1e-9)
+
+    results = {"n_keys": int(D.n), "n_queries": int(n_queries),
+               "page_bytes": CHAOS_PAGE,
+               "retry": CHAOS_RETRY.to_dict(),
+               "clean_qps": clean_qps,
+               "schedules": _chaos_schedules_row(path, queries, want,
+                                                 meta_end, resident_bytes),
+               "typed_failures": _chaos_typed_failures(path, queries,
+                                                       meta_end),
+               "swap_under_traffic": _chaos_swap(path, alt, D.keys),
+               "fleet_degradation": _chaos_fleet(D, workdir)}
+    for row in results["schedules"]:
+        row["qps_vs_clean"] = row["qps"] / max(clean_qps, 1e-9)
+    results["acceptance_chaos"] = bool(
+        all(r["identical"] for r in results["schedules"])
+        and all(v["ok"] for v in results["typed_failures"].values())
+        and results["swap_under_traffic"]["ok"]
+        and results["fleet_degradation"]["ok"])
+    return results
+
+
+def emit_chaos(results: dict) -> None:
+    for r in results["schedules"]:
+        emit(f"chaos_{r['schedule']}", 0.0,
+             f"identical={r['identical']} qps={r['qps']:.0f} "
+             f"({r['qps_vs_clean']:.2f}x clean) retries={r['io_retries']} "
+             f"degraded={r['degraded_runs']} crc={r['corrupt_pages']}")
+    for name, v in results["typed_failures"].items():
+        emit(f"chaos_{name}", 0.0, f"raised={v['raised']} ok={v['ok']}")
+    sw = results["swap_under_traffic"]
+    emit("chaos_swap_under_traffic", 0.0,
+         f"ok={sw['ok']} swaps={sw['swaps']} runs={sw['batch_runs']} "
+         f"mixed={sw['mixed_batches']} qps={sw['qps_during_swaps']:.0f}")
+    fl = results["fleet_degradation"]
+    emit("chaos_fleet_degradation", 0.0,
+         f"ok={fl['ok']} fail_stop={fl['fail_stop']['raised']} "
+         f"mask_honest={fl['degraded']['mask_honest']} "
+         f"unavailable={fl['degraded']['unavailable_fraction']:.2f}")
+    emit("chaos_acceptance", 0.0,
+         f"identity_under_faults={results['acceptance_chaos']}")
+
+
+def chaos_fatal_warnings(results: dict) -> list:
+    """FATAL list for the chaos gate: identity and typed-error contracts.
+    Wall-clock degradation under faults only warns (the injected stalls
+    and backoffs *should* cost something)."""
+    fatal = []
+    bad = [r["schedule"] for r in results["schedules"]
+           if not r["identical"]]
+    if bad:
+        fatal.append(f"chaos: results diverged under recoverable fault "
+                     f"schedules {bad} — retries/repairs must be "
+                     f"invisible in lookup results")
+    for name, v in results["typed_failures"].items():
+        if not v["ok"]:
+            fatal.append(f"chaos: {name} did not surface the typed error "
+                         f"(raised={v['raised']})")
+    sw = results["swap_under_traffic"]
+    if not sw["ok"]:
+        fatal.append(f"chaos: hot swap under traffic broke epoch isolation "
+                     f"(mixed={sw['mixed_batches']}, errors={sw['errors']})")
+    fl = results["fleet_degradation"]
+    if not fl["ok"]:
+        fatal.append("chaos: fleet shard degradation contract failed "
+                     f"(fail_stop={fl['fail_stop']}, "
+                     f"degraded={fl['degraded']})")
+    for r in results["schedules"]:
+        if r["qps_vs_clean"] < 0.05:
+            print(f"::warning::chaos schedule {r['schedule']} qps collapsed "
+                  f"to {r['qps_vs_clean']:.3f}x of fault-free serving")
+    return fatal
+
+
 def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
     keys = sosd_like("gmm", n_keys)
     D = KeyPositions.fixed_record(keys, RECORD)
@@ -653,8 +1024,32 @@ def main() -> None:
     ap.add_argument("--fleet-only", action="store_true",
                     help="run only the sharded-fleet scenario")
     ap.add_argument("--fleet-n-keys", type=int, default=FLEET_N_KEYS)
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the fault-injection gate (identity "
+                         "under faults is FATAL, qps degradation warns)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="run only the fault-injection gate")
+    ap.add_argument("--chaos-json", metavar="PATH", default=None,
+                    help="dump the chaos gate results "
+                         "(e.g. BENCH_chaos.json); implies --chaos")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+
+    chaos_results = None
+    if args.chaos or args.chaos_only or args.chaos_json:
+        chaos_results = run_chaos_bench()
+        emit_chaos(chaos_results)
+        if args.chaos_json:
+            with open(args.chaos_json, "w") as f:
+                json.dump(chaos_results, f, indent=2)
+            print(f"# wrote {args.chaos_json}", flush=True)
+        if args.chaos_only:
+            fatal = chaos_fatal_warnings(chaos_results)
+            if fatal:
+                for msg in fatal:
+                    print(f"::error::{msg}")
+                sys.exit(1)
+            return
 
     fleet_results = None
     if args.fleet_json or args.fleet_only:
@@ -740,6 +1135,8 @@ def main() -> None:
             fatal.append(
                 f"per-shard-tuned fleet did not beat the monolith "
                 f"(ratio={fleet_results['fleet_vs_mono']:.4f}, need < 0.999)")
+    if chaos_results is not None:
+        fatal.extend(chaos_fatal_warnings(chaos_results))
     if fatal:
         for msg in fatal:
             print(f"::error::{msg}")

@@ -33,14 +33,14 @@ from repro.core.storage import PROFILES, StorageProfile
 from .drift import (DriftReport, detect_drift, detect_drift_from_file,
                     drift_from_stats)
 from .index import Index, resolve_profile
-from .spec import ServeSpec, TuneSpec
+from .spec import RetryPolicy, ServeSpec, TuneSpec
 
 # fleet sits above the facade (its modules import repro.api.index/spec
 # directly), so this re-export must come after the locals above
 from repro.fleet import Fleet, FleetService, FleetSpec, ShardMap  # noqa: E402
 
 __all__ = [
-    "Index", "TuneSpec", "ServeSpec",
+    "Index", "TuneSpec", "ServeSpec", "RetryPolicy",
     "Fleet", "FleetSpec", "FleetService", "ShardMap",
     "SearchStrategy", "TuneResult", "TuneStats",
     "DriftReport", "detect_drift", "detect_drift_from_file",

@@ -302,13 +302,16 @@ class Index:
         self._path = path
         return self
 
-    def serve(self, spec: ServeSpec | None = None, **overrides):
+    def serve(self, spec: ServeSpec | None = None, backend_factory=None,
+              **overrides):
         """Open a batched :class:`repro.serve.IndexService` on the saved
         file.  Defaults flow from the facade: the tuned-for profile applies
         unless ``profile=`` overrides it, and the :class:`ServeSpec`
         recorded at save time (else field defaults) configures the engine.
         Keyword overrides are ServeSpec field replacements — e.g.
-        ``idx.serve(backend="pallas", pipeline_depth=2)``."""
+        ``idx.serve(backend="pallas", pipeline_depth=2)``.
+        ``backend_factory`` (``path -> StorageBackend``) passes through to
+        the engine — the chaos-testing seam."""
         if self._path is None:
             raise ValueError(
                 "serve() needs an on-disk index: call save(path) first "
@@ -338,7 +341,8 @@ class Index:
                 overrides.pop("cache_bytes")   # None keeps engine defaults
             base = (base if base is not None
                     else ServeSpec()).replace(**overrides)
-        return IndexService(self._path, profile=profile, spec=base)
+        return IndexService(self._path, profile=profile, spec=base,
+                            backend_factory=backend_factory)
 
     def observe(self, service=None, **kwargs):
         """Drift check against live serving: compare a service's observed

@@ -126,6 +126,76 @@ class TuneSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How the serving engine survives a flaky storage tier — frozen,
+    JSON-round-trippable, nested in :class:`ServeSpec`.
+
+    Every pread gets up to ``max_attempts`` tries; a failed attempt
+    (``OSError``, short read, or a read slower than ``pread_deadline_s``)
+    sleeps ``backoff_s · backoff_mult^attempt`` (capped at
+    ``max_backoff_s``) before the next.  A coalesced multi-page run that
+    exhausts its budget is split and retried at page granularity before
+    the engine gives up with a typed :class:`repro.serve.ReadError`.
+    ``batch_deadline_s`` bounds one whole ``lookup`` call; past it the
+    engine raises :class:`repro.serve.DeadlineExceededError` instead of
+    issuing more I/O.  Deadlines default to None (unbounded).  Reads that
+    needed retries are tagged in ``ServeStats`` so
+    ``observed_profile()``'s measured tier fit never ingests them.
+    """
+
+    max_attempts: int = 3
+    backoff_s: float = 0.001
+    backoff_mult: float = 2.0
+    max_backoff_s: float = 0.1
+    pread_deadline_s: float | None = None
+    batch_deadline_s: float | None = None
+
+    def validate(self) -> "RetryPolicy":
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, "
+                             f"got {self.max_attempts}")
+        if self.backoff_s < 0 or self.max_backoff_s < 0 \
+                or self.backoff_mult < 1.0:
+            raise ValueError(
+                f"bad backoff: backoff_s={self.backoff_s} "
+                f"backoff_mult={self.backoff_mult} "
+                f"max_backoff_s={self.max_backoff_s}")
+        for name in ("pread_deadline_s", "batch_deadline_s"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive or None, got {v}")
+        return self
+
+    def backoff(self, attempt: int) -> float:
+        """Sleep before retry number ``attempt`` (0-based failed attempt)."""
+        return min(self.backoff_s * self.backoff_mult ** attempt,
+                   self.max_backoff_s)
+
+    def replace(self, **changes) -> "RetryPolicy":
+        return dataclasses.replace(self, **changes)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RetryPolicy":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown RetryPolicy fields {sorted(unknown)}; "
+                f"allowed: {sorted(known)}")
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RetryPolicy":
+        return cls.from_dict(json.loads(s))
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeSpec:
     """Everything the serving engine needs beyond (file, deployment tier).
 
@@ -160,6 +230,17 @@ class ServeSpec:
                      background stage (0 = unpipelined serving).
     prefetch_layers: disk layers the prefetch stage walks ahead per
                      future batch (first-window preads only, no gallop).
+    retry:           :class:`RetryPolicy` for every pread the engine
+                     issues — attempts, exponential backoff, per-pread
+                     and per-batch deadlines, degraded-split retries.
+                     A JSON dict coerces on construction, so recorded
+                     metas round-trip.
+    verify_checksums: verify the per-page CRC32 table recorded in the
+                     paged layout on every cache fill (corrupt pages are
+                     refetched once, then raise
+                     :class:`repro.serve.CorruptPageError`).  Files
+                     without checksums, or a cache page size different
+                     from the file's layout, serve verify-skipped.
     """
 
     cache_bytes: tuple = ()
@@ -172,10 +253,15 @@ class ServeSpec:
     persist_stats: bool = False
     pipeline_depth: int = 0
     prefetch_layers: int = 1
+    retry: RetryPolicy = RetryPolicy()
+    verify_checksums: bool = True
 
     def __post_init__(self):
         object.__setattr__(self, "cache_bytes",
                            tuple(int(c) for c in self.cache_bytes))
+        if isinstance(self.retry, dict):   # JSON round-trip / replace(dict)
+            object.__setattr__(self, "retry",
+                               RetryPolicy.from_dict(self.retry))
 
     # -- validation ---------------------------------------------------------
     def validate(self) -> "ServeSpec":
@@ -200,6 +286,10 @@ class ServeSpec:
                 f"pipeline_depth={self.pipeline_depth} "
                 f"coalesce_gap={self.coalesce_gap} "
                 f"prefetch_layers={self.prefetch_layers}")
+        if not isinstance(self.retry, RetryPolicy):
+            raise ValueError(f"retry must be a RetryPolicy (or its dict "
+                             f"form), got {type(self.retry).__name__}")
+        self.retry.validate()
         return self
 
     def replace(self, **changes) -> "ServeSpec":

@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import zlib
 
 import numpy as np
 
@@ -54,6 +55,14 @@ class LayerMeta:
     offset: int      # byte offset of the layer within the file
     size: int        # serialized size (== Θ_l's s(Θ_l))
     end_pos: int     # position after the layer's last prediction target
+    # per-page CRC32 table (paged layouts written with checksums=True):
+    # entry k covers the layer's k-th page, computed over the page's bytes
+    # zero-padded to page_bytes (alignment gaps are file holes, so a
+    # padded CRC equals the CRC of what a reader actually sees — including
+    # the file's final, physically-short page).  None on densely-packed
+    # layouts and on files written before checksums existed; readers skip
+    # verification for those.
+    page_crcs: list | None = None
 
 
 @dataclasses.dataclass
@@ -110,6 +119,25 @@ def record_aligned_range(kind: str, lo, hi, layer_size: int):
     return a.astype(np.int64), b.astype(np.int64)
 
 
+def page_crc(chunk: bytes, page_bytes: int) -> int:
+    """CRC32 of one page as stored on disk, zero-padded to ``page_bytes``.
+
+    Layers are page-aligned in the paged layout, so every page holds bytes
+    of exactly one layer; a layer's last page is padded by the alignment
+    hole (zeros) — or physically truncated at EOF, which pads to the same
+    bytes.  Padding before hashing makes the CRC independent of which of
+    those two forms a reader receives."""
+    if len(chunk) < page_bytes:
+        chunk = chunk + b"\0" * (page_bytes - len(chunk))
+    return zlib.crc32(chunk) & 0xFFFFFFFF
+
+
+def layer_page_crcs(blob: bytes, page_bytes: int) -> list:
+    """The per-page CRC32 table of one page-aligned layer blob."""
+    return [page_crc(blob[k:k + page_bytes], page_bytes)
+            for k in range(0, max(len(blob), 1), page_bytes)]
+
+
 def _layer_bytes(layer) -> bytes:
     if isinstance(layer, StepLayer):
         rec = np.empty(layer.n_pieces, dtype=_STEP_DT)
@@ -126,11 +154,16 @@ def _layer_bytes(layer) -> bytes:
 
 
 def write_index(path: str, design: IndexDesign, data_record: int = 0,
-                page_bytes: int = 0, tune: dict | None = None) -> IndexFileMeta:
+                page_bytes: int = 0, tune: dict | None = None,
+                checksums: bool = True) -> IndexFileMeta:
     """Serialize a design.  ``page_bytes > 0`` aligns every layer to page
     boundaries (paged layout — the serving engine's cache unit); 0 keeps
     the densely-packed layout.  ``tune`` is an optional JSON-serializable
-    provenance dict recorded into the meta (see :class:`IndexFileMeta`)."""
+    provenance dict recorded into the meta (see :class:`IndexFileMeta`).
+    Paged layouts also record a per-page CRC32 table into each layer's
+    meta (``checksums=False`` writes the pre-checksum format — what every
+    file written before the table existed looks like; readers verify only
+    when the table is present)."""
     metas = []
     blobs = []
     for layer in design.layers:
@@ -138,8 +171,10 @@ def write_index(path: str, design: IndexDesign, data_record: int = 0,
         assert len(b) == layer.size_bytes, "serialized size must match s(Θ_l)"
         end_pos = int(layer.piece_pos[-1]) if isinstance(layer, StepLayer) \
             else int(layer.clamp_hi)
+        crcs = layer_page_crcs(b, page_bytes) \
+            if page_bytes > 0 and checksums else None
         metas.append(LayerMeta(kind=layer.kind, offset=0, size=len(b),
-                               end_pos=end_pos))
+                               end_pos=end_pos, page_crcs=crcs))
         blobs.append(b)
     meta = IndexFileMeta(layers=metas, data_size=design.data.size_bytes,
                          data_record=data_record, page_bytes=page_bytes,
@@ -172,11 +207,23 @@ def write_index(path: str, design: IndexDesign, data_record: int = 0,
     return meta
 
 
-def read_meta(fd: int) -> IndexFileMeta:
-    head = os.pread(fd, 16, 0)
+def parse_meta(pread) -> IndexFileMeta:
+    """Read + decode the header through any ``pread(nbytes, offset)``
+    callable — the seam that lets the serving engine's fault-tolerant
+    backend (retries, fault injection) own the meta read too.  Raises
+    ``ValueError`` on a bad magic or an undecodable header, so a torn
+    read is retryable rather than an assert."""
+    head = pread(16, 0)
+    if len(head) != 16:
+        raise ValueError(f"bad index file: short header ({len(head)} B)")
     magic, hlen = np.frombuffer(head, dtype="<u8")
-    assert magic == MAGIC, "bad index file"
-    return IndexFileMeta.from_json(os.pread(fd, int(hlen), 16).decode())
+    if magic != MAGIC:
+        raise ValueError(f"bad index file: magic {int(magic):#x}")
+    return IndexFileMeta.from_json(pread(int(hlen), 16).decode())
+
+
+def read_meta(fd: int) -> IndexFileMeta:
+    return parse_meta(lambda n, off: os.pread(fd, n, off))
 
 
 def load_index(path: str, data: KeyPositions) -> IndexDesign:

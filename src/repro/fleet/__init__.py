@@ -20,11 +20,12 @@ See :mod:`repro.fleet.fleet` (facade), :mod:`repro.fleet.spec`
 from .budget import (CachePlan, ShardDemand, allocate_cache_budget,
                      demand_from_design, demand_from_meta, split_cache_tiers)
 from .fleet import Fleet
-from .service import FleetService
+from .service import FleetService, ShardUnavailableError
 from .spec import FleetSpec, ShardMap
 
 __all__ = [
     "Fleet", "FleetSpec", "FleetService", "ShardMap",
+    "ShardUnavailableError",
     "CachePlan", "ShardDemand", "allocate_cache_budget",
     "demand_from_design", "demand_from_meta", "split_cache_tiers",
 ]

@@ -201,7 +201,7 @@ class Fleet:
     # -- serving ------------------------------------------------------------
     def serve(self, spec: ServeSpec | None = None,
               total_cache_bytes: int | None = None,
-              **overrides) -> FleetService:
+              backend_factories=None, **overrides) -> FleetService:
         """Open a :class:`FleetService` over the saved shard files.
 
         The serve template is the fleet spec's ``serve`` (or ``spec=``),
@@ -237,7 +237,8 @@ class Fleet:
                 for i in range(len(self._shards))]
         paths = [idx.path for idx in self._shards]
         return FleetService(self._shard_map, paths, self._bases,
-                            profile=profile, specs=specs, plan=plan)
+                            profile=profile, specs=specs, plan=plan,
+                            backend_factories=backend_factories)
 
     def allocate_cache(self, total_bytes: int, profile=None) -> CachePlan:
         """The marginal-gain cache plan for a given budget: per-shard

@@ -14,14 +14,36 @@ shard's base back, so callers see one global byte space.
 The scatter-gather is *bit-identical* to looking each key up in its
 shard's service directly: routing only decides which engine serves a key,
 never how.
+
+Failure isolation: a shard whose engine exhausts its retry budget (any
+:class:`repro.serve.StorageError`) is marked *unhealthy* and taken out of
+rotation instead of failing every later fleet call.  By default a lookup
+touching an unhealthy (or just-failing) shard raises
+:class:`ShardUnavailableError`; with ``partial_results=True`` the healthy
+shards' results return alongside an explicit per-key availability mask —
+the caller chooses fail-stop or degraded serving, the fleet never
+silently drops keys.
 """
 from __future__ import annotations
 
 import numpy as np
 
+from repro.serve.backend import StorageError
 from repro.serve.index_service import IndexService
 
 from .spec import ShardMap
+
+
+class ShardUnavailableError(StorageError):
+    """A lookup needed a shard that is unhealthy (its engine spent a retry
+    budget earlier, or its backend just failed).  Carries ``shard`` and
+    the underlying ``cause`` string; pass ``partial_results=True`` to get
+    the healthy shards' results plus an availability mask instead."""
+
+    def __init__(self, msg: str, *, shard=None, cause=None):
+        super().__init__(msg)
+        self.shard = shard
+        self.cause = cause
 
 
 class FleetService:
@@ -40,10 +62,15 @@ class FleetService:
                ``cache_bytes`` overridden by the budget allocator.
     plan:      the :class:`repro.fleet.CachePlan` that produced those
                cache sizes (introspection only; may be None).
+    backend_factories:
+               per-shard ``path -> StorageBackend`` list (or one factory
+               for every shard) forwarded to each shard's engine — the
+               chaos harness injects per-shard fault schedules here.
     """
 
     def __init__(self, shard_map: ShardMap, paths, bases, *,
-                 profile="azure_ssd", specs=None, plan=None):
+                 profile="azure_ssd", specs=None, plan=None,
+                 backend_factories=None):
         paths = list(paths)
         bases = [int(b) for b in bases]
         if len(paths) != shard_map.n_shards or len(bases) != len(paths):
@@ -54,75 +81,173 @@ class FleetService:
             specs = [None] * len(paths)
         if len(specs) != len(paths):
             raise ValueError(f"{len(specs)} specs for {len(paths)} shards")
+        if backend_factories is None or callable(backend_factories):
+            backend_factories = [backend_factories] * len(paths)
+        if len(backend_factories) != len(paths):
+            raise ValueError(f"{len(backend_factories)} backend factories "
+                             f"for {len(paths)} shards")
         self.shard_map = shard_map
         self.paths = paths
         self.bases = bases
         self.plan = plan
+        self.healthy: list[bool] = [True] * len(paths)
+        self.errors: list[str | None] = [None] * len(paths)
         self.services: list[IndexService] = []
         try:
-            for path, spec in zip(paths, specs):
+            for path, spec, bf in zip(paths, specs, backend_factories):
                 self.services.append(
-                    IndexService(path, profile=profile, spec=spec))
+                    IndexService(path, profile=profile, spec=spec,
+                                 backend_factory=bf))
         except Exception:
             self.close()
             raise
+
+    def _mark_unhealthy(self, sid: int, exc: BaseException) -> None:
+        """Take a shard out of rotation after its engine gave up (typed
+        storage failure past the retry budget).  Its service object stays
+        open — stats remain inspectable and an operator can swap in a
+        repaired file and call :meth:`mark_healthy`."""
+        self.healthy[sid] = False
+        self.errors[sid] = f"{type(exc).__name__}: {exc}"
+
+    def mark_healthy(self, sid: int) -> None:
+        """Put a shard back in rotation (after repair / :meth:`swap`)."""
+        self.healthy[sid] = True
+        self.errors[sid] = None
 
     @property
     def n_shards(self) -> int:
         return len(self.services)
 
     # -- lookups ------------------------------------------------------------
-    def lookup(self, queries) -> np.ndarray:
+    def lookup(self, queries, *, partial_results: bool = False):
         """Batched Alg. 1 across the fleet → (q, 2) int64 global byte
         ranges, in input order.  Identical to routing each key and calling
         its shard's service alone — scatter-gather changes scheduling,
-        not results."""
+        not results.
+
+        A key routed to an unhealthy shard (or one that fails past its
+        retry budget during this call) raises
+        :class:`ShardUnavailableError` by default.  With
+        ``partial_results=True`` the return is ``(out, available)``: rows
+        of keys the fleet could not serve are ``(-1, -1)`` and their
+        ``available`` mask entries False — healthy shards' results are
+        exactly what the default path would have returned."""
         q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
         out = np.empty((len(q), 2), dtype=np.int64)
+        avail = np.ones(len(q), dtype=bool)
         for sid, pos in self.shard_map.sub_batches(q):
-            out[pos] = self.services[sid].lookup(q[pos]) + self.bases[sid]
+            res = self._serve_shard(
+                sid, pos, partial_results,
+                lambda svc: svc.lookup(q[pos]) + self.bases[sid])
+            if res is None:
+                out[pos] = -1
+                avail[pos] = False
+            else:
+                out[pos] = res
+        if partial_results:
+            return out, avail
         return out
 
-    def lookup_batches(self, batches) -> list:
+    def _serve_shard(self, sid: int, pos, partial: bool, fn):
+        """Run ``fn`` against shard ``sid``'s service under the fleet's
+        failure-isolation contract: an unhealthy shard is skipped, a
+        typed storage failure marks it unhealthy — then either None comes
+        back (``partial``: the caller masks those keys) or the
+        :class:`ShardUnavailableError` propagates."""
+        if not self.healthy[sid]:
+            if partial:
+                return None
+            raise ShardUnavailableError(
+                f"shard {sid} ({self.paths[sid]!r}) is unhealthy: "
+                f"{self.errors[sid]}", shard=sid, cause=self.errors[sid])
+        try:
+            return fn(self.services[sid])
+        except StorageError as e:
+            self._mark_unhealthy(sid, e)
+            if partial:
+                return None
+            raise ShardUnavailableError(
+                f"shard {sid} ({self.paths[sid]!r}) failed past its retry "
+                f"budget: {e}", shard=sid, cause=str(e)) from e
+
+    def lookup_batches(self, batches, *, partial_results: bool = False):
         """Serve a sequence of batches, keeping each shard's two-stage
         prefetch pipeline fed: every shard receives its sub-batches of
         *all* batches in one ``lookup_batches`` call (so its stage-1
         worker prefetches across batch boundaries), then results gather
-        per input batch in input order."""
+        per input batch in input order.
+
+        Failure isolation matches :meth:`lookup`; with
+        ``partial_results=True`` the return is ``(outs, avails)`` — one
+        availability mask per input batch, and a shard that fails mid-way
+        masks *all* its keys in every batch (its pipeline results cannot
+        be trusted to a batch boundary)."""
         batches = [np.atleast_1d(np.asarray(b, dtype=np.uint64))
                    for b in batches]
         outs = [np.empty((len(b), 2), dtype=np.int64) for b in batches]
+        avails = [np.ones(len(b), dtype=bool) for b in batches]
         per_shard: dict[int, list] = {}
         for bi, b in enumerate(batches):
             for sid, pos in self.shard_map.sub_batches(b):
                 per_shard.setdefault(sid, []).append((bi, pos))
         for sid in sorted(per_shard):
             subs = per_shard[sid]
-            res = self.services[sid].lookup_batches(
-                [batches[bi][pos] for bi, pos in subs])
-            for (bi, pos), r in zip(subs, res):
-                outs[bi][pos] = r + self.bases[sid]
+            res = self._serve_shard(
+                sid, None, partial_results,
+                lambda svc: svc.lookup_batches(
+                    [batches[bi][pos] for bi, pos in subs]))
+            for (bi, pos), r in zip(subs, res if res is not None
+                                    else [None] * len(subs)):
+                if r is None:
+                    outs[bi][pos] = -1
+                    avails[bi][pos] = False
+                else:
+                    outs[bi][pos] = r + self.bases[sid]
+        if partial_results:
+            return outs, avails
         return outs
 
     # -- observation ---------------------------------------------------------
     def stats_summary(self) -> dict:
         """Fleet-wide aggregates plus per-shard snapshots.  The fleet's
         per-query observed cost is the traffic-weighted mean of the
-        shards' (Eq. 6-comparable, open-amortized) per-query costs."""
+        shards' (Eq. 6-comparable, open-amortized) per-query costs.
+
+        Never raises on a sick shard: an unhealthy or already-closed
+        service still gets a row (``healthy``/``error`` say why it is
+        thin) — a fleet dashboard must render *because* something is
+        wrong, not fail when it is."""
         per_shard = []
         tq = modeled = walk = 0.0
         preads = bytes_fetched = hits = fetched = 0
+        n_unhealthy = 0
         for sid, svc in enumerate(self.services):
-            st = svc.stats
-            per_shard.append({
-                "shard": sid, "queries": st.queries,
-                "hit_rate": st.hit_rate, "preads": st.preads,
-                "bytes_fetched": st.bytes_fetched,
-                "query_modeled_us": (st.query_modeled_seconds * 1e6
-                                     if st.queries else None),
-                "cache_bytes": list(svc.cache.cap_pages[i] * svc.page_bytes
-                                    for i in range(svc.cache.n_tiers)),
-            })
+            row = {"shard": sid, "healthy": self.healthy[sid],
+                   "error": self.errors[sid]}
+            if not self.healthy[sid]:
+                n_unhealthy += 1
+            try:
+                st = svc.stats
+                row.update({
+                    "queries": st.queries,
+                    "hit_rate": st.hit_rate, "preads": st.preads,
+                    "bytes_fetched": st.bytes_fetched,
+                    "io_retries": st.io_retries,
+                    "io_timeouts": st.io_timeouts,
+                    "degraded_runs": st.degraded_runs,
+                    "corrupt_pages": st.corrupt_pages,
+                    "query_modeled_us": (st.query_modeled_seconds * 1e6
+                                         if st.queries else None),
+                    "cache_bytes": list(
+                        svc.cache.cap_pages[i] * svc.page_bytes
+                        for i in range(svc.cache.n_tiers)),
+                })
+            except Exception as e:   # closed / half-open shard: thin row
+                row["error"] = row["error"] or f"{type(e).__name__}: {e}"
+                per_shard.append(row)
+                continue
+            per_shard.append(row)
             tq += st.queries
             modeled += (st.modeled_seconds - st.open_modeled_seconds
                         + st.data_modeled_seconds)
@@ -140,6 +265,8 @@ class FleetService:
             "query_modeled_us": (modeled / tq * 1e6) if tq else None,
             "walk_query_us": (walk / tq * 1e6) if tq else None,
             "plan": self.plan.to_dict() if self.plan is not None else None,
+            "healthy_shards": len(self.services) - n_unhealthy,
+            "unhealthy_shards": n_unhealthy,
             "shards": per_shard,
         }
 

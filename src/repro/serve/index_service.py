@@ -50,11 +50,14 @@ from collections import OrderedDict
 import numpy as np
 
 from repro.core.descent import coalesce_ranges, descend_layers
-from repro.core.serialize import (_BAND_DT, _STEP_DT, gallop_step, page_span,
-                                  predict_from_records, read_meta,
-                                  record_aligned_range, window_misses)
+from repro.core.serialize import (_BAND_DT, _STEP_DT, gallop_step, page_crc,
+                                  page_span, parse_meta,
+                                  predict_from_records, record_aligned_range,
+                                  window_misses)
 from repro.core.storage import (CachedProfile, MeasuredProfile, PROFILES,
                                 StorageProfile)
+from repro.serve.backend import (CorruptPageError, DeadlineExceededError,
+                                 FileBackend, ReadError, StorageBackend)
 
 DEFAULT_PAGE_BYTES = 4096
 
@@ -164,6 +167,15 @@ class ServeStats:
     bytes_from_cache: int = 0
     open_bytes: int = 0         # root + resident layers read at open
     retries: int = 0            # window extensions (band inter-key misses)
+    # -- fault-tolerance counters (RetryPolicy + checksums + hot swap) ----
+    io_retries: int = 0         # failed pread attempts that were retried
+    io_timeouts: int = 0        # preads past the per-pread deadline
+    degraded_runs: int = 0      # coalesced runs split to page granularity
+    #                             after exhausting their retry budget
+    corrupt_pages: int = 0      # CRC32 failures detected on cache fill
+    #                             (each is refetched once before raising)
+    swaps: int = 0              # live index hot-swaps performed (counted on
+    #                             the service's NEW epoch stats)
     device_batches: int = 0     # batches whose resident descent ran fused
     #                             on a device backend (pallas or jnp)
     pipelined_batches: int = 0  # batches served through lookup_batches'
@@ -187,11 +199,14 @@ class ServeStats:
     # the deployment tier's Eq. 6 value realized on observed queries
     walk_modeled_seconds: float = 0.0
     pread_seconds: float = 0.0  # measured wall-clock inside os.pread
-    # rotating reservoir of measured (Δ bytes, seconds, overlapped) pread
-    # samples — the raw material of observed_profile(); capped at
+    # rotating reservoir of measured (Δ bytes, seconds, overlapped, tainted)
+    # pread samples — the raw material of observed_profile(); capped at
     # READ_SAMPLE_CAP.  ``overlapped`` tags preads issued by the prefetch
     # stage: they ran concurrently with compute and other I/O, so their
-    # wall time measures queueing as much as the tier.
+    # wall time measures queueing as much as the tier.  ``tainted`` tags
+    # reads that needed retries, blew a deadline, or repaired a corrupt
+    # page: their wall time measures the *fault*, not the tier, and
+    # :func:`measured_backing_profile` must never fit them.
     read_samples: list = dataclasses.field(default_factory=list)
 
     @property
@@ -227,12 +242,12 @@ class ServeStats:
         return self.walk_modeled_seconds / self.queries
 
     def record_read(self, nbytes: int, seconds: float,
-                    overlapped: bool = False) -> None:
+                    overlapped: bool = False, tainted: bool = False) -> None:
         self.pread_seconds += seconds
         if len(self.read_samples) >= READ_SAMPLE_CAP:
             del self.read_samples[0]          # rotate: oldest sample leaves
         self.read_samples.append((int(nbytes), float(seconds),
-                                  bool(overlapped)))
+                                  bool(overlapped), bool(tainted)))
 
     def roofline(self) -> dict:
         """Compute-vs-I/O attribution of served traffic: measured wall
@@ -255,8 +270,8 @@ class ServeStats:
 
     def snapshot(self) -> dict:
         d = dataclasses.asdict(self)
-        d["read_samples"] = [[int(n), float(s), bool(o)]
-                             for n, s, o in self.read_samples]
+        d["read_samples"] = [[int(r[0]), float(r[1]), bool(r[2]), bool(r[3])]
+                             for r in self.read_samples]
         d["hit_rate"] = self.hit_rate
         d["roofline"] = self.roofline()
         # NaN (no queries yet) is not valid strict JSON — null it out
@@ -269,8 +284,8 @@ class ServeStats:
     def from_snapshot(cls, d: dict) -> "ServeStats":
         """Inverse of :meth:`snapshot` (derived keys are recomputed, so
         ``from_snapshot(s.snapshot())`` round-trips exactly).  Pre-pipeline
-        snapshots carried 2-element read samples — they load as
-        non-overlapped."""
+        snapshots carried 2-element read samples (→ non-overlapped) and
+        pre-reliability ones 3-element samples (→ non-tainted)."""
         if not isinstance(d, dict):
             raise TypeError(f"snapshot must be an object, "
                             f"got {type(d).__name__}")
@@ -285,7 +300,9 @@ class ServeStats:
                 continue
             kw[k] = int(v) if isinstance(f.default, int) else float(v)
         kw["read_samples"] = [
-            (int(r[0]), float(r[1]), bool(r[2]) if len(r) > 2 else False)
+            (int(r[0]), float(r[1]),
+             bool(r[2]) if len(r) > 2 else False,
+             bool(r[3]) if len(r) > 3 else False)
             for r in d.get("read_samples", [])]
         return cls(**kw)
 
@@ -390,11 +407,14 @@ def measured_backing_profile(stats: ServeStats,
     tier — fitting them would *under-price* the tier exactly when
     pipelining hides latency best.  They are excluded whenever enough
     blocking samples remain; a fully-pipelined window falls back to all
-    samples rather than refusing to fit."""
-    blocking = [r for r in stats.read_samples
-                if not (len(r) > 2 and r[2])]
-    samples = blocking if len(blocking) >= min_samples \
-        else stats.read_samples
+    samples rather than refusing to fit.  Samples tagged ``tainted``
+    (retried, stalled past a deadline, or part of a corrupt-page repair)
+    measure the *fault*, not the tier, and are excluded unconditionally —
+    a flaky disk must not read as a slow one."""
+    clean = [r for r in stats.read_samples
+             if not (len(r) > 3 and r[3])]
+    blocking = [r for r in clean if not (len(r) > 2 and r[2])]
+    samples = blocking if len(blocking) >= min_samples else clean
     if len(samples) < min_samples:
         return None
     sizes = np.asarray([r[0] for r in samples], dtype=np.float64)
@@ -477,6 +497,27 @@ def _fold_legacy_kwargs(spec, legacy: dict):
     return (spec or ServeSpec()).replace(**changes)
 
 
+class _ServeState:
+    """One serving *epoch*: everything :meth:`IndexService.swap` replaces
+    atomically — the storage backend, decoded meta, resident prefix,
+    block cache, page-CRC table, and that epoch's :class:`ServeStats`.
+    Lookups pin the state for their whole batch (``pins`` refcount under
+    the service lock), so a swap never closes a backend mid-descent and
+    no batch ever mixes bytes from two index files."""
+
+    __slots__ = ("path", "storage", "file_size", "meta", "tune_meta",
+                 "page_bytes", "cache", "page_crcs", "resident",
+                 "prefix_lis", "prefix", "packed", "device_active",
+                 "stats", "pins", "retired")
+
+    def __init__(self, path: str, storage: StorageBackend):
+        self.path = path
+        self.storage = storage
+        self.stats = ServeStats()
+        self.pins = 0
+        self.retired = False
+
+
 class IndexService:
     """Serve batched lookups against a serialized index file.
 
@@ -489,10 +530,26 @@ class IndexService:
               outside the spec on purpose — the same spec serves the same
               file on any tier.
     spec:     a :class:`repro.api.ServeSpec` with everything else: cache
-              tiers, residency, descent backend, pipeline knobs.  ``None``
-              uses the spec recorded in the file meta by
+              tiers, residency, descent backend, pipeline knobs, the
+              :class:`repro.api.RetryPolicy`, checksum verification.
+              ``None`` uses the spec recorded in the file meta by
               ``Index.save(serve_spec=...)`` when present, else defaults.
               See the ServeSpec docstring for the field reference.
+    backend_factory:
+              ``path -> StorageBackend`` used to open the file (and every
+              file later :meth:`swap`-ped in).  Defaults to
+              :class:`repro.serve.FileBackend`; chaos tests pass a
+              :class:`repro.serve.FaultInjectingBackend` wrapper here.
+
+    Every byte is read through the backend with ``spec.retry`` semantics:
+    failed or short preads back off and retry, a failing coalesced run
+    degrades to page-granularity retries, per-page CRC32 checksums (when
+    the file carries them) are verified before a page may enter the
+    cache, and the typed errors of :mod:`repro.serve.backend` surface
+    once the budget is spent.  All epoch-specific objects live in a
+    :class:`_ServeState`; ``meta``/``cache``/``stats``/... are properties
+    onto the current epoch so :meth:`swap` can replace them atomically
+    under live traffic.
 
     The pre-spec keyword surface (``cache_bytes=``, ``use_device=``, ...)
     survives as warn-once deprecation shims that fold into the spec;
@@ -500,75 +557,170 @@ class IndexService:
     """
 
     def __init__(self, path: str, *, profile="azure_ssd", spec=None,
-                 **legacy):
-        self.fd = None              # __del__ must be safe mid-__init__
+                 backend_factory=None, **legacy):
+        self._state = None          # __del__ must be safe mid-__init__
+        self._final_state = None
         self._executor = None
+        self._prefetch_exc = None
         if legacy:
             spec = _fold_legacy_kwargs(spec, legacy)
         self.path = path
-        self.fd = os.open(path, os.O_RDONLY)
-        self.meta = read_meta(self.fd)
-        self.tune_meta = self.meta.tune   # facade provenance (may be None)
-        if spec is None:
-            spec = self._spec_from_meta()
-        if spec is None:
-            from repro.api.spec import ServeSpec
-            spec = ServeSpec()
-        self.spec = spec.validate()
+        self._backend_factory = backend_factory or FileBackend
         self.profile = PROFILES[profile] if isinstance(profile, str) else profile
+        # one lock covers cache + stats + the epoch pointer: the prefetch
+        # worker shares them with the serving thread; preads themselves
+        # (and their retry sleeps) run outside it
+        self._mu = threading.Lock()
+        st, spec = self._open_state(path, spec)
+        self._apply_spec(spec)
+        self._state = st
+
+    def _apply_spec(self, spec) -> None:
+        """Service-level views of a resolved (validated) ServeSpec —
+        everything that is deployment policy rather than epoch state."""
+        self.spec = spec
+        self.retry = spec.retry
+        self.verify_checksums = bool(spec.verify_checksums)
         self.cache_profile = (PROFILES[spec.cache_profile]
                               if spec.cache_profile else None)
-        # precedence: spec field > file's paged layout > default
-        self.page_bytes = int(spec.page_bytes or self.meta.page_bytes
-                              or DEFAULT_PAGE_BYTES)
-        cache_bytes = spec.cache_bytes
-        if not cache_bytes:         # TuneSpec-recorded capacities, then default
-            tspec = (self.tune_meta or {}).get("spec") or {}
-            cache_bytes = tuple(tspec.get("cache_bytes") or ()) or (1 << 20,)
-        self.cache = TieredBlockCache(cache_bytes, self.page_bytes)
         self.coalesce_gap = int(spec.coalesce_gap)
         self.interpret = spec.interpret
         self.persist_stats = bool(spec.persist_stats)
         self.backend = spec.backend
-        self.stats = ServeStats()
-        # one lock covers cache + stats: the prefetch worker shares both
-        # with the serving thread; preads themselves run outside it
-        self._mu = threading.Lock()
 
-        L = len(self.meta.layers)
-        n_res = min(max(int(spec.resident_layers), 1), L) if L else 0
-        self._resident: dict[int, dict] = {}
-        for li in range(L - n_res, L):
-            lm = self.meta.layers[li]
-            t0 = time.perf_counter()
-            raw = os.pread(self.fd, lm.size, lm.offset)
-            self.stats.record_read(lm.size, time.perf_counter() - t0)
-            self._resident[li] = self._parse_layer(lm, raw)
-            self.stats.open_bytes += lm.size
-            if self.profile is not None:
-                t = float(self.profile(lm.size))
-                self.stats.modeled_seconds += t
-                self.stats.open_modeled_seconds += t
-        # the resident prefix, top-down (root first) — the fused kernel's
-        # layer order; row L−1 of its output feeds the disk walk
-        self._prefix_lis = list(range(L - 1, L - n_res - 1, -1))
-        self._prefix = [self._resident[li] for li in self._prefix_lis]
-        self._packed = None
-        self.device_active = False
-        if self.backend != "numpy" and self._prefix:
-            from repro.kernels import fused_descent as fd
-            self._packed = fd.pack_prefix(self._prefix)
-            if self._packed is not None:
-                try:
-                    import jax  # noqa: F401  (gated: CPU-only containers)
-                except Exception:
-                    self._packed = None
-            self.device_active = self._packed is not None
+    def _open_state(self, path: str, spec):
+        """Open ``path`` into a fresh :class:`_ServeState` (meta read,
+        spec resolution, CRC table, resident prefix, cold cache) without
+        touching the currently-serving epoch.  Returns
+        ``(state, resolved_spec)``; the backend is closed on any failure."""
+        from repro.api.spec import RetryPolicy, ServeSpec
+        storage = self._backend_factory(path)
+        try:
+            st = _ServeState(path, storage)
+            st.file_size = int(storage.size())
+            policy = spec.retry if spec is not None else RetryPolicy()
+            st.meta = self._read_meta(st, policy)
+            st.tune_meta = st.meta.tune  # facade provenance (may be None)
+            if spec is None:
+                spec = self._spec_from_meta(st.tune_meta)
+            if spec is None:
+                spec = ServeSpec()
+            spec = spec.validate()
+            policy = spec.retry
+            # precedence: spec field > file's paged layout > default
+            st.page_bytes = int(spec.page_bytes or st.meta.page_bytes
+                                or DEFAULT_PAGE_BYTES)
+            cache_bytes = spec.cache_bytes
+            if not cache_bytes:   # TuneSpec-recorded capacities, then default
+                tspec = (st.tune_meta or {}).get("spec") or {}
+                cache_bytes = tuple(tspec.get("cache_bytes") or ()) or (1 << 20,)
+            st.cache = TieredBlockCache(cache_bytes, st.page_bytes)
+            # CRC table: file page id -> expected CRC32.  Only meaningful
+            # when the engine pages exactly as the writer did — a spec
+            # page_bytes override re-tiles the file and the per-page CRCs
+            # no longer line up, so verification is skipped (same as an
+            # old file without checksums).
+            st.page_crcs = None
+            if spec.verify_checksums and st.page_bytes \
+                    and st.page_bytes == st.meta.page_bytes:
+                table = {}
+                for lm in st.meta.layers:
+                    if lm.page_crcs:
+                        base = int(lm.offset) // st.page_bytes
+                        for k, c in enumerate(lm.page_crcs):
+                            table[base + k] = int(c)
+                st.page_crcs = table or None
 
-    def _spec_from_meta(self):
+            L = len(st.meta.layers)
+            n_res = min(max(int(spec.resident_layers), 1), L) if L else 0
+            st.resident = {}
+            for li in range(L - n_res, L):
+                lm = st.meta.layers[li]
+                raw = self._load_resident(st, lm, policy)
+                st.resident[li] = self._parse_layer(lm, raw)
+                st.stats.open_bytes += lm.size
+                if self.profile is not None:
+                    t = float(self.profile(lm.size))
+                    st.stats.modeled_seconds += t
+                    st.stats.open_modeled_seconds += t
+            # the resident prefix, top-down (root first) — the fused
+            # kernel's layer order; row L−1 of its output feeds the disk
+            # walk
+            st.prefix_lis = list(range(L - 1, L - n_res - 1, -1))
+            st.prefix = [st.resident[li] for li in st.prefix_lis]
+            st.packed = None
+            st.device_active = False
+            if spec.backend != "numpy" and st.prefix:
+                from repro.kernels import fused_descent as fd
+                st.packed = fd.pack_prefix(st.prefix)
+                if st.packed is not None:
+                    try:
+                        import jax  # noqa: F401  (gated: CPU-only containers)
+                    except Exception:
+                        st.packed = None
+                st.device_active = st.packed is not None
+        except BaseException:
+            storage.close()
+            raise
+        return st, spec
+
+    def _read_meta(self, st, policy):
+        """Decode the file header through the backend, retrying torn or
+        failing header reads under ``policy`` (a short/corrupt header
+        parses as ``ValueError`` — retryable, unlike the old assert)."""
+        attempt = 0
+        while True:
+            try:
+                return parse_meta(st.storage.pread)
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                attempt += 1
+                if attempt >= policy.max_attempts:
+                    raise ReadError(
+                        f"could not read index meta from {st.path!r} after "
+                        f"{attempt} attempt(s): {e}",
+                        path=st.path, offset=0, attempts=attempt) from e
+                with self._mu:
+                    st.stats.io_retries += 1
+                time.sleep(policy.backoff(attempt - 1))
+
+    def _load_resident(self, st, lm, policy) -> bytes:
+        """One resident layer's bytes, short-read-safe and CRC-verified
+        when the file carries checksums — resident bytes never pass the
+        cache-fill check, so the open path must verify on its own.  A
+        corrupt layer is refetched once, then raises
+        :class:`CorruptPageError`."""
+        raw, dt, tainted = self._pread_retry(st, lm.size, lm.offset,
+                                             policy=policy)
+        P = st.page_bytes
+        crcs = st.page_crcs and getattr(lm, "page_crcs", None)
+        if crcs:
+            base = int(lm.offset) // P
+            bad = [k for k in range(len(crcs))
+                   if page_crc(raw[k * P:(k + 1) * P], P)
+                   != st.page_crcs.get(base + k)]
+            if bad:
+                with self._mu:
+                    st.stats.corrupt_pages += len(bad)
+                    st.stats.record_read(len(raw), dt, tainted=True)
+                raw, dt, _ = self._pread_retry(st, lm.size, lm.offset,
+                                               policy=policy)
+                tainted = True
+                still = [k for k in bad
+                         if page_crc(raw[k * P:(k + 1) * P], P)
+                         != st.page_crcs.get(base + k)]
+                if still:
+                    raise CorruptPageError(
+                        f"resident layer page {base + still[0]} of "
+                        f"{st.path!r} failed CRC32 verification twice",
+                        path=st.path, page_id=base + still[0])
+        with self._mu:
+            st.stats.record_read(len(raw), dt, tainted=tainted)
+        return raw
+
+    def _spec_from_meta(self, tune_meta):
         """The ServeSpec recorded by ``Index.save(serve_spec=...)``, or
         None (missing / forward-version meta serves on defaults)."""
-        d = (self.tune_meta or {}).get("serve")
+        d = (tune_meta or {}).get("serve")
         if d is None:
             return None
         from repro.api.spec import ServeSpec
@@ -577,23 +729,143 @@ class IndexService:
         except (TypeError, ValueError):
             return None
 
+    # -- epoch plumbing ------------------------------------------------------
+    @property
+    def _st(self):
+        """Current epoch for attribute reads; after close, the final one
+        (stats stay inspectable on a closed service)."""
+        st = self._state
+        return st if st is not None else self._final_state
+
+    @property
+    def meta(self):
+        return self._st.meta
+
+    @property
+    def tune_meta(self):
+        return self._st.tune_meta
+
+    @property
+    def stats(self) -> ServeStats:
+        return self._st.stats
+
+    @property
+    def cache(self) -> TieredBlockCache:
+        return self._st.cache
+
+    @property
+    def page_bytes(self) -> int:
+        return self._st.page_bytes
+
+    @property
+    def device_active(self) -> bool:
+        return self._st.device_active
+
+    @property
+    def _prefix(self) -> list:
+        return self._st.prefix
+
+    @property
+    def storage(self) -> StorageBackend | None:
+        st = self._state
+        return st.storage if st is not None else None
+
+    @property
+    def fd(self):
+        """The current epoch's file descriptor when the backend has one
+        (:class:`FileBackend` does); None on other backends or after
+        close.  Kept for the pre-backend-seam surface."""
+        st = self._state
+        return getattr(st.storage, "fd", None) if st is not None else None
+
+    def _pin(self) -> _ServeState:
+        """Claim the current epoch for one batch.  Must be paired with
+        :meth:`_unpin` (the last unpin of a retired epoch closes its
+        backend)."""
+        with self._mu:
+            st = self._state
+            if st is None:
+                raise RuntimeError("IndexService is closed")
+            st.pins += 1
+            return st
+
+    def _unpin(self, st: _ServeState) -> None:
+        with self._mu:
+            st.pins -= 1
+            dead = st.retired and st.pins == 0
+        if dead:
+            st.storage.close()
+
+    def swap(self, path: str, *, spec=None) -> None:
+        """Hot-swap serving to ``path`` (e.g. a freshly retuned index)
+        under live traffic.  The new file is fully opened — meta, CRC
+        table, resident prefix, cold cache, fresh :class:`ServeStats` —
+        *before* the switch, and the switch itself is one pointer move
+        under the service lock: batches already in flight pinned the old
+        epoch at entry and finish on its backend + cache; batches
+        arriving after ``swap`` returns serve entirely from the new one.
+        No result ever mixes bytes of the two files.  The old epoch's
+        stats are persisted first (``persist_stats=True``) and its
+        backend closes when the last in-flight batch unpins it.  With
+        ``spec=None`` the service keeps its current (deployment) spec;
+        fresh-epoch stats keep observed_profile() honest for the new
+        design, carrying only the ``swaps`` counter forward.  This is the
+        closing move of the ROADMAP's observe → drift → retune loop —
+        see ``examples/retune_daemon.py``."""
+        if self._state is None:
+            raise RuntimeError("swap() on a closed IndexService")
+        st_new, resolved = self._open_state(
+            path, spec if spec is not None else self.spec)
+        with self._mu:
+            old = self._state
+            if old is None:            # closed while the new epoch opened
+                st_new.storage.close()
+                raise RuntimeError("swap() on a closed IndexService")
+            st_new.stats.swaps = old.stats.swaps + 1
+            self._state = st_new
+            self.path = path
+            old.retired = True
+            dead = old.pins == 0
+        if spec is not None:
+            self._apply_spec(resolved)
+        if self.persist_stats:
+            try:
+                save_stats_snapshot(old.path, old.stats,
+                                    profile_name=getattr(self.profile,
+                                                         "name", None))
+            except OSError:
+                pass
+        if dead:
+            old.storage.close()
+
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
         """Idempotent; drains the prefetch worker, then (with
         ``persist_stats=True``) writes the final ServeStats snapshot to
-        ``<path>.stats.json`` before releasing the fd."""
+        ``<path>.stats.json`` before releasing the backend."""
         ex = getattr(self, "_executor", None)
         if ex is not None:
             ex.shutdown(wait=True)   # no prefetch pread may outlive the fd
             self._executor = None
-        if getattr(self, "fd", None) is not None:
-            if getattr(self, "persist_stats", False):
-                try:
-                    self.save_stats()
-                except OSError:
-                    pass          # a read-only deployment must still close
-            os.close(self.fd)
-            self.fd = None
+        mu = getattr(self, "_mu", None)
+        if mu is None or getattr(self, "_state", None) is None:
+            return
+        with mu:
+            st, self._state = self._state, None
+            if st is None:
+                return
+            self._final_state = st
+            st.retired = True
+            dead = st.pins == 0
+        if getattr(self, "persist_stats", False):
+            try:
+                save_stats_snapshot(st.path, st.stats,
+                                    profile_name=getattr(self.profile,
+                                                         "name", None))
+            except OSError:
+                pass          # a read-only deployment must still close
+        if dead:              # stragglers (if any) close on last unpin
+            st.storage.close()
 
     def __enter__(self) -> "IndexService":
         return self
@@ -622,79 +894,200 @@ class IndexService:
                 "y1": rec["y1"].astype(np.float64), "m": rec["m"].copy(),
                 "delta": rec["delta"].copy()}
 
+    # -- fault-tolerant reads ------------------------------------------------
+    def _pread_retry(self, st: _ServeState, nbytes: int, offset: int, *,
+                     deadline: float | None = None, policy=None):
+        """One logical read through the backend under the RetryPolicy →
+        ``(data, seconds, tainted)``.
+
+        A failed or short attempt (pread may legally return fewer bytes
+        than requested only at true EOF — anything else is a torn read)
+        backs off exponentially and retries up to ``max_attempts``, then
+        raises :class:`ReadError`.  ``deadline`` is an absolute
+        ``perf_counter`` horizon (the per-batch budget): once past it no
+        further attempt is issued and :class:`DeadlineExceededError`
+        surfaces.  An attempt that outlives ``pread_deadline_s`` counts
+        as a timeout; if its data is good it is still served — late bytes
+        beat no bytes — but the sample comes back ``tainted`` so the
+        measured tier fit never prices the stall."""
+        policy = policy or self.retry
+        nbytes, offset = int(nbytes), int(offset)
+        want = max(min(nbytes, st.file_size - offset), 0)
+        attempt = 0
+        tainted = False
+        while True:
+            if deadline is not None and time.perf_counter() >= deadline:
+                with self._mu:
+                    st.stats.io_timeouts += 1
+                raise DeadlineExceededError(
+                    f"batch deadline expired before pread({nbytes} B @ "
+                    f"{offset}) on {st.path!r}")
+            err = None
+            t0 = time.perf_counter()
+            try:
+                data = st.storage.pread(nbytes, offset)
+            except OSError as e:
+                data, err = b"", e
+            dt = time.perf_counter() - t0
+            pdl = policy.pread_deadline_s
+            if pdl is not None and dt > pdl:
+                # stalled attempt: count it; good-but-late data still
+                # serves (the caller records the sample as tainted)
+                tainted = True
+                with self._mu:
+                    st.stats.io_timeouts += 1
+            if err is None and len(data) >= want:
+                return data, dt, tainted
+            attempt += 1
+            if attempt >= policy.max_attempts:
+                if err is not None:
+                    raise ReadError(
+                        f"pread({nbytes} B @ {offset}) on {st.path!r} "
+                        f"failed after {attempt} attempt(s): {err}",
+                        path=st.path, offset=offset, nbytes=nbytes,
+                        attempts=attempt) from err
+                raise ReadError(
+                    f"pread({nbytes} B @ {offset}) on {st.path!r} kept "
+                    f"coming back short ({len(data)}/{want} B) after "
+                    f"{attempt} attempt(s)", path=st.path, offset=offset,
+                    nbytes=nbytes, attempts=attempt)
+            tainted = True
+            with self._mu:
+                st.stats.io_retries += 1
+            time.sleep(policy.backoff(attempt - 1))
+
+    def _refetch_page(self, st: _ServeState, pid: int, *,
+                      deadline: float | None = None) -> bytes:
+        """A page failed its CRC on cache fill: drop it and refetch once
+        (the retrying pread underneath gets its own attempt budget); a
+        second mismatch is a typed :class:`CorruptPageError` — never a
+        silently wrong lookup."""
+        P = st.page_bytes
+        with self._mu:
+            st.stats.corrupt_pages += 1
+        raw, dt, _ = self._pread_retry(st, P, pid * P, deadline=deadline)
+        with self._mu:
+            st.stats.record_read(len(raw), dt, tainted=True)
+        if page_crc(raw, P) != st.page_crcs.get(pid):
+            raise CorruptPageError(
+                f"page {pid} of {st.path!r} failed CRC32 verification "
+                f"twice", path=st.path, page_id=pid)
+        return raw
+
     # -- descent ------------------------------------------------------------
-    def _descend_prefix(self, q: np.ndarray):
+    def _descend_prefix(self, st: _ServeState, q: np.ndarray):
         """Fused walk through the whole resident prefix → float64 (L, Q)
         lo/hi rows plus the backend that served.  Device-eligible batches
         go through the Pallas → jnp → numpy chain; everything else is the
         bit-exact float64 walk (= the old per-layer path exactly)."""
         from repro.kernels import fused_descent as fd
-        if self.device_active:
+        if st.device_active:
             return fd.fused_descent_with_backend(
-                self._prefix, q, backend=self.backend,
-                interpret=self.interpret, packed=self._packed)
-        lo, hi = descend_layers(self._prefix, q)
+                st.prefix, q, backend=self.backend,
+                interpret=self.interpret, packed=st.packed)
+        lo, hi = descend_layers(st.prefix, q)
         return lo, hi, "numpy"
 
-    def _ensure_pages(self, page_ids: list) -> dict:
+    def _ensure_pages(self, st: _ServeState, page_ids: list,
+                      deadline: float | None = None) -> dict:
         """All requested pages → bytes, via cache then coalesced preads."""
-        P = self.page_bytes
+        P = st.page_bytes
         pages, missing = {}, []
         with self._mu:
             for pid in page_ids:
-                data = self.cache.get(pid)
+                data = st.cache.get(pid)
                 if data is None:
                     missing.append(pid)
                 else:
                     pages[pid] = data
-                    self.stats.pages_hit += 1
-                    self.stats.bytes_from_cache += len(data)
+                    st.stats.pages_hit += 1
+                    st.stats.bytes_from_cache += len(data)
             if self.cache_profile is not None and pages:
-                self.stats.modeled_seconds += len(pages) * float(
+                st.stats.modeled_seconds += len(pages) * float(
                     self.cache_profile(P))
         if missing:
-            pages.update(self._fetch_missing(missing))
+            pages.update(self._fetch_missing(st, missing, deadline=deadline))
         return pages
 
-    def _fetch_missing(self, missing: list, *,
-                       overlapped: bool = False) -> dict:
+    def _fetch_missing(self, st: _ServeState, missing: list, *,
+                       overlapped: bool = False,
+                       deadline: float | None = None) -> dict:
         """Coalesce missing page ids into runs and pread them into the
-        cache.  The preads run outside the lock (so prefetch I/O really
-        overlaps stage-2 compute); cache/stats mutation re-acquires it."""
-        P = self.page_bytes
+        cache.  A run that exhausts its retry budget degrades: it is
+        split and refetched page-by-page (each page with a fresh budget)
+        before the typed error surfaces — one bad sector must not take
+        down every page that merely coalesced next to it.  Deadline
+        expiry is not degradable (splitting only takes longer) and
+        re-raises immediately."""
+        P = st.page_bytes
         pages = {}
         ms = np.asarray(missing, dtype=np.int64) * P
         run_s, run_e = coalesce_ranges(ms, ms + P, gap=self.coalesce_gap)
         for rs, re_ in zip(run_s, run_e):
-            t0 = time.perf_counter()
-            raw = os.pread(self.fd, int(re_ - rs), int(rs))
-            dt = time.perf_counter() - t0
-            with self._mu:
-                self.stats.record_read(len(raw), dt, overlapped=overlapped)
-                self.stats.preads += 1
-                if overlapped:
-                    self.stats.overlapped_preads += 1
-                    self.stats.overlapped_pread_seconds += dt
-                self.stats.bytes_fetched += len(raw)
-                if self.profile is not None:
-                    t = float(self.profile(re_ - rs))
-                    self.stats.modeled_seconds += t
-                    self.stats.pread_modeled_seconds += t
-                for k in range(-(-len(raw) // P)):
-                    pid = int(rs) // P + k
-                    chunk = raw[k * P:(k + 1) * P]
-                    pages[pid] = chunk
-                    self.cache.put(pid, chunk)
-                    self.stats.pages_fetched += 1
+            rs, re_ = int(rs), int(re_)
+            try:
+                got = self._fetch_run(st, rs, re_, overlapped=overlapped,
+                                      deadline=deadline)
+            except ReadError:
+                with self._mu:
+                    st.stats.degraded_runs += 1
+                got = {}
+                for po in range(rs, re_, P):
+                    got.update(self._fetch_run(
+                        st, po, min(po + P, re_), overlapped=overlapped,
+                        deadline=deadline, tainted=True))
+            pages.update(got)
         return pages
 
-    def _descend_disk(self, lm, lo, hi, q: np.ndarray):
-        P = self.page_bytes
+    def _fetch_run(self, st: _ServeState, rs: int, re_: int, *,
+                   overlapped: bool = False,
+                   deadline: float | None = None,
+                   tainted: bool = False) -> dict:
+        """One coalesced run → pages, through the retrying pread and (when
+        the file carries checksums) per-page CRC32 verification before
+        anything may enter the cache.  The pread runs outside the lock
+        (so prefetch I/O really overlaps stage-2 compute); cache/stats
+        mutation re-acquires it."""
+        P = st.page_bytes
+        raw, dt, tnt = self._pread_retry(st, re_ - rs, rs, deadline=deadline)
+        tnt = tnt or tainted
+        chunks = []
+        for k in range(-(-len(raw) // P)):
+            pid = rs // P + k
+            chunk = raw[k * P:(k + 1) * P]
+            if st.page_crcs is not None:
+                crc = st.page_crcs.get(pid)
+                if crc is not None and page_crc(chunk, P) != crc:
+                    chunk = self._refetch_page(st, pid, deadline=deadline)
+                    tnt = True
+            chunks.append((pid, chunk))
+        pages = {}
+        with self._mu:
+            st.stats.record_read(len(raw), dt, overlapped=overlapped,
+                                 tainted=tnt)
+            st.stats.preads += 1
+            if overlapped:
+                st.stats.overlapped_preads += 1
+                st.stats.overlapped_pread_seconds += dt
+            st.stats.bytes_fetched += len(raw)
+            if self.profile is not None:
+                t = float(self.profile(re_ - rs))
+                st.stats.modeled_seconds += t
+                st.stats.pread_modeled_seconds += t
+            for pid, chunk in chunks:
+                pages[pid] = chunk
+                st.cache.put(pid, chunk)
+                st.stats.pages_fetched += 1
+        return pages
+
+    def _descend_disk(self, st, lm, lo, hi, q: np.ndarray,
+                      deadline: float | None = None):
+        P = st.page_bytes
         a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
         a, b = a.copy(), b.copy()       # per-query windows, grown on misses
-        self.stats.ranges_requested += len(q)
+        st.stats.ranges_requested += len(q)
         if self.profile is not None:    # full-price walk: one window/query
-            self.stats.walk_modeled_seconds += float(
+            st.stats.walk_modeled_seconds += float(
                 np.sum(self.profile((b - a).astype(np.float64))))
         out_lo = np.empty(len(q), dtype=np.float64)
         out_hi = np.empty(len(q), dtype=np.float64)
@@ -708,7 +1101,7 @@ class IndexService:
             need: set = set()
             for x, y in zip(pa.tolist(), pb.tolist()):
                 need.update(range(x, y))
-            pages = self._ensure_pages(sorted(need))
+            pages = self._ensure_pages(st, sorted(need), deadline)
             still = []
             for ui in range(len(ab)):
                 base = int(pa[ui]) * P
@@ -734,11 +1127,11 @@ class IndexService:
                 a[lmiss] = max(int(ab[ui, 0]) - w, 0)
                 b[rmiss] = min(int(ab[ui, 1]) + w, lm.size)
                 still.extend([lmiss, rmiss])
-                self.stats.retries += len(lmiss) + len(rmiss)
+                st.stats.retries += len(lmiss) + len(rmiss)
                 if self.profile is not None and (len(lmiss) or len(rmiss)):
                     # the scalar walk re-reads each extended window
                     ext = np.concatenate([lmiss, rmiss])
-                    self.stats.walk_modeled_seconds += float(np.sum(
+                    st.stats.walk_modeled_seconds += float(np.sum(
                         self.profile((b[ext] - a[ext]).astype(np.float64))))
             pending = (np.concatenate(still) if still
                        else np.empty(0, dtype=np.int64))
@@ -755,33 +1148,47 @@ class IndexService:
         coalescing only change *how* windows are computed and bytes
         obtained.  Device backends widen resident *band* layers by the
         f32-rounding slack (ranges stay valid but may be strictly wider).
+
+        A batch pins its serving epoch at entry, so a concurrent
+        :meth:`swap` never changes the file mid-descent; with
+        ``spec.retry.batch_deadline_s`` set, every pread the batch
+        triggers shares one absolute deadline.
         """
+        st = self._pin()
+        try:
+            return self._lookup_pinned(st, queries)
+        finally:
+            self._unpin(st)
+
+    def _lookup_pinned(self, st: _ServeState, queries) -> np.ndarray:
         q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
+        bdl = self.retry.batch_deadline_s
+        deadline = (time.perf_counter() + bdl) if bdl is not None else None
         with self._mu:
-            self.stats.queries += len(q)
-            self.stats.batches += 1
-        metas = self.meta.layers
+            st.stats.queries += len(q)
+            st.stats.batches += 1
+        metas = st.meta.layers
         if len(q) == 0:
             return np.empty((0, 2), dtype=np.int64)
         if not metas:
             out = np.empty((len(q), 2), dtype=np.int64)
             out[:, 0] = 0
-            out[:, 1] = self.meta.data_size
+            out[:, 1] = st.meta.data_size
             if self.profile is not None:   # (no index): scan the data layer
-                t = len(q) * float(self.profile(self.meta.data_size))
+                t = len(q) * float(self.profile(st.meta.data_size))
                 with self._mu:
-                    self.stats.data_modeled_seconds += t
-                    self.stats.walk_modeled_seconds += t
+                    st.stats.data_modeled_seconds += t
+                    st.stats.walk_modeled_seconds += t
             return out
         lo = hi = None
-        n_res = len(self._prefix)
+        n_res = len(st.prefix)
         if n_res:
             t0 = time.perf_counter()
-            plo, phi, used = self._descend_prefix(q)
+            plo, phi, used = self._descend_prefix(st, q)
             dt = time.perf_counter() - t0
             walk = 0.0
             if self.profile is not None:
-                for r, li in enumerate(self._prefix_lis):
+                for r, li in enumerate(st.prefix_lis):
                     lm = metas[li]
                     if r == 0:
                         # Alg. 1 reads the ROOT outright per query;
@@ -799,23 +1206,23 @@ class IndexService:
                         walk += float(np.sum(
                             self.profile((wb - wa).astype(np.float64))))
             with self._mu:
-                self.stats.descent_seconds += dt
-                self.stats.walk_modeled_seconds += walk
+                st.stats.descent_seconds += dt
+                st.stats.walk_modeled_seconds += walk
                 if used != "numpy":
-                    self.stats.device_batches += 1
+                    st.stats.device_batches += 1
             lo, hi = plo[-1], phi[-1]
         for li in range(len(metas) - n_res - 1, -1, -1):
-            lo, hi = self._descend_disk(metas[li], lo, hi, q)
+            lo, hi = self._descend_disk(st, metas[li], lo, hi, q, deadline)
         lo = np.maximum(np.asarray(lo, dtype=np.int64), 0)
         hi = np.minimum(np.maximum(np.asarray(hi, dtype=np.int64), lo + 1),
-                        self.meta.data_size)
+                        st.meta.data_size)
         if self.profile is not None:
             # the caller's final data-range read, modeled on the same tier:
             # part of Eq. 6's E[T], charged to observed AND walk cost
             t = float(np.sum(self.profile((hi - lo).astype(np.float64))))
             with self._mu:
-                self.stats.data_modeled_seconds += t
-                self.stats.walk_modeled_seconds += t
+                st.stats.data_modeled_seconds += t
+                st.stats.walk_modeled_seconds += t
         return np.stack([lo, hi], axis=1)
 
     def lookup_batches(self, batches) -> list:
@@ -825,7 +1232,12 @@ class IndexService:
         preads of batches *i+1..i+depth* (stage 1), so storage latency
         hides behind compute.  Returns one ``lookup``-shaped array per
         batch — identical to calling :meth:`lookup` sequentially
-        (``spec.pipeline_depth == 0`` does exactly that)."""
+        (``spec.pipeline_depth == 0`` does exactly that).
+
+        A failure inside the prefetch worker (its pread retry budget
+        spent, a corrupt page, a died thread) is captured and re-raised
+        *here*, on the next batch boundary — never swallowed into a
+        silently degraded or hung pipeline."""
         batches = [np.atleast_1d(np.asarray(b, dtype=np.uint64))
                    for b in batches]
         depth = int(self.spec.pipeline_depth)
@@ -841,7 +1253,7 @@ class IndexService:
             for j in range(i + 1, min(i + depth, len(batches) - 1) + 1):
                 if j not in pending:
                     pending[j] = self._executor.submit(
-                        self._prefetch_batch, batches[j])
+                        self._prefetch_task, batches[j])
             out.append(self.lookup(batches[i]))
             with self._mu:
                 self.stats.pipelined_batches += 1
@@ -851,11 +1263,41 @@ class IndexService:
                 # the cache probe is the only coupling, but waiting keeps
                 # the hit accounting deterministic
                 fut.result()
+            self._raise_prefetch_exc()
         for fut in pending.values():
             fut.result()
+        self._raise_prefetch_exc()
         return out
 
-    def _prefetch_batch(self, q: np.ndarray) -> int:
+    def _raise_prefetch_exc(self) -> None:
+        """Surface the first exception the prefetch worker captured (the
+        stage-1 error-propagation contract of :meth:`lookup_batches`)."""
+        with self._mu:
+            exc, self._prefetch_exc = self._prefetch_exc, None
+        if exc is not None:
+            raise exc
+
+    def _prefetch_task(self, q: np.ndarray) -> int:
+        """The unit the worker thread actually runs: pin an epoch, stage
+        the batch, and *capture* any failure for the serving thread to
+        re-raise at the next batch boundary — an exception escaping into
+        the executor would otherwise vanish into the Future until someone
+        happens to ``.result()`` it."""
+        try:
+            st = self._pin()
+        except RuntimeError:
+            return 0                 # service closed under the pipeline
+        try:
+            return self._prefetch_batch(st, q)
+        except BaseException as e:   # noqa: BLE001 — re-raised on boundary
+            with self._mu:
+                if self._prefetch_exc is None:
+                    self._prefetch_exc = e
+            return 0
+        finally:
+            self._unpin(st)
+
+    def _prefetch_batch(self, st: _ServeState, q: np.ndarray) -> int:
         """Stage 1 of the pipeline: descend the resident prefix for a
         *future* batch and pread its missing first-window pages into the
         cache (tagged ``overlapped``).  Walks up to
@@ -864,19 +1306,19 @@ class IndexService:
         serving (the later :meth:`lookup` charges those).  Returns the
         number of pages staged."""
         t_start = time.perf_counter()
-        metas = self.meta.layers
-        n_res = len(self._prefix)
+        metas = st.meta.layers
+        n_res = len(st.prefix)
         n_disk = len(metas) - n_res
         staged = 0
         if n_disk <= 0 or len(q) == 0:
             return 0
         if n_res:
-            plo, phi, _ = self._descend_prefix(q)
+            plo, phi, _ = self._descend_prefix(st, q)
             lo, hi = plo[-1], phi[-1]
         else:
             lo = hi = None
         depth = min(max(int(self.spec.prefetch_layers), 1), n_disk)
-        P = self.page_bytes
+        P = st.page_bytes
         for d in range(depth):
             lm = metas[n_disk - 1 - d]
             a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
@@ -888,24 +1330,25 @@ class IndexService:
                 need.update(range(x, y))
             with self._mu:
                 missing = [pid for pid in sorted(need)
-                           if pid not in self.cache]
+                           if pid not in st.cache]
             if missing:
-                staged += len(self._fetch_missing(missing, overlapped=True))
+                staged += len(self._fetch_missing(st, missing,
+                                                  overlapped=True))
             if d + 1 < depth:
-                lo, hi, q = self._advance_windows(lm, a, b, q)
+                lo, hi, q = self._advance_windows(st, lm, a, b, q)
                 if len(q) == 0:
                     break
         with self._mu:
-            self.stats.prefetch_seconds += time.perf_counter() - t_start
+            st.stats.prefetch_seconds += time.perf_counter() - t_start
         return staged
 
-    def _advance_windows(self, lm, a, b, q: np.ndarray):
+    def _advance_windows(self, st: _ServeState, lm, a, b, q: np.ndarray):
         """Predict the next layer's windows from *cached* pages only
         (``peek``: no promotion, no hit/miss skew).  Queries whose window
         pages were evicted, or whose covering record lies outside the
         first window, simply drop out of the prefetch — stage 2 serves
         them at full fidelity."""
-        P = self.page_bytes
+        P = st.page_bytes
         ab, inv = np.unique(np.stack([a, b], axis=1), axis=0,
                             return_inverse=True)
         inv = inv.reshape(-1)
@@ -915,7 +1358,7 @@ class IndexService:
         los, his, qs = [], [], []
         for ui in range(len(ab)):
             with self._mu:
-                chunks = [self.cache.peek(p)
+                chunks = [st.cache.peek(p)
                           for p in range(int(pa[ui]), int(pb[ui]))]
             if any(c is None for c in chunks):
                 continue            # evicted under pressure: stop here

@@ -1,0 +1,573 @@
+"""Fault-tolerant storage I/O: the backend seam, deterministic fault
+injection, RetryPolicy retries/backoff/deadlines, degraded run splitting,
+page CRC32 verification, typed failures, live hot-swap, prefetch error
+propagation, and fleet shard degradation.
+
+The load-bearing invariant everywhere: results under any *recoverable*
+fault schedule are bit-identical to the fault-free run, and the faults
+leave the observability surface honest (retried/stalled samples never fit
+the measured tier profile)."""
+import errno
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import RetryPolicy, ServeSpec
+from repro.core import IndexDesign, KeyPositions, write_index
+from repro.core.builders import build_gband, build_gstep
+from repro.core.nodes import outline
+from repro.core.serialize import layer_page_crcs, page_crc, read_meta
+from repro.fleet import ShardUnavailableError
+from repro.serve import (CorruptPageError, DeadlineExceededError,
+                         FaultInjectingBackend, FileBackend, IndexService,
+                         ReadError, StorageBackend, StorageError, pread_full)
+from repro.serve.index_service import (demo_serving_design,
+                                       measured_backing_profile)
+
+from conftest import make_keys
+
+P = 1024
+_KEYS = make_keys("books", 60_000, seed=9)
+_D = KeyPositions.fixed_record(_KEYS, 16)
+_RETRY = RetryPolicy(max_attempts=4, backoff_s=1e-5, max_backoff_s=1e-4)
+_SPEC = ServeSpec(cache_bytes=(64 << 10,), retry=_RETRY)
+
+
+@pytest.fixture(scope="module")
+def served(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("ft") / "index.air")
+    write_index(path, demo_serving_design(_D), page_bytes=P)
+    rng = np.random.default_rng(1)
+    qs = rng.choice(_KEYS, 700)
+    with IndexService(path, profile=None, spec=_SPEC) as svc:
+        want = svc.lookup(qs)
+    return path, qs, want
+
+
+def _faulty(path, **kw):
+    return FaultInjectingBackend(FileBackend(path), **kw)
+
+
+# ---------------------------------------------------------------------------
+# backend seam basics
+# ---------------------------------------------------------------------------
+def test_pread_full_loops_torn_reads_to_the_full_window(tmp_path):
+    # pread may legally return fewer bytes than asked; pread_full must
+    # keep reading until the window fills (or true EOF)
+    p = tmp_path / "blob"
+    p.write_bytes(bytes(range(200)) * 10)
+    import os
+    fd = os.open(str(p), os.O_RDONLY)
+    try:
+        assert pread_full(fd, 2000, 0) == p.read_bytes()
+        assert pread_full(fd, 5000, 1500) == p.read_bytes()[1500:]  # EOF-short
+        assert pread_full(fd, 10, 5000) == b""
+    finally:
+        os.close(fd)
+
+
+def test_fault_schedule_is_deterministic_and_heals_per_attempt(served):
+    path, _, _ = served
+    kw = dict(seed=3, eio_rate=0.5, eio_attempts=2, page_bytes=P)
+    a, b = _faulty(path, **kw), _faulty(path, **kw)
+    offs = [(P * k, 3 * P) for k in range(12)]
+    for be in (a, b):
+        for off, n in offs:
+            for _ in range(3):          # two injected failures, then heals
+                try:
+                    be.pread(n, off)
+                except OSError as e:
+                    assert e.errno == errno.EIO
+    assert a.fault_log == b.fault_log and a.fault_log  # replayable schedule
+    # attempt-bounded faults healed: the third read of any window succeeds
+    assert all(att < 2 for (_, _, _, att) in a.fault_log)
+
+
+def test_only_over_bytes_and_only_from_offset_gate_faults(served):
+    path, _, _ = served
+    be = _faulty(path, seed=1, eio_rate=1.0, only_over_bytes=P,
+                 only_from_offset=4 * P, page_bytes=P)
+    assert be.pread(P, 0)                 # small read: passes
+    assert be.pread(8 * P, 0)             # big but before the offset gate
+    with pytest.raises(OSError):
+        be.pread(8 * P, 4 * P)            # big AND past the gate: faults
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy surface
+# ---------------------------------------------------------------------------
+def test_retry_policy_round_trips_and_validates():
+    rp = RetryPolicy(max_attempts=5, backoff_s=0.002, backoff_mult=3.0,
+                     max_backoff_s=0.05, pread_deadline_s=0.5,
+                     batch_deadline_s=2.0)
+    assert RetryPolicy.from_json(rp.to_json()) == rp
+    assert RetryPolicy.from_dict(rp.to_dict()) == rp
+    # backoff: exponential, capped
+    assert rp.backoff(0) == 0.002
+    assert rp.backoff(1) == 0.006
+    assert rp.backoff(10) == 0.05
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0).validate()
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_mult=0.5).validate()
+    with pytest.raises(ValueError):
+        RetryPolicy(pread_deadline_s=0.0).validate()
+    with pytest.raises(ValueError):
+        RetryPolicy.from_dict({"max_attempts": 2, "bogus": 1})
+
+
+def test_serve_spec_carries_retry_policy_through_json():
+    spec = ServeSpec(retry=RetryPolicy(max_attempts=7), verify_checksums=False)
+    back = ServeSpec.from_json(spec.to_json())
+    assert back == spec
+    assert isinstance(back.retry, RetryPolicy)
+    assert back.retry.max_attempts == 7 and back.verify_checksums is False
+
+
+# ---------------------------------------------------------------------------
+# recovery identity: faults in, correct bytes out
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw", [
+    dict(eio_rate=0.4, eio_attempts=2),
+    dict(short_rate=0.5, short_attempts=2),
+    dict(stall_rate=0.4, stall_seconds=5e-4, stall_attempts=1),
+    dict(corrupt_rate=1.0, corrupt_attempts=1, only_over_bytes=P),
+    dict(fail_first=3),
+    dict(eio_rate=0.3, eio_attempts=1, short_rate=0.3, short_attempts=1,
+         corrupt_rate=0.5, corrupt_attempts=1, only_over_bytes=P),
+], ids=["eio", "short", "stall", "corrupt", "flaky-start", "combined"])
+def test_recoverable_schedules_serve_bit_identical(served, kw):
+    path, qs, want = served
+    with IndexService(path, profile=None, spec=_SPEC,
+                      backend_factory=lambda p: _faulty(
+                          p, seed=11, page_bytes=P, **kw)) as svc:
+        got = svc.lookup(qs)
+        s = svc.stats
+    assert np.array_equal(want, got)
+    if "eio_rate" in kw or "short_rate" in kw or kw.get("fail_first"):
+        assert s.io_retries > 0
+    if kw.get("corrupt_rate") == 1.0:
+        assert s.corrupt_pages > 0
+    # every repaired/retried serving read is tainted, never clean
+    if s.corrupt_pages:
+        assert any(r[3] for r in s.read_samples)
+
+
+def test_persistent_eio_surfaces_typed_read_error(served):
+    path, qs, _ = served
+    with pytest.raises(ReadError) as ei:
+        with IndexService(path, profile=None, spec=_SPEC,
+                          backend_factory=lambda p: _faulty(
+                              p, seed=2, eio_rate=0.5,
+                              eio_attempts=None)) as svc:
+            svc.lookup(qs)
+    assert ei.value.attempts == _RETRY.max_attempts
+    assert isinstance(ei.value, StorageError)
+
+
+def test_persistent_corruption_surfaces_corrupt_page_error(served):
+    path, qs, _ = served
+    meta_end = None
+    with IndexService(path, profile=None, spec=_SPEC) as svc:
+        meta_end = min(lm.offset for lm in svc.meta.layers)
+    with pytest.raises(CorruptPageError) as ei:
+        with IndexService(path, profile=None, spec=_SPEC,
+                          backend_factory=lambda p: _faulty(
+                              p, seed=2, corrupt_rate=1.0,
+                              corrupt_attempts=10**9, page_bytes=P,
+                              only_from_offset=meta_end)) as svc:
+            svc.lookup(qs)
+    assert ei.value.page_id is not None
+
+
+def test_batch_deadline_surfaces_deadline_exceeded(served):
+    path, qs, _ = served
+    spec = _SPEC.replace(retry=_RETRY.replace(batch_deadline_s=1e-9))
+    with IndexService(path, profile=None, spec=spec) as svc:
+        with pytest.raises(DeadlineExceededError):
+            svc.lookup(qs)          # cold cache: must pread, deadline gone
+        assert svc.stats.io_timeouts > 0
+
+
+def test_stalls_count_timeouts_taint_samples_but_still_serve(served):
+    path, qs, want = served
+    spec = _SPEC.replace(retry=_RETRY.replace(pread_deadline_s=1e-4))
+    with IndexService(path, profile=None, spec=spec,
+                      backend_factory=lambda p: _faulty(
+                          p, seed=5, stall_rate=0.6, stall_seconds=5e-3,
+                          stall_attempts=10**9, page_bytes=P)) as svc:
+        got = svc.lookup(qs)
+        s = svc.stats
+    assert np.array_equal(want, got)   # late bytes beat no bytes
+    assert s.io_timeouts > 0
+    assert any(r[3] for r in s.read_samples)
+
+
+def test_degraded_split_rescues_runs_failing_only_when_coalesced(served):
+    # faults ONLY on multi-page reads: the run-level pread exhausts its
+    # budget, the engine splits to page granularity, pages come through
+    path, qs, want = served
+    with IndexService(path, profile=None, spec=_SPEC,
+                      backend_factory=lambda p: _faulty(
+                          p, seed=4, eio_rate=1.0, eio_attempts=None,
+                          only_over_bytes=P, page_bytes=P)) as svc:
+        got = svc.lookup(qs)
+        s = svc.stats
+    assert np.array_equal(want, got)
+    assert s.degraded_runs > 0
+
+
+# ---------------------------------------------------------------------------
+# page checksums
+# ---------------------------------------------------------------------------
+def test_written_files_carry_per_page_crcs_that_match_bytes(served):
+    path, _, _ = served
+    import os
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        meta = read_meta(fd)
+        assert meta.page_bytes == P
+        for lm in meta.layers:
+            blob = pread_full(fd, lm.size, lm.offset)
+            assert lm.page_crcs == layer_page_crcs(blob, P)
+            # and the on-disk page form (hole-padded) hashes identically
+            for k, crc in enumerate(lm.page_crcs):
+                disk = pread_full(fd, P, lm.offset + k * P)
+                assert page_crc(disk, P) == crc
+    finally:
+        os.close(fd)
+
+
+def test_unchecksummed_file_opens_verify_skipped(served, tmp_path):
+    path, qs, want = served
+    old = str(tmp_path / "old.air")
+    write_index(old, demo_serving_design(_D), page_bytes=P, checksums=False)
+    import os
+    fd = os.open(old, os.O_RDONLY)
+    try:
+        assert all(lm.page_crcs is None for lm in read_meta(fd).layers)
+    finally:
+        os.close(fd)
+    with IndexService(old, profile=None, spec=_SPEC) as svc:
+        assert svc._st.page_crcs is None
+        assert np.array_equal(svc.lookup(qs), want)
+
+
+def test_verify_checksums_off_and_page_size_override_skip_verify(served):
+    path, qs, want = served
+    with IndexService(path, profile=None,
+                      spec=_SPEC.replace(verify_checksums=False)) as svc:
+        assert svc._st.page_crcs is None
+        assert np.array_equal(svc.lookup(qs), want)
+    # repaging the file (spec page_bytes != writer page_bytes) re-tiles
+    # pages, so the writer's CRCs no longer apply: verify must skip, and
+    # results must still be exact
+    with IndexService(path, profile=None,
+                      spec=_SPEC.replace(page_bytes=512)) as svc:
+        assert svc._st.page_crcs is None
+        assert np.array_equal(svc.lookup(qs), want)
+
+
+def test_corrupt_page_repair_is_invisible_to_cache_contents(served):
+    path, qs, want = served
+    with IndexService(path, profile=None, spec=_SPEC) as clean:
+        clean.lookup(qs)
+        clean_pages = {pid: data for t in clean.cache.tiers
+                       for pid, data in t.items()}
+    with IndexService(path, profile=None, spec=_SPEC,
+                      backend_factory=lambda p: _faulty(
+                          p, seed=13, corrupt_rate=1.0, corrupt_attempts=1,
+                          only_over_bytes=P, page_bytes=P)) as svc:
+        got = svc.lookup(qs)
+        assert svc.stats.corrupt_pages > 0
+        faulted_pages = {pid: data for t in svc.cache.tiers
+                         for pid, data in t.items()}
+    assert np.array_equal(want, got)
+    assert faulted_pages == clean_pages   # repaired bytes, not torn ones
+
+
+# ---------------------------------------------------------------------------
+# hot swap
+# ---------------------------------------------------------------------------
+def _alt_design():
+    # a structurally different stack (different branching) over the same
+    # data: lookups stay correct but windows differ from the demo design
+    l1 = build_gstep(_D, 8, 2**9)
+    o1 = outline(l1, _D)
+    l2 = build_gband(o1, 2**8)
+    l3 = build_gstep(outline(l2, o1), 8, 2**6)
+    return IndexDesign(layers=(l1, l2, l3), data=_D)
+
+
+def test_swap_replaces_epoch_and_keeps_results_exact(served, tmp_path):
+    path, qs, want = served
+    alt = str(tmp_path / "alt.air")
+    write_index(alt, _alt_design(), page_bytes=P)
+    with IndexService(alt, profile=None, spec=_SPEC) as svc:
+        want_alt = svc.lookup(qs)
+    assert not np.array_equal(want, want_alt)   # distinguishable designs
+
+    with IndexService(path, profile=None, spec=_SPEC) as svc:
+        assert np.array_equal(svc.lookup(qs), want)
+        old_queries = svc.stats.queries
+        svc.swap(alt)
+        assert svc.path == alt
+        assert np.array_equal(svc.lookup(qs), want_alt)
+        # fresh epoch stats (observed_profile stays honest for the new
+        # design), only the swap counter carries forward
+        assert svc.stats.swaps == 1
+        assert svc.stats.queries == len(qs) < old_queries + len(qs)
+        svc.swap(path)
+        assert svc.stats.swaps == 2
+        assert np.array_equal(svc.lookup(qs), want)
+
+
+def test_swap_persists_old_epoch_stats(served, tmp_path):
+    path, qs, want = served
+    import shutil
+    a = str(tmp_path / "a.air")
+    shutil.copy(path, a)
+    from repro.serve.index_service import load_serve_stats
+    with IndexService(a, profile=None,
+                      spec=_SPEC.replace(persist_stats=True)) as svc:
+        svc.lookup(qs)
+        n = svc.stats.queries
+        svc.swap(a)                      # same file, new epoch
+        persisted = load_serve_stats(a)
+        assert persisted is not None and persisted.queries == n
+
+
+def test_swap_under_live_traffic_never_mixes_epochs(served, tmp_path):
+    path, qs, want = served
+    alt = str(tmp_path / "alt_live.air")
+    write_index(alt, _alt_design(), page_bytes=P)
+    rng = np.random.default_rng(3)
+    batches = [rng.choice(_KEYS, 120) for _ in range(8)]
+    spec = _SPEC.replace(pipeline_depth=2)
+    with IndexService(path, profile=None, spec=spec) as svc:
+        want_a = [svc.lookup(b) for b in batches]
+    with IndexService(alt, profile=None, spec=spec) as svc:
+        want_b = [svc.lookup(b) for b in batches]
+
+    results, errors, stop = [], [], threading.Event()
+    svc = IndexService(path, profile=None, spec=spec)
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                results.append(svc.lookup_batches(batches))
+        except Exception as e:          # pragma: no cover - fails the test
+            errors.append(e)
+
+    t = threading.Thread(target=hammer)
+    t.start()
+    try:
+        for k in range(6):              # swap back and forth under load
+            svc.swap(alt if k % 2 == 0 else path)
+            time.sleep(0.01)
+    finally:
+        stop.set()
+        t.join()
+        svc.close()
+    assert not errors
+    assert results
+    for run in results:
+        for i, got in enumerate(run):
+            ok_a = np.array_equal(got, want_a[i])
+            ok_b = np.array_equal(got, want_b[i])
+            # every batch is served wholly by one epoch: old or new,
+            # never a row-mix of the two
+            assert ok_a or ok_b
+
+
+def test_lookup_after_close_raises_cleanly(served):
+    path, qs, _ = served
+    svc = IndexService(path, profile=None, spec=_SPEC)
+    svc.close()
+    assert svc.fd is None
+    assert svc.stats is not None        # final epoch stays inspectable
+    with pytest.raises(RuntimeError):
+        svc.lookup(qs)
+    with pytest.raises(RuntimeError):
+        svc.swap(path)
+
+
+# ---------------------------------------------------------------------------
+# prefetch error propagation (satellite: a dead stage-1 worker must not
+# silently degrade or hang the pipeline)
+# ---------------------------------------------------------------------------
+class _PrefetchOnlyFaults(FileBackend):
+    """Healthy on the serving thread, EIO inside the prefetch worker."""
+
+    def pread(self, nbytes, offset):
+        if threading.current_thread().name.startswith("airindex-prefetch"):
+            raise OSError(errno.EIO, "injected prefetch-only EIO")
+        return super().pread(nbytes, offset)
+
+
+def test_prefetch_worker_failure_surfaces_at_batch_boundary(tmp_path):
+    # deterministic construction: a dense bottom layer (hundreds of
+    # pages), a cache big enough that nothing evicts, batch 0 pre-warmed
+    # (the serving thread fetches nothing), and the later batches in a
+    # cold disjoint key region — the prefetch worker is the *only* thread
+    # with pages to fetch, so it faults on every run, not just when it
+    # wins a race against stage 2
+    l1 = build_gstep(_D, 8, 2**6)
+    o1 = outline(l1, _D)
+    l2 = build_gband(o1, 2**9)
+    l3 = build_gstep(outline(l2, o1), 8, 2**7)
+    path = str(tmp_path / "dense.air")
+    write_index(path, IndexDesign(layers=(l1, l2, l3), data=_D),
+                page_bytes=P)
+    warm = _KEYS[0:20000:40].copy()
+    cold = [_KEYS[30000 + 5000 * j: 30000 + 5000 * j + 100].copy()
+            for j in range(4)]
+    spec = _SPEC.replace(cache_bytes=(4 << 20,), pipeline_depth=2,
+                         prefetch_layers=2)
+    with IndexService(path, profile=None, spec=spec,
+                      backend_factory=_PrefetchOnlyFaults) as svc:
+        svc.lookup(warm)
+        with pytest.raises(ReadError):
+            svc.lookup_batches([warm] + cold)
+        # the pipeline recovers once drained: plain lookups still serve
+        # (on the serving thread, where the backend is healthy)
+        assert svc.lookup(cold[0]).shape == (100, 2)
+
+
+# ---------------------------------------------------------------------------
+# honesty of the observability surface
+# ---------------------------------------------------------------------------
+def test_measured_profile_excludes_tainted_samples(served):
+    path, qs, want = served
+    with IndexService(path, profile=None, spec=_SPEC) as svc:
+        meta_end = min(lm.offset for lm in svc.meta.layers)
+    with IndexService(path, profile=None, spec=_SPEC,
+                      backend_factory=lambda p: _faulty(
+                          p, seed=17, eio_rate=0.5, eio_attempts=2,
+                          only_from_offset=meta_end, page_bytes=P)) as svc:
+        assert np.array_equal(svc.lookup(qs), want)
+        stats = svc.stats
+    assert any(r[3] for r in stats.read_samples)
+    import dataclasses
+    clean_only = dataclasses.replace(
+        stats, read_samples=[r for r in stats.read_samples if not r[3]])
+    assert measured_backing_profile(stats, min_samples=2) == \
+        measured_backing_profile(clean_only, min_samples=2)
+
+
+def test_read_samples_round_trip_with_legacy_widths():
+    from repro.serve import ServeStats
+    s = ServeStats()
+    s.record_read(100, 1e-4)
+    s.record_read(200, 2e-4, overlapped=True)
+    s.record_read(300, 3e-4, tainted=True)
+    back = ServeStats.from_snapshot(s.snapshot())
+    assert back == s
+    legacy = s.snapshot()
+    legacy["read_samples"] = [[100, 1e-4], [200, 2e-4, True]]
+    old = ServeStats.from_snapshot(legacy)
+    assert old.read_samples == [(100, 1e-4, False, False),
+                                (200, 2e-4, True, False)]
+
+
+# ---------------------------------------------------------------------------
+# fleet shard degradation
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def fleet_parts(tmp_path_factory):
+    # AirTune at this scale picks fully-resident 1-layer shard designs —
+    # nothing would ever pread and the failure-isolation tests would pass
+    # vacuously.  Build shard files from the 3-layer demo design instead
+    # and drive FleetService directly, so every shard lookup walks disk.
+    from repro.fleet.fleet import _partition
+    from repro.fleet.service import FleetService
+    from repro.fleet.spec import ShardMap
+
+    d = tmp_path_factory.mktemp("ftfleet")
+    keys = make_keys("gmm", 20_000, seed=6)
+    D = KeyPositions.fixed_record(keys, 16)
+    shard_map = ShardMap.even_keys(D.keys, 3)
+    parts, bases = _partition(D, shard_map)
+    paths = []
+    for i, part in enumerate(parts):
+        p = str(d / f"shard_{i}.air")
+        write_index(p, demo_serving_design(part), page_bytes=P)
+        paths.append(p)
+
+    def serve(backend_factories=None):
+        return FleetService(shard_map, paths, bases, profile=None,
+                            specs=[_SPEC] * 3,
+                            backend_factories=backend_factories)
+    return serve, D
+
+
+class _DiesAfterOpen(FileBackend):
+    """Healthy while the service opens (meta + resident loads), then every
+    pread raises persistently — a disk that died under a live shard."""
+
+    armed = False
+
+    def pread(self, nbytes, offset):
+        if _DiesAfterOpen.armed:
+            raise OSError(errno.EIO, "injected post-open EIO")
+        return super().pread(nbytes, offset)
+
+
+def _sick_shard_factories(svc_paths, sick: int):
+    _DiesAfterOpen.armed = False
+
+    def make(path):
+        if path == svc_paths[sick]:
+            return _DiesAfterOpen(path)
+        return FileBackend(path)
+    return make
+
+
+def test_fleet_isolates_failing_shard_and_reports_health(fleet_parts):
+    serve, D = fleet_parts
+    rng = np.random.default_rng(2)
+    qs = rng.choice(D.keys, 400)
+    with serve() as svc:
+        want = svc.lookup(qs)
+        paths = svc.paths
+    sick = 1
+    with serve(
+            backend_factories=_sick_shard_factories(paths, sick)) as svc:
+        _DiesAfterOpen.armed = True      # the disk dies under live traffic
+        # default contract: fail stop, typed
+        with pytest.raises(ShardUnavailableError) as ei:
+            svc.lookup(qs)
+        assert ei.value.shard == sick
+        assert svc.healthy == [True, False, True]
+        # degraded contract: healthy shards bit-identical + explicit mask
+        out, avail = svc.lookup(qs, partial_results=True)
+        sick_keys = svc.shard_map.route(qs) == sick
+        assert np.array_equal(avail, ~sick_keys)
+        assert np.array_equal(out[avail], want[avail])
+        assert (out[~avail] == -1).all()
+        # batched flavor
+        outs, avails = svc.lookup_batches([qs[:150], qs[150:]],
+                                          partial_results=True)
+        assert np.array_equal(np.concatenate(avails), ~sick_keys)
+        assert np.array_equal(np.concatenate(outs)[~sick_keys],
+                              want[~sick_keys])
+        # health is in the summary, and the summary never raises
+        summary = svc.stats_summary()
+        assert summary["unhealthy_shards"] == 1
+        assert summary["shards"][sick]["healthy"] is False
+        assert summary["shards"][sick]["error"]
+        # operator repaired the shard (here: nothing to repair - the
+        # schedule was the fault): back in rotation
+        svc.mark_healthy(sick)
+        assert svc.stats_summary()["unhealthy_shards"] == 0
+
+
+def test_fleet_stats_summary_survives_closed_shard_service(fleet_parts):
+    serve, D = fleet_parts
+    with serve() as svc:
+        svc.lookup(np.asarray(D.keys[:64]))
+        svc.services[0].close()          # simulate a torn-down shard
+        summary = svc.stats_summary()    # must not raise
+        assert len(summary["shards"]) == svc.n_shards

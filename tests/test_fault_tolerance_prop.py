@@ -1,0 +1,84 @@
+"""Property test: recoverable storage faults are invisible — for any
+seeded schedule of transient EIO / torn reads / corrupt pages / stalls
+(with retries enabled), lookup results AND final cache contents are
+bit-identical to the fault-free run, and the tainted (retried/repaired/
+stalled) read samples never leak into the measured tier fit that
+``observed_profile()`` builds on."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional test dep (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.api import RetryPolicy, ServeSpec              # noqa: E402
+from repro.core import KeyPositions, write_index          # noqa: E402
+from repro.serve import (FaultInjectingBackend,           # noqa: E402
+                         FileBackend)
+from repro.serve.index_service import (IndexService,      # noqa: E402
+                                       demo_serving_design,
+                                       measured_backing_profile)
+
+from conftest import make_keys                            # noqa: E402
+
+P = 1024
+_KEYS = make_keys("books", 60_000, seed=29)
+_D = KeyPositions.fixed_record(_KEYS, 16)
+_SPEC = ServeSpec(cache_bytes=(64 << 10,),
+                  retry=RetryPolicy(max_attempts=4, backoff_s=1e-5,
+                                    max_backoff_s=1e-4))
+
+
+def _cache_pages(svc):
+    return {pid: data for t in svc.cache.tiers for pid, data in t.items()}
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("ftprop") / "index.air")
+    write_index(path, demo_serving_design(_D), page_bytes=P)
+    qs = np.random.default_rng(5).choice(_KEYS, 500)
+    with IndexService(path, profile=None, spec=_SPEC) as svc:
+        want = svc.lookup(qs)
+        pages = _cache_pages(svc)
+        meta_end = min(lm.offset for lm in svc.meta.layers)
+    return path, qs, want, pages, meta_end
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       eio=st.floats(0.0, 0.5),
+       short=st.floats(0.0, 0.5),
+       corrupt=st.floats(0.0, 1.0),
+       stall=st.floats(0.0, 0.3))
+def test_recoverable_faults_are_invisible(baseline, seed, eio, short,
+                                          corrupt, stall):
+    path, qs, want, pages, meta_end = baseline
+    # every fault kind bounded under the retry budget (attempts < 4);
+    # corruption gated to multi-page reads so the engine's single-page
+    # repair refetch comes back clean; faults gated past the meta region
+    # so a dense schedule cannot spend the whole budget inside the header
+    # parse before a single data page is served
+    with IndexService(path, profile=None, spec=_SPEC,
+                      backend_factory=lambda p: FaultInjectingBackend(
+                          FileBackend(p), seed=seed, page_bytes=P,
+                          eio_rate=eio, eio_attempts=2,
+                          short_rate=short, short_attempts=1,
+                          corrupt_rate=corrupt, corrupt_attempts=1,
+                          stall_rate=stall, stall_seconds=1e-4,
+                          stall_attempts=1,
+                          only_over_bytes=P if corrupt else 0,
+                          only_from_offset=meta_end)) as svc:
+        got = svc.lookup(qs)
+        stats = svc.stats
+        faulted_pages = _cache_pages(svc)
+    assert np.array_equal(want, got)
+    assert faulted_pages == pages
+    # the measured tier fit sees only clean samples: stripping tainted
+    # ones by hand must change nothing
+    clean_only = dataclasses.replace(
+        stats, read_samples=[r for r in stats.read_samples if not r[3]])
+    assert measured_backing_profile(stats, min_samples=2) == \
+        measured_backing_profile(clean_only, min_samples=2)

@@ -383,7 +383,7 @@ def test_prefetch_stage_warms_cache_and_tags_overlapped(served):
                       spec=ServeSpec(cache_bytes=(256 << 10,),
                                      pipeline_depth=1,
                                      prefetch_layers=2)) as svc:
-        staged = svc._prefetch_batch(qs[:200])    # cold cache: must pread
+        staged = svc._prefetch_task(qs[:200])     # cold cache: must pread
         assert staged > 0
         assert svc.stats.overlapped_preads > 0
         assert svc.stats.overlapped_pread_seconds > 0
