@@ -244,6 +244,7 @@ TUNE_JSON_PATH = None      # set by main() via --tune-json
 BASELINE_JSON_PATH = None  # set by main() via --baseline-json
 FLEET_JSON_PATH = None     # set by main() via --fleet-json
 CHAOS_JSON_PATH = None     # set by main() via --chaos-json
+P99_JSON_PATH = None       # set by main() via --p99-json
 
 
 def bench_serve():
@@ -292,6 +293,28 @@ def bench_chaos():
             json.dump(results, f, indent=2)
         print(f"# wrote {CHAOS_JSON_PATH}", flush=True)
     fatal = serve_bench.chaos_fatal_warnings(results)
+    if fatal:
+        for msg in fatal:
+            print(f"::error::{msg}")
+        raise SystemExit(1)
+
+
+# ---------------------------------------------------------------------------
+# Tail-latency tuning gate (mean vs p99 objective) — BENCH_p99.json
+# ---------------------------------------------------------------------------
+def bench_p99():
+    try:
+        from benchmarks import serve_bench
+    except ImportError:                # invoked as `python benchmarks/run.py`
+        import serve_bench
+    results = serve_bench.run_p99_bench()
+    serve_bench.emit_p99(results)
+    if P99_JSON_PATH:
+        import json
+        with open(P99_JSON_PATH, "w") as f:
+            json.dump(results, f, indent=2)
+        print(f"# wrote {P99_JSON_PATH}", flush=True)
+    fatal = serve_bench.p99_fatal_warnings(results)
     if fatal:
         for msg in fatal:
             print(f"::error::{msg}")
@@ -383,6 +406,7 @@ BENCHES = [
     bench_serve,
     bench_fleet,
     bench_chaos,
+    bench_p99,
     bench_tune,
     bench_baseline,
     bench_roofline,
@@ -409,7 +433,7 @@ def _take_json_flag(argv: list, flag: str, default_path: str):
 
 def main() -> None:
     global SERVE_JSON_PATH, TUNE_JSON_PATH, BASELINE_JSON_PATH, \
-        FLEET_JSON_PATH, CHAOS_JSON_PATH
+        FLEET_JSON_PATH, CHAOS_JSON_PATH, P99_JSON_PATH
     argv = list(sys.argv[1:])
     # emit BENCH_*.json (perf trajectories)
     SERVE_JSON_PATH = _take_json_flag(argv, "--serve-json", "BENCH_serve.json")
@@ -420,6 +444,7 @@ def main() -> None:
                                       "BENCH_fleet.json")
     CHAOS_JSON_PATH = _take_json_flag(argv, "--chaos-json",
                                       "BENCH_chaos.json")
+    P99_JSON_PATH = _take_json_flag(argv, "--p99-json", "BENCH_p99.json")
     only = argv[0] if argv else None
     print("name,us_per_call,derived")
     for bench in BENCHES:

@@ -55,7 +55,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "..", "src"))
 
 from repro.api import Index, RetryPolicy, ServeSpec, TuneSpec, detect_drift
-from repro.core import KeyPositions, PROFILES, expected_latency
+from repro.core import (KeyPositions, PROFILES, airtune, expected_latency,
+                        profile_to_dict, quantile_latency)
 from repro.core.baselines import build_fixed_btree, tune_pgm, tune_rmi
 from repro.core.serialize import lookup_serialized, write_index
 from repro.core.storage import CachedProfile
@@ -63,7 +64,8 @@ from repro.fleet import Fleet, FleetSpec, ShardUnavailableError, \
     demand_from_design
 from repro.serve import (FaultInjectingBackend, FileBackend, IndexService,
                          ReadError, StorageError)
-from repro.serve.index_service import demo_serving_design
+from repro.serve.index_service import (ServeStats, demo_serving_design,
+                                       distributional_backing_profile)
 from repro.data.datasets import sosd_like
 
 N_KEYS = 200_000
@@ -917,6 +919,286 @@ def chaos_fatal_warnings(results: dict) -> list:
     return fatal
 
 
+# ---------------------------------------------------------------------------
+# tail-latency gate (--p99 / --p99-only) — BENCH_p99.json
+# ---------------------------------------------------------------------------
+# The end-to-end tail-tuning loop: calibrate a stall-heavy *data* tier
+# through the fault backend into a DistributionalProfile (ServeStats
+# pread reservoir → distributional_backing_profile), tune the SAME data
+# twice — mean objective vs E[T] + w·Q_0.99[T] — and serve both
+# head-to-head against the SAME bursty tier, judging on realized
+# per-lookup wall clock (engine walk + the final data-range read).
+#
+# The simulated deployment: the index file sits on a throttled but
+# *reliable* tier (every pread sleeps ℓ + Δ/B), while the records live
+# on a remote tier with the same affine cost plus a heavy stall tail —
+# reads strictly wider than P99_STALL_OVER stall P99_STALL_SECONDS at
+# rate P99_STALL_RATE (deterministic per window, unbounded attempts, so
+# the schedule holds for the whole run).  Large records put the
+# objectives in real tension: narrow (stall-safe) data windows need a
+# deeper/fatter index — extra ℓ per lookup — while wide windows are
+# cheaper in expectation (stall *mass* rate·stall ≈ 0.3 ms < ℓ) but
+# carry the tail (surcharge ≈ rate·stall·w/(1−p) ≈ 30 ms).  The mean
+# objective buys the wide windows; the p99 objective refuses them.
+# Both tunes see the same fitted profile; only the objective differs.
+P99_OBJECTIVE = {"p": 0.99, "weight": 1.0}
+P99_N_KEYS = 400_000
+P99_RECORD = 1024              # bytes per record (the data tier is wide)
+P99_PAGE = 4096
+P99_BASE_SLEEP = 1e-3          # ℓ of the simulated tiers (s per pread)
+P99_BANDWIDTH = 256e6          # B of the simulated tiers (bytes/s)
+P99_STALL_OVER = 32768         # data reads strictly wider can stall
+P99_STALL_RATE = 0.03          # fraction of wide windows that stall
+P99_STALL_SECONDS = 10e-3      # the stall itself (heavy tail >> ℓ)
+P99_SEED = 5
+# calibration grid: sizes × probes lands exactly at the reservoir cap, so
+# the fit sees every probe (no subsampling noise on the tail estimate)
+P99_CAL_SIZES = (4096, 16384, 32768, 49152, 65536, 131072, 262144)
+P99_CAL_PROBES = 73            # 7 × 73 = 511 ≤ READ_SAMPLE_CAP
+P99_LOOKUPS = 1200
+P99_SPEC = TuneSpec(lam_low=2**10, lam_high=2**19, lam_base=2.0, k=4,
+                    max_layers=6, page_bytes=P99_PAGE)
+P99_SERVE_SPEC = ServeSpec(cache_bytes=(P99_PAGE,))   # ~no cache: every
+#                            lookup pays the tier, stalls stay exposed
+
+
+class _ThrottledBackend(FileBackend):
+    """Simulated slow tier over a local file: ℓ + Δ/B of sleep per
+    pread, then real bytes — realized wall clock, not a model, is what
+    the two tuning arms are judged on."""
+
+    def pread(self, nbytes: int, offset: int) -> bytes:
+        time.sleep(P99_BASE_SLEEP + nbytes / P99_BANDWIDTH)
+        return super().pread(nbytes, offset)
+
+
+def _p99_data_backend(data_path: str) -> FaultInjectingBackend:
+    """The record tier: throttled + the heavy-tailed stall schedule."""
+    return FaultInjectingBackend(
+        _ThrottledBackend(data_path), seed=P99_SEED,
+        stall_rate=P99_STALL_RATE, stall_seconds=P99_STALL_SECONDS,
+        stall_attempts=10**9, only_over_bytes=P99_STALL_OVER,
+        page_bytes=P99_PAGE)
+
+
+def _p99_calibrate(data_path: str) -> tuple:
+    """The §3.2 profiling pass, distribution-aware: probe the (bursty)
+    record tier at a grid of read sizes through the ServeStats pread
+    reservoir and fit the DistributionalProfile tuning consumes."""
+    be = _p99_data_backend(data_path)
+    st = ServeStats()
+    rng = np.random.default_rng(17)
+    try:
+        size = be.size()
+        for nbytes in P99_CAL_SIZES:
+            pages = max((size - nbytes) // P99_PAGE, 1)
+            for _ in range(P99_CAL_PROBES):
+                off = int(rng.integers(0, pages)) * P99_PAGE
+                t0 = time.perf_counter()
+                be.pread(nbytes, off)
+                st.record_read(nbytes, time.perf_counter() - t0)
+    finally:
+        be.close()
+    prof = distributional_backing_profile(st)
+    if prof is None:
+        raise RuntimeError("p99 calibration failed to fit a profile")
+    return prof, st
+
+
+def _p99_layers_identical(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    for la, lb in zip(a, b):
+        if la.kind != lb.kind:
+            return False
+        fields = (("piece_keys", "piece_pos", "node_piece_off")
+                  if la.kind == "step" else ("node_keys", "x1", "y1", "m",
+                                             "delta"))
+        if not all(np.array_equal(getattr(la, f), getattr(lb, f))
+                   for f in fields):
+            return False
+    return True
+
+
+def _p99_serve(index_path: str, data_path: str, queries: np.ndarray,
+               warmup: int = 16) -> dict:
+    """Serve single-query lookups end to end: the engine walks the index
+    through the throttled (reliable) tier, then the returned data-layer
+    byte range is read through the bursty record tier — the Eq. 6 data
+    read, realized.  Realized wall per lookup (engine + data read) is
+    the judged quantity; a second ServeStats fed the end-to-end walls
+    exercises the online reservoir p50/p99 estimator on the same stream.
+    """
+    walls = []
+    svc = IndexService(index_path, profile=None, spec=P99_SERVE_SPEC,
+                       backend_factory=_ThrottledBackend)
+    data_be = _p99_data_backend(data_path)
+    e2e = ServeStats()
+    try:
+        for q in queries[:warmup]:          # page-walk + kernel warmup
+            svc.lookup(np.array([q], dtype=np.uint64))
+        for q in queries:
+            t0 = time.perf_counter()
+            out = svc.lookup(np.array([q], dtype=np.uint64))
+            lo, hi = int(out[0, 0]), int(out[0, 1])
+            data_be.pread(max(hi - lo, 1), lo)
+            wall = time.perf_counter() - t0
+            walls.append(wall)
+            e2e.record_lookup(1, wall)
+        online_p50 = e2e.lookup_quantile(0.5)
+        online_p99 = e2e.lookup_quantile(0.99)
+        s = svc.stats
+        counters = {"index_preads": int(s.preads),
+                    "data_preads": len(walls),
+                    "hit_rate": float(s.hit_rate)}
+    finally:
+        data_be.close()
+        svc.close()
+    w = np.asarray(walls, dtype=np.float64)
+    return {
+        "lookups": len(walls),
+        "mean_us": float(w.mean() * 1e6),
+        "p50_us": float(np.percentile(w, 50) * 1e6),
+        "p99_us": float(np.percentile(w, 99) * 1e6),
+        "online_p50_us": (online_p50 * 1e6
+                          if online_p50 is not None else None),
+        "online_p99_us": (online_p99 * 1e6
+                          if online_p99 is not None else None),
+        **counters,
+    }
+
+
+def run_p99_bench(n_keys: int = P99_N_KEYS,
+                  n_lookups: int = P99_LOOKUPS) -> dict:
+    keys = sosd_like("gmm", n_keys)
+    D = KeyPositions.fixed_record(keys, P99_RECORD)
+    workdir = tempfile.mkdtemp(prefix="p99_bench_")
+
+    # the record tier itself: a sparse file spanning the data extent (the
+    # bytes read are zeros — only offsets/sizes matter to the simulated
+    # tier), giving calibration a real window population to sample
+    data_path = os.path.join(workdir, "records.dat")
+    with open(data_path, "wb") as f:
+        f.truncate(int(D.n) * P99_RECORD)
+    t0 = time.perf_counter()
+    fitted, cal_stats = _p99_calibrate(data_path)
+    cal_wall = time.perf_counter() - t0
+
+    # head-to-head tunes over the SAME fitted profile
+    spec_mean = P99_SPEC
+    spec_p99 = P99_SPEC.replace(objective=P99_OBJECTIVE)
+    mean_idx = Index.tune(D, fitted, spec_mean).build()
+    p99_idx = Index.tune(D, fitted, spec_p99).build()
+
+    # identity gate: the facade's default ("mean") objective must be
+    # bit-identical to a direct strategy call without the kwarg at all
+    raw = airtune(D, fitted, spec_mean.builders(), k=spec_mean.k,
+                  max_layers=spec_mean.max_layers)
+    identity = bool(raw.cost == mean_idx.result.cost
+                    and raw.builder_names == mean_idx.result.builder_names
+                    and _p99_layers_identical(raw.design.layers,
+                                              mean_idx.result.design.layers))
+    designs_differ = not (
+        mean_idx.result.builder_names == p99_idx.result.builder_names
+        and _p99_layers_identical(mean_idx.result.design.layers,
+                                  p99_idx.result.design.layers))
+
+    p, w = P99_OBJECTIVE["p"], P99_OBJECTIVE["weight"]
+    predicted = {
+        arm: {
+            "mean_us": expected_latency(idx.result.design, fitted) * 1e6,
+            "p99_us": quantile_latency(idx.result.design, fitted, p) * 1e6,
+        }
+        for arm, idx in (("mean", mean_idx), ("p99", p99_idx))}
+
+    mean_path = os.path.join(workdir, "tuned_mean.air")
+    p99_path = os.path.join(workdir, "tuned_p99.air")
+    mean_idx.save(mean_path)
+    p99_idx.save(p99_path)
+
+    rng = np.random.default_rng(1)
+    queries = rng.choice(D.keys, n_lookups)
+    realized = {"mean": _p99_serve(mean_path, data_path, queries),
+                "p99": _p99_serve(p99_path, data_path, queries)}
+
+    results = {
+        "n_keys": int(D.n), "n_lookups": int(n_lookups),
+        "record_bytes": P99_RECORD,
+        "page_bytes": P99_PAGE, "objective": P99_OBJECTIVE,
+        "tier": {"base_sleep_s": P99_BASE_SLEEP,
+                 "bandwidth": P99_BANDWIDTH,
+                 "stall_over_bytes": P99_STALL_OVER,
+                 "stall_rate": P99_STALL_RATE,
+                 "stall_seconds": P99_STALL_SECONDS},
+        "calibration": {
+            "probes": len(cal_stats.read_samples),
+            "sizes": list(P99_CAL_SIZES),
+            "wall_s": cal_wall,
+            "fitted_profile": profile_to_dict(fitted),
+        },
+        "designs": {"mean": mean_idx.describe(), "p99": p99_idx.describe()},
+        "recorded_objectives": {
+            "mean": mean_idx.result.objective,
+            "p99": p99_idx.result.objective},
+        "predicted": predicted,
+        "realized": realized,
+        "identity_mean_objective": identity,
+        "designs_differ": designs_differ,
+        "p99_wins_realized_p99":
+            bool(realized["p99"]["p99_us"] < realized["mean"]["p99_us"]),
+        "mean_regression_ratio":
+            realized["p99"]["mean_us"] / max(realized["mean"]["mean_us"],
+                                             1e-12),
+    }
+    return results
+
+
+def emit_p99(results: dict) -> None:
+    emit("p99_identity", 0.0,
+         f"mean_objective_bit_identical={results['identity_mean_objective']}")
+    for arm in ("mean", "p99"):
+        r = results["realized"][arm]
+        pr = results["predicted"][arm]
+        emit(f"p99_tuned_{arm}", r["p99_us"],
+             f"mean={r['mean_us']:.0f}us p50={r['p50_us']:.0f}us "
+             f"p99={r['p99_us']:.0f}us "
+             f"(online_p99={r['online_p99_us'] or float('nan'):.0f}us, "
+             f"predicted_p99={pr['p99_us']:.0f}us) "
+             f"index_preads={r['index_preads']}")
+    emit("p99_acceptance", 0.0,
+         f"designs_differ={results['designs_differ']} "
+         f"p99_wins={results['p99_wins_realized_p99']} "
+         f"mean_ratio={results['mean_regression_ratio']:.2f}")
+
+
+def p99_fatal_warnings(results: dict) -> list:
+    """FATAL list for the tail-latency gate: the mean-objective identity
+    and the head-to-head realized-p99 win.  A realized *mean* regression
+    of the p99-tuned design only warns — trading some expectation for the
+    tail is the objective working as designed, but a large regression
+    deserves eyes."""
+    fatal = []
+    if not results["identity_mean_objective"]:
+        fatal.append("p99: objective='mean' tune diverged from the "
+                     "pre-objective search — the default must stay "
+                     "bit-identical")
+    if not results["designs_differ"]:
+        fatal.append("p99: mean- and p99-tuned designs are identical — "
+                     "the scenario no longer separates the objectives "
+                     "(retune the bench knobs)")
+    if not results["p99_wins_realized_p99"]:
+        fatal.append(
+            f"p99: tail-tuned design lost on realized p99 "
+            f"({results['realized']['p99']['p99_us']:.0f}us vs "
+            f"mean-tuned {results['realized']['mean']['p99_us']:.0f}us)")
+    if results["mean_regression_ratio"] > 2.0:
+        print(f"::warning::p99-tuned design's realized mean is "
+              f"{results['mean_regression_ratio']:.2f}x the mean-tuned "
+              f"design's (expected to trade some mean for tail, but check "
+              f"the margin)")
+    return fatal
+
+
 def run_serve_bench(n_keys: int = N_KEYS, n_queries: int = 4096) -> dict:
     keys = sosd_like("gmm", n_keys)
     D = KeyPositions.fixed_record(keys, RECORD)
@@ -1032,8 +1314,33 @@ def main() -> None:
     ap.add_argument("--chaos-json", metavar="PATH", default=None,
                     help="dump the chaos gate results "
                          "(e.g. BENCH_chaos.json); implies --chaos")
+    ap.add_argument("--p99", action="store_true",
+                    help="also run the tail-latency gate (tune-for-p99 vs "
+                         "tune-for-mean under bursty stalls; p99 win is "
+                         "FATAL, a mean regression warns)")
+    ap.add_argument("--p99-only", action="store_true",
+                    help="run only the tail-latency gate")
+    ap.add_argument("--p99-json", metavar="PATH", default=None,
+                    help="dump the tail-latency gate results "
+                         "(e.g. BENCH_p99.json); implies --p99")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+
+    p99_results = None
+    if args.p99 or args.p99_only or args.p99_json:
+        p99_results = run_p99_bench()
+        emit_p99(p99_results)
+        if args.p99_json:
+            with open(args.p99_json, "w") as f:
+                json.dump(p99_results, f, indent=2)
+            print(f"# wrote {args.p99_json}", flush=True)
+        if args.p99_only:
+            fatal = p99_fatal_warnings(p99_results)
+            if fatal:
+                for msg in fatal:
+                    print(f"::error::{msg}")
+                sys.exit(1)
+            return
 
     chaos_results = None
     if args.chaos or args.chaos_only or args.chaos_json:
@@ -1137,6 +1444,8 @@ def main() -> None:
                 f"(ratio={fleet_results['fleet_vs_mono']:.4f}, need < 0.999)")
     if chaos_results is not None:
         fatal.extend(chaos_fatal_warnings(chaos_results))
+    if p99_results is not None:
+        fatal.extend(p99_fatal_warnings(p99_results))
     if fatal:
         for msg in fatal:
             print(f"::error::{msg}")

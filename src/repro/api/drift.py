@@ -26,7 +26,9 @@ import math
 
 from repro.core.storage import (CachedProfile, PROFILES, StorageProfile,
                                 profile_from_dict)
-from repro.serve.index_service import ServeStats, observed_profile_from_stats
+from repro.serve.index_service import (MIN_FIT_SAMPLES, ServeStats,
+                                       observed_profile_from_stats,
+                                       untainted_read_samples)
 
 #: observed/recorded per-lookup cost ratio beyond which we call drift
 DRIFT_RATIO = 1.25
@@ -71,6 +73,12 @@ class DriftReport:
     action: str                      # "none" | "observe" | "retune"
     observed_profile: CachedProfile | None = None
     threshold: float = DRIFT_RATIO
+    # online per-lookup latency quantiles (per-query seconds, estimated
+    # from the uniform lookup reservoir); None before any lookups.  These
+    # are what a p99 SLO actually experiences — the raw material for
+    # deciding to retune with a quantile objective.
+    observed_p50_seconds: float | None = None
+    observed_p99_seconds: float | None = None
 
     def describe(self) -> str:
         rec = (f"{self.recorded_seconds * 1e6:.1f}us"
@@ -98,6 +106,12 @@ class DriftReport:
             "drifted": self.drifted,
             "action": self.action,
             "threshold": self.threshold,
+            "observed_p50_us": (fin(self.observed_p50_seconds * 1e6)
+                                if self.observed_p50_seconds is not None
+                                else None),
+            "observed_p99_us": (fin(self.observed_p99_seconds * 1e6)
+                                if self.observed_p99_seconds is not None
+                                else None),
         }
 
 
@@ -106,7 +120,8 @@ def drift_from_stats(stats: ServeStats, recorded_cost: float | None, *,
                      cache: StorageProfile | None = None,
                      threshold: float = DRIFT_RATIO,
                      min_queries: int = MIN_QUERIES,
-                     measured: bool = True) -> DriftReport:
+                     measured: bool = True,
+                     distributional: bool = False) -> DriftReport:
     """Pure comparison of a :class:`ServeStats` against a recorded cost —
     shared by the live (:func:`detect_drift`) and offline
     (:func:`detect_drift_from_file`) entry points.
@@ -119,6 +134,15 @@ def drift_from_stats(stats: ServeStats, recorded_cost: float | None, *,
     predicted = stats.walk_query_seconds
     queries = int(stats.queries)
     confidence = min(1.0, queries / float(max(min_queries, 1)))
+    # a fault-dominated window: the reservoir is full enough to fit a
+    # profile, but (nearly) everything in it is tainted — retried,
+    # repaired, or deadline-hit reads.  Nothing trustworthy can be
+    # fitted (measured/distributional fits return None), and a drift
+    # verdict from such a window would model a flaky tier as a slow
+    # one, so the report degrades to a confidence-0 "observe".
+    if len(stats.read_samples) >= MIN_FIT_SAMPLES \
+            and len(untainted_read_samples(stats)) < MIN_FIT_SAMPLES:
+        confidence = 0.0
     if recorded_cost is not None and recorded_cost > 0 \
             and math.isfinite(predicted):
         ratio = predicted / recorded_cost
@@ -138,7 +162,10 @@ def drift_from_stats(stats: ServeStats, recorded_cost: float | None, *,
     profile = None
     if backing is not None:
         profile = observed_profile_from_stats(stats, backing, cache,
-                                              measured=measured)
+                                              measured=measured,
+                                              distributional=distributional)
+    p50 = stats.lookup_quantile(0.5)
+    p99 = stats.lookup_quantile(0.99)
     return DriftReport(observed_seconds=float(observed),
                        predicted_seconds=float(predicted),
                        recorded_seconds=(float(recorded_cost)
@@ -148,20 +175,25 @@ def drift_from_stats(stats: ServeStats, recorded_cost: float | None, *,
                        confidence=float(confidence),
                        queries=queries, hit_rate=float(stats.hit_rate),
                        drifted=bool(drifted), action=action,
-                       observed_profile=profile, threshold=float(threshold))
+                       observed_profile=profile, threshold=float(threshold),
+                       observed_p50_seconds=p50, observed_p99_seconds=p99)
 
 
 def detect_drift(service, *, threshold: float = DRIFT_RATIO,
                  min_queries: int = MIN_QUERIES,
-                 measured: bool = True) -> DriftReport:
+                 measured: bool = True,
+                 distributional: bool = False) -> DriftReport:
     """Compare a live :class:`repro.serve.IndexService`'s observed E[T]
-    against the ``tune.cost`` recorded in its file meta."""
+    against the ``tune.cost`` recorded in its file meta.
+    ``distributional=True`` makes the report's ``observed_profile`` carry
+    the per-Δ distribution fit — the input a quantile-objective retune
+    needs."""
     recorded = (service.tune_meta or {}).get("cost")
     return drift_from_stats(service.stats, recorded,
                             backing=service.profile,
                             cache=service.cache_profile,
                             threshold=threshold, min_queries=min_queries,
-                            measured=measured)
+                            measured=measured, distributional=distributional)
 
 
 def detect_drift_from_file(index_path: str, *,
@@ -169,7 +201,8 @@ def detect_drift_from_file(index_path: str, *,
                            cache: StorageProfile | None = None,
                            threshold: float = DRIFT_RATIO,
                            min_queries: int = MIN_QUERIES,
-                           measured: bool = True) -> DriftReport | None:
+                           measured: bool = True,
+                           distributional: bool = False) -> DriftReport | None:
     """Offline observe→retune: read the persisted ``<path>.stats.json``
     snapshot and the index meta's recorded cost/profile, no service
     required.  ``backing`` defaults to the profile the snapshot was
@@ -235,4 +268,5 @@ def detect_drift_from_file(index_path: str, *,
             backing = PROFILES[tune["profile"]]
     return drift_from_stats(stats, tune.get("cost"), backing=backing,
                             cache=cache, threshold=threshold,
-                            min_queries=min_queries, measured=measured)
+                            min_queries=min_queries, measured=measured,
+                            distributional=distributional)

@@ -35,7 +35,8 @@ from repro.core.registry import SEARCH_STRATEGIES
 from repro.core.airtune import TuneResult, TuneStats
 from repro.core.serialize import (SerializedIndex, materialize_design,
                                   read_meta, write_index)
-from repro.core.storage import (PROFILES, StorageProfile, profile_from_dict,
+from repro.core.storage import (PROFILES, StorageProfile,
+                                normalize_objective, profile_from_dict,
                                 profile_to_dict)
 from repro.core.sweep import DEFAULT_CACHE_ENTRIES, LayerCache
 
@@ -253,6 +254,16 @@ class Index:
             if self._seed_layers and _strategy_accepts(strategy,
                                                        "seed_layers"):
                 kwargs["seed_layers"] = self._seed_layers
+            if _strategy_accepts(strategy, "objective"):
+                kwargs["objective"] = spec.objective
+            elif normalize_objective(spec.objective) is not None:
+                # a quantile objective silently tuned for the mean would
+                # be the worst failure mode: loud refusal instead
+                raise ValueError(
+                    f"strategy {spec.strategy!r} does not accept the "
+                    f"'objective' kwarg; quantile objectives require an "
+                    f"objective-aware strategy (built-ins: airtune, "
+                    f"brute_force, beam)")
             self._result = strategy(self._data, self._profile,
                                     spec.builders(), k=spec.k,
                                     max_layers=spec.max_layers, **kwargs)
@@ -293,6 +304,9 @@ class Index:
             # NaN is not valid strict JSON — null out unknown costs
             "cost": cost if np.isfinite(cost) else None,
             "builder_names": list(self._result.builder_names),
+            # the objective `cost` was minimized under ("mean" | {p, weight});
+            # also present inside spec.objective for spec-carrying indexes
+            "objective": self._result.objective,
             "profile": self._profile_name,
             "profile_params": profile_to_dict(self._profile),
         }

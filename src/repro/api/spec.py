@@ -18,7 +18,7 @@ import json
 
 from repro.core.builders import DEFAULT_FAMILIES, LayerBuilder, make_builders
 from repro.core.registry import BUILDER_FAMILIES, SEARCH_STRATEGIES
-from repro.core.storage import PROFILES
+from repro.core.storage import PROFILES, normalize_objective
 
 #: resident-prefix descent backends, in fallback order (fused_descent ops)
 SERVE_BACKENDS = ("pallas", "jnp", "numpy")
@@ -50,6 +50,14 @@ class TuneSpec:
     cache_bytes: default tiered-cache capacities (hottest first) that
                  ``Index.serve()`` / ``IndexService`` use when the caller
                  does not override them; () = engine default.
+    objective:   what the search minimizes — ``"mean"`` (Eq. 6 expected
+                 lookup latency; the default, bit-identical to the
+                 pre-objective search) or ``{"p": q, "weight": w}`` for
+                 the tail objective ``E[T] + w·Q̂_p[T]`` (see
+                 :class:`repro.core.storage.ObjectiveProfile` for the
+                 quantile propagation).  Recorded in the on-disk meta;
+                 metas written before this field simply omit it and
+                 parse as ``"mean"``.
     """
 
     families: tuple = DEFAULT_FAMILIES
@@ -62,6 +70,7 @@ class TuneSpec:
     strategy: str = "airtune"
     page_bytes: int = 0
     cache_bytes: tuple = ()
+    objective: object = "mean"
 
     def __post_init__(self):
         object.__setattr__(self, "families", tuple(self.families))
@@ -89,6 +98,7 @@ class TuneSpec:
         if self.page_bytes < 0 or any(c < 0 for c in self.cache_bytes):
             raise ValueError(f"negative sizes: page_bytes={self.page_bytes} "
                              f"cache_bytes={self.cache_bytes}")
+        normalize_objective(self.objective)   # ValueError on bad objectives
         return self
 
     # -- materialization ----------------------------------------------------

@@ -46,7 +46,8 @@ from .complexity import (S_STEP, step_index_complexity,
 from .keyset import KeyPositions
 from .latency import (IndexDesign, batched_mean_read_costs, expected_latency,
                       ideal_latency_with_index, latency_breakdown,
-                      mean_read_volume)
+                      mean_excess_per_lookup, mean_read_volume,
+                      objective_latency, quantile_latency)
 from .descent import (coalesce_ranges, covering_index, descend_band_layer,
                       descend_step_layer)
 from .lookup import LookupResult, last_mile_search, lookup_batch, verify_lookup
@@ -56,9 +57,11 @@ from .serialize import (IndexFileMeta, SerializedIndex, load_index,
                         materialize_design, page_span, record_aligned_range,
                         write_index)
 from .storage import (AffineProfile, AffineUniformProfile, CachedProfile,
-                      MeasuredProfile, PROFILES, StorageProfile,
-                      affine_coefficients, profile_from_dict,
-                      profile_local_storage, profile_to_dict)
+                      DistributionalProfile, MeasuredProfile, ObjectiveProfile,
+                      PROFILES, StorageProfile, affine_coefficients,
+                      normalize_objective, objective_profile,
+                      profile_from_dict, profile_local_storage,
+                      profile_to_dict)
 from . import baselines  # noqa: F401  (registers btree / rmi_leaf / pgm)
 from .baselines import (BASELINE_FAMILIES, PGM_EPS_GRID, build_fixed_btree,
                         build_pgm, build_rmi, build_rmi_leaf, data_calculator,

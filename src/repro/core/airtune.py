@@ -51,7 +51,7 @@ from .keyset import KeyPositions
 from .latency import IndexDesign, expected_latency, ideal_latency_with_index
 from .nodes import Layer, outline
 from .registry import register_strategy
-from .storage import StorageProfile
+from .storage import StorageProfile, normalize_objective, objective_profile
 from .sweep import SCORE_SAMPLE, LayerCache, SweepEngine
 
 
@@ -72,10 +72,12 @@ class TuneStats:
 @dataclasses.dataclass(frozen=True)
 class TuneResult:
     design: IndexDesign
-    cost: float               # L_SM(X; Θ*, T), Eq. (6)
+    cost: float               # the objective's value on design: Eq. (6) for
+    #                           "mean", E[T] + w·Q̂_p[T] for quantile tuning
     stats: TuneStats
     strategy: str = "airtune"          # which SearchStrategy produced this
     builder_names: tuple = ()          # provenance: F.name per layer, bottom-up
+    objective: object = "mean"         # "mean" | {"p": q, "weight": w}
 
     def describe(self) -> str:
         return (f"[{self.strategy}] {self.design.describe()}  "
@@ -98,10 +100,12 @@ class SearchStrategy(Protocol):
     ``sweep`` (False = legacy per-builder loop), ``score_backend``
     (``"numpy"`` default | ``"jnp"`` | ``"pallas"`` ranking fast paths),
     ``layer_cache`` (a shared :class:`repro.core.sweep.LayerCache` for
-    cross-tune build reuse) and ``seed_layers`` (warm-start: a previous
+    cross-tune build reuse), ``seed_layers`` (warm-start: a previous
     design as ``(builder_name, layer)`` pairs, injected into the cache —
-    and, for ``beam``, the initial frontier); third-party strategies
-    need not.
+    and, for ``beam``, the initial frontier) and ``objective``
+    (None/"mean" | ``{"p": q, "weight": w}`` tail-latency objective);
+    third-party strategies need not (the facade refuses to route a
+    quantile objective to a strategy that does not accept the kwarg).
     """
 
     def __call__(self, D: KeyPositions, profile: StorageProfile,
@@ -135,13 +139,19 @@ def _require_sweep_for_seed(seed_layers, sweep: bool) -> None:
                          "sweep engine; call with sweep=True")
 
 
+def _objective_field(objective):
+    """Normalized provenance value recorded on TuneResult."""
+    norm = normalize_objective(objective)
+    return "mean" if norm is None else {"p": norm[0], "weight": norm[1]}
+
+
 @register_strategy("airtune")
 def airtune(D: KeyPositions, profile: StorageProfile,
             builders: list[LayerBuilder] | None = None, *,
             k: int = 5, max_layers: int = 12, sweep: bool = True,
             score_backend: str = "numpy",
             layer_cache: LayerCache | None = None,
-            seed_layers=None) -> TuneResult:
+            seed_layers=None, objective=None) -> TuneResult:
     """Find Θ* ≈ argmin_Θ L_SM(X; Θ, T) (Table 3) via Alg. 2.
 
     ``seed_layers`` (warm start: a previous design as bottom-up
@@ -149,10 +159,18 @@ def airtune(D: KeyPositions, profile: StorageProfile,
     the old design's path — pure memoization, so the returned design is
     bit-identical to a cold search with strictly fewer builds (the
     warm-vs-cold identity test certifies this).
+
+    ``objective`` (None/"mean" default, or ``{"p": q, "weight": w}``)
+    selects the cost the search minimizes: the mean objective runs on
+    ``profile`` itself (bit-identical to the pre-objective search); a
+    quantile objective swaps in the
+    :class:`~repro.core.storage.ObjectiveProfile` cost curve so the
+    unchanged Alg. 2 recursion ranks designs by ``E[T] + w·Q̂_p[T]``.
     """
     if builders is None:
         builders = make_builders()
     _require_sweep_for_seed(seed_layers, sweep)
+    profile = objective_profile(profile, objective)
     stats = TuneStats()
     t0 = time.perf_counter()
     if sweep:
@@ -170,7 +188,8 @@ def airtune(D: KeyPositions, profile: StorageProfile,
     design = IndexDesign(layers=tuple(layers), data=D)
     # the recursion's incremental cost must agree with the Eq. (6) evaluator
     return TuneResult(design=design, cost=cost, stats=stats,
-                      strategy="airtune", builder_names=tuple(names))
+                      strategy="airtune", builder_names=tuple(names),
+                      objective=_objective_field(objective))
 
 
 def _airtune_rec_sweep(D: KeyPositions, profile: StorageProfile,
@@ -255,7 +274,7 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
                 k: int = 0, max_layers: int = 4, sweep: bool = True,
                 score_backend: str = "numpy",
                 layer_cache: LayerCache | None = None,
-                seed_layers=None) -> TuneResult:
+                seed_layers=None, objective=None) -> TuneResult:
     """Exhaustive reference search (no top-k pruning, no τ̂ guidance).
 
     Exponential in |𝓕|; only usable on small inputs.  Tests use it to
@@ -270,6 +289,7 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
     if builders is None:
         builders = make_builders()
     _require_sweep_for_seed(seed_layers, sweep)
+    profile = objective_profile(profile, objective)
     stats = TuneStats()
     t0 = time.perf_counter()
     # rank_scores=False: brute force never ranks by Eq. (9), so the sweep
@@ -324,7 +344,8 @@ def brute_force(D: KeyPositions, profile: StorageProfile,
     stats.wall_seconds = time.perf_counter() - t0
     return TuneResult(design=IndexDesign(layers=tuple(layers), data=D),
                       cost=cost, stats=stats, strategy="brute_force",
-                      builder_names=tuple(names))
+                      builder_names=tuple(names),
+                      objective=_objective_field(objective))
 
 
 @register_strategy("beam")
@@ -333,7 +354,7 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
                 k: int = 5, max_layers: int = 12, sweep: bool = True,
                 score_backend: str = "numpy",
                 layer_cache: LayerCache | None = None,
-                seed_layers=None) -> TuneResult:
+                seed_layers=None, objective=None) -> TuneResult:
     """Beam search over layer stacks: Alg. 2's graph, breadth-first.
 
     A frontier of at most ``k`` partial designs (bottom-up layer stacks)
@@ -354,6 +375,7 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
     if builders is None:
         builders = make_builders()
     _require_sweep_for_seed(seed_layers, sweep)
+    profile = objective_profile(profile, objective)
     stats = TuneStats()
     t0 = time.perf_counter()
     engine = SweepEngine(builders, profile, stats,
@@ -440,4 +462,5 @@ def beam_search(D: KeyPositions, profile: StorageProfile,
     assert abs(expected_latency(design, profile) - best_cost) \
         <= 1e-9 * max(best_cost, 1e-30)
     return TuneResult(design=design, cost=best_cost, stats=stats,
-                      strategy="beam", builder_names=tuple(best_names))
+                      strategy="beam", builder_names=tuple(best_names),
+                      objective=_objective_field(objective))

@@ -16,7 +16,7 @@ import numpy as np
 
 from .keyset import KeyPositions
 from .nodes import Layer, mean_width, outline
-from .storage import StorageProfile
+from .storage import StorageProfile, normalize_objective, objective_profile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,3 +123,57 @@ def ideal_latency_with_index(profile: StorageProfile) -> float:
     """Cost if an *ideal* extra layer existed: 1-byte root + 1-byte precise
     read of the current level (paper §5.1 stopping criterion)."""
     return float(profile(1.0) + profile(1.0))
+
+
+def mean_excess_per_lookup(design: IndexDesign, profile: StorageProfile) -> float:
+    """Summed per-read upper-tail mass ``Σ E[(Tᵢ − μᵢ)₊]`` over a lookup.
+
+    Mirrors :func:`expected_latency`'s read structure (root in full, one
+    partial read per layer, or the whole collection with no index) with
+    ``profile.mean_excess`` in place of the mean curve.  Zero for
+    deterministic profiles.
+    """
+    data = design.data
+    if design.n_layers == 0:
+        return float(profile.mean_excess(data.size_bytes))
+    outs = design.outlines()
+    total = float(profile.mean_excess(outs[-1].size_bytes))
+    for layer in design.layers:
+        wq = layer.widths_at(data.keys)
+        total += float(np.average(profile.mean_excess(wq),
+                                  weights=data.weights))
+    return total
+
+
+def quantile_latency(design: IndexDesign, profile: StorageProfile,
+                     p: float) -> float:
+    """Estimated per-lookup ``p``-quantile ``Q̂_p[T]`` under ``profile``.
+
+    Independent-pread approximation, documented in
+    :class:`~repro.core.storage.ObjectiveProfile`: Markov's inequality on
+    the summed positive excess bounds the quantile of a sum of pread
+    times by ``Σ μᵢ + (Σ E[(Tᵢ − μᵢ)₊]) / (1 − p)`` — the single-big-jump
+    estimate for the stall-dominated tails observed reservoirs exhibit.
+    For deterministic profiles this collapses to the mean (Eq. 6).
+    """
+    if not 0.0 < float(p) < 1.0:
+        raise ValueError(f"quantile p must be in (0, 1), got {p}")
+    return (expected_latency(design, profile)
+            + mean_excess_per_lookup(design, profile) / (1.0 - float(p)))
+
+
+def objective_latency(design: IndexDesign, profile: StorageProfile,
+                      objective) -> float:
+    """The tuning objective's value for a built design.
+
+    ``"mean"`` (or None) is Eq. 6 exactly; a ``{"p": q, "weight": w}``
+    objective is ``E[T] + w·Q̂_p[T]`` with the quantile from
+    :func:`quantile_latency`.  Equal to
+    ``expected_latency(design, objective_profile(profile, objective))`` —
+    the identity the strategies rely on to rank by the objective through
+    the unchanged mean-latency search.
+    """
+    norm = normalize_objective(objective)
+    if norm is None:
+        return expected_latency(design, profile)
+    return expected_latency(design, objective_profile(profile, objective))

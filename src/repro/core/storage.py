@@ -11,6 +11,13 @@ notes that the optimization works with *any* monotonically increasing
   * :class:`MeasuredProfile`      — monotone piecewise-linear interpolation
     of real measurements, plus a helper that actually measures the local
     filesystem of this machine,
+  * :class:`DistributionalProfile` — per-Δ latency *distributions* (mean,
+    mean-excess, empirical quantiles) fitted from the ServeStats pread
+    reservoir, the raw material of tail-latency tuning,
+  * :class:`ObjectiveProfile`     — a synthetic per-read cost curve that
+    folds the ``E[T] + w·Q_p[T]`` objective into an additive ``C(Δ)`` so
+    every mean-latency search ranks designs by the tail objective
+    unchanged (see the class docstring for the bound),
   * named profiles for the tiers a multi-pod TPU training stack talks to
     (object store / NFS / SSD / host DRAM / HBM / VMEM / ICI / DCN).
 
@@ -23,6 +30,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 
 import numpy as np
 
@@ -35,6 +43,17 @@ class StorageProfile:
     def read_time(self, delta):
         """Vectorized ``T(Δ)``; ``delta`` in bytes (scalar or ndarray)."""
         raise NotImplementedError
+
+    def mean_excess(self, delta):
+        """Per-read upper-tail mass ``E[(T(Δ) − E[T(Δ)])₊]`` in seconds.
+
+        Zero for deterministic profiles (affine/measured constants model
+        the *expected* time only); :class:`DistributionalProfile`
+        overrides this with the fitted empirical excess.  This is the
+        quantity the quantile objective propagates through a layer stack
+        (see :class:`ObjectiveProfile`).
+        """
+        return np.asarray(delta, dtype=np.float64) * 0.0
 
     def __call__(self, delta):
         return self.read_time(delta)
@@ -100,14 +119,210 @@ class MeasuredProfile(StorageProfile):
         return out
 
     def fit_affine(self) -> AffineProfile:
-        """Least-squares affine fit — useful to report ℓ and B of a tier."""
+        """Least-squares affine fit — useful to report ℓ and B of a tier.
+
+        Degenerate measurements — fewer than 2 distinct Δ values (the
+        normal equations are singular; lstsq's minimum-norm solution
+        splits the constant arbitrarily between ℓ and the slope) or
+        all-equal seconds (slope 0, or slightly negative from fp noise)
+        — used to yield negative/NaN predicted latencies that poison
+        batched candidate scoring.  Both shapes now degrade to a
+        *constant* profile at the mean measured seconds, with a warning;
+        a genuinely negative fitted slope is clamped the same way.
+        """
         xs = np.asarray(self.deltas, dtype=np.float64)
         ys = np.asarray(self.seconds, dtype=np.float64)
+        constant = AffineProfile(latency=max(float(np.mean(ys)), 1e-12),
+                                 bandwidth=1e30,  # finite so JSON round-trips
+                                 name=f"{self.name}-affine")
+        if len(np.unique(xs)) < 2 or np.allclose(ys, ys[0]):
+            warnings.warn(
+                f"fit_affine({self.name}): degenerate measurements "
+                "(<2 distinct sizes or constant seconds); using a "
+                "constant profile", RuntimeWarning, stacklevel=2)
+            return constant
         A = np.stack([np.ones_like(xs), xs], axis=1)
         (ell, inv_bw), *_ = np.linalg.lstsq(A, ys, rcond=None)
-        ell = max(float(ell), 1e-12)
-        bw = 1.0 / max(float(inv_bw), 1e-18)
+        ell, inv_bw = float(ell), float(inv_bw)
+        if not (np.isfinite(ell) and np.isfinite(inv_bw)) or inv_bw <= 0.0:
+            warnings.warn(
+                f"fit_affine({self.name}): non-finite or non-positive "
+                f"slope ({inv_bw!r}); using a constant profile",
+                RuntimeWarning, stacklevel=2)
+            return constant
+        ell = max(ell, 1e-12)
+        bw = 1.0 / inv_bw
         return AffineProfile(latency=ell, bandwidth=bw, name=f"{self.name}-affine")
+
+
+@dataclasses.dataclass(frozen=True)
+class DistributionalProfile(StorageProfile):
+    """Per-Δ latency *distributions* fitted from observed preads.
+
+    Beyond the monotone mean curve of :class:`MeasuredProfile`, each
+    measured size carries the empirical upper-tail mass
+    ``me(Δ) = E[(T − E[T])₊]`` and a grid of empirical quantiles.  The
+    mean and mean-excess curves are what the quantile tuning objective
+    consumes (:class:`ObjectiveProfile`); the quantile grid is for
+    reporting (``quantile_time``).
+
+    Both curves are made monotone in Δ by a running max — conservative
+    when a larger read happens to be better-behaved than a smaller one,
+    but required by the search's monotone-``T`` assumption.  Beyond the
+    measured range the mean extrapolates the last segment's slope
+    (bandwidth keeps costing) while the excess holds flat (a stall does
+    not grow with the read size it interrupted).
+    """
+
+    deltas: tuple          # increasing byte sizes
+    means: tuple           # per-Δ mean seconds
+    excess: tuple          # per-Δ E[(T − mean)₊] seconds
+    qs: tuple = ()         # quantile grid in (0, 1], increasing
+    qvalues: tuple = ()    # per-Δ tuple of quantile seconds, len == len(qs)
+    name: str = "distributional"
+
+    def _curve(self, delta, raw, *, extrapolate_slope):
+        d = np.asarray(delta, dtype=np.float64)
+        xs = np.asarray(self.deltas, dtype=np.float64)
+        ys = np.maximum.accumulate(np.asarray(raw, dtype=np.float64))
+        out = np.interp(d, xs, ys)
+        if extrapolate_slope and len(xs) > 1:
+            slope = (ys[-1] - ys[-2]) / max(xs[-1] - xs[-2], 1.0)
+            out = np.where(d > xs[-1], ys[-1] + (d - xs[-1]) * slope, out)
+        return out
+
+    def read_time(self, delta):
+        return self._curve(delta, self.means, extrapolate_slope=True)
+
+    def mean_excess(self, delta):
+        return np.maximum(
+            self._curve(delta, self.excess, extrapolate_slope=False), 0.0)
+
+    def quantile_time(self, delta, p):
+        """Empirical per-read ``p``-quantile of ``T(Δ)`` (reporting only —
+        the tuning objective propagates ``mean_excess``, not this)."""
+        if not self.qs:
+            return self.read_time(delta)
+        qs = np.asarray(self.qs, dtype=np.float64)
+        rows = np.asarray(self.qvalues, dtype=np.float64)  # (n_deltas, n_qs)
+        p = min(max(float(p), float(qs[0])), float(qs[-1]))
+        per_delta = np.array([np.interp(p, qs, row) for row in rows])
+        return self._curve(delta, per_delta, extrapolate_slope=True)
+
+    @classmethod
+    def fit(cls, samples, *, min_samples: int = 32, min_sizes: int = 2,
+            qs=(0.5, 0.9, 0.95, 0.99),
+            name: str = "distributional") -> "DistributionalProfile | None":
+        """Fit from ``(Δ, seconds)`` pairs; ``None`` when too scarce.
+
+        Requires ``min_samples`` total observations over at least
+        ``min_sizes`` distinct sizes — the same contract as the measured
+        mean fit, so a scarce reservoir degrades to "no observed
+        profile" rather than a one-point distribution.
+        """
+        pairs = [(float(d), float(s)) for d, s in samples]
+        if len(pairs) < min_samples:
+            return None
+        arr = np.asarray(pairs, dtype=np.float64)
+        uniq = np.unique(arr[:, 0])
+        if len(uniq) < min_sizes:
+            return None
+        means, excess, qvals = [], [], []
+        for d in uniq:
+            ts = arr[arr[:, 0] == d, 1]
+            mu = float(ts.mean())
+            means.append(mu)
+            excess.append(float(np.maximum(ts - mu, 0.0).mean()))
+            qvals.append(tuple(float(np.quantile(ts, q)) for q in qs))
+        return cls(deltas=tuple(float(d) for d in uniq), means=tuple(means),
+                   excess=tuple(excess), qs=tuple(float(q) for q in qs),
+                   qvalues=tuple(qvals), name=name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveProfile(StorageProfile):
+    """Per-read cost curve of the tail objective ``E[T] + w·Q_p[T]``.
+
+    A lookup's latency is a sum of pread times, ``T = Σ Tᵢ``.  Writing
+    ``μᵢ = E[Tᵢ]``, Markov's inequality on the summed positive excess
+    gives, for any dependence structure,
+
+        ``Q_p[T] ≤ Σ μᵢ + (Σ E[(Tᵢ − μᵢ)₊]) / (1 − p)``
+
+    and under the documented *independent-pread approximation* this is
+    the single-big-jump estimate of the tail (tight for the
+    subexponential stall-dominated distributions the fault layer
+    produces: a bad lookup is one stalled pread, and stall probability
+    accumulates linearly across the stack).  The objective therefore
+    decomposes into an additive per-read cost
+
+        ``C(Δ) = (1 + w)·μ(Δ) + (w / (1 − p))·me(Δ)``
+
+    which is exactly this profile's ``read_time``.  Every mean-latency
+    search (Eq. 6's additive recursion, the fused sweep's batched
+    scoring, ``tau_hat``'s ranking) ranks designs by the tail objective
+    simply by receiving this profile instead of the base one.  With a
+    deterministic base (``me ≡ 0``) the curve is ``(1 + w)·μ`` — same
+    argmin as the mean objective, cost scaled by exactly ``1 + w``.
+    """
+
+    base: StorageProfile
+    p: float
+    weight: float
+    name: str = "objective"
+
+    def read_time(self, delta):
+        mu = np.asarray(self.base.read_time(delta), dtype=np.float64)
+        me = np.asarray(self.base.mean_excess(delta), dtype=np.float64)
+        return (1.0 + self.weight) * mu + (self.weight / (1.0 - self.p)) * me
+
+    def mean_excess(self, delta):
+        # the synthetic curve is itself a deterministic cost model
+        return np.asarray(delta, dtype=np.float64) * 0.0
+
+
+def normalize_objective(objective) -> tuple[float, float] | None:
+    """``None`` for the mean objective, else a validated ``(p, weight)``.
+
+    Accepts ``None`` / ``"mean"`` / ``{"p": q, "weight": w}`` (weight
+    defaults to 1.0; ``weight == 0`` *is* the mean objective).  Raises
+    ``ValueError`` on anything else — objectives are user-facing spec
+    fields and silent fallback would tune for the wrong thing.
+    """
+    if objective is None or objective == "mean":
+        return None
+    if isinstance(objective, dict):
+        extra = set(objective) - {"p", "weight"}
+        if extra:
+            raise ValueError(f"objective: unknown keys {sorted(extra)}")
+        try:
+            p = float(objective["p"])
+            w = float(objective.get("weight", 1.0))
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(f"objective: need numeric 'p' (got {objective!r})") from e
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"objective: p must be in (0, 1), got {p}")
+        if not w >= 0.0:
+            raise ValueError(f"objective: weight must be >= 0, got {w}")
+        return None if w == 0.0 else (p, w)
+    raise ValueError(f"objective must be 'mean' or a {{p, weight}} dict, "
+                     f"got {objective!r}")
+
+
+def objective_profile(profile: StorageProfile, objective) -> StorageProfile:
+    """Wrap ``profile`` for the requested objective.
+
+    The mean objective returns ``profile`` itself (same object — the
+    guarantee behind ``objective="mean"`` being bit-identical to the
+    pre-objective search); a quantile objective returns the
+    :class:`ObjectiveProfile` cost curve over it.
+    """
+    norm = normalize_objective(objective)
+    if norm is None:
+        return profile
+    p, w = norm
+    return ObjectiveProfile(base=profile, p=p, weight=w,
+                            name=f"{profile.name}|p{p:g}w{w:g}")
 
 
 #: CachedProfile's default cache tier (host-DRAM constants; also the
@@ -142,6 +357,14 @@ class CachedProfile(StorageProfile):
         cache = self.cache or _DEFAULT_CACHE
         return (h * np.asarray(cache(delta), dtype=np.float64)
                 + (1.0 - h) * np.asarray(self.backing(delta), dtype=np.float64))
+
+    def mean_excess(self, delta):
+        # hit-rate blend of the component tails, mirroring read_time
+        h = min(max(float(self.hit_rate), 0.0), 1.0)
+        cache = self.cache or _DEFAULT_CACHE
+        return (h * np.asarray(cache.mean_excess(delta), dtype=np.float64)
+                + (1.0 - h) * np.asarray(self.backing.mean_excess(delta),
+                                         dtype=np.float64))
 
 
 def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
@@ -198,6 +421,14 @@ def affine_coefficients(profile: StorageProfile) -> tuple[float, float] | None:
         h = min(max(float(profile.hit_rate), 0.0), 1.0)
         return (h * front[0] + (1.0 - h) * back[0],
                 h * front[1] + (1.0 - h) * back[1])
+    if isinstance(profile, ObjectiveProfile):
+        # affine-representable bases are deterministic (mean_excess ≡ 0),
+        # so the objective curve is the base scaled by (1 + w)
+        base = affine_coefficients(profile.base)
+        if base is None:
+            return None
+        scale = 1.0 + float(profile.weight)
+        return scale * base[0], scale * base[1]
     return None
 
 
@@ -220,6 +451,18 @@ def profile_to_dict(profile: StorageProfile | None) -> dict | None:
     if isinstance(profile, MeasuredProfile):
         return {"kind": "measured", "deltas": list(profile.deltas),
                 "seconds": list(profile.seconds), "name": profile.name}
+    if isinstance(profile, DistributionalProfile):
+        return {"kind": "distributional", "deltas": list(profile.deltas),
+                "means": list(profile.means), "excess": list(profile.excess),
+                "qs": list(profile.qs),
+                "qvalues": [list(row) for row in profile.qvalues],
+                "name": profile.name}
+    if isinstance(profile, ObjectiveProfile):
+        base = profile_to_dict(profile.base)
+        if base is None:
+            return None
+        return {"kind": "objective", "base": base, "p": profile.p,
+                "weight": profile.weight, "name": profile.name}
     if isinstance(profile, CachedProfile):
         backing = profile_to_dict(profile.backing)
         if backing is None:
@@ -246,6 +489,19 @@ def profile_from_dict(d: dict | None) -> StorageProfile | None:
         if kind == "measured":
             return MeasuredProfile(tuple(d["deltas"]), tuple(d["seconds"]),
                                    name=d.get("name", "measured"))
+        if kind == "distributional":
+            return DistributionalProfile(
+                deltas=tuple(d["deltas"]), means=tuple(d["means"]),
+                excess=tuple(d["excess"]), qs=tuple(d.get("qs", ())),
+                qvalues=tuple(tuple(row) for row in d.get("qvalues", ())),
+                name=d.get("name", "distributional"))
+        if kind == "objective":
+            base = profile_from_dict(d["base"])
+            if base is None:
+                return None
+            return ObjectiveProfile(base=base, p=float(d["p"]),
+                                    weight=float(d["weight"]),
+                                    name=d.get("name", "objective"))
         if kind == "cached":
             backing = profile_from_dict(d["backing"])
             if backing is None:

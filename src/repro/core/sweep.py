@@ -36,6 +36,15 @@ Bit-identity contract: with the default numpy backend, every candidate's
 layer arrays, outline, est/exact read cost, and τ̂ equal the legacy
 per-builder loop's values bit-for-bit (tests/test_sweep.py certifies all
 three strategies end-to-end).
+
+Tail-latency objectives ride through unchanged: the strategies wrap the
+tier in an :class:`~repro.core.storage.ObjectiveProfile` (the additive
+``E[T] + w·Q̂_p[T]`` cost curve), and because the engine's score memos are
+keyed by the profile object (``pin_profile``), the same LayerCache can
+serve mean- and quantile-objective tunes concurrently — layer *builds*
+are profile-independent and shared, scores are kept apart per objective.
+The batched scoring call evaluates the objective row at the same cost as
+the mean row (one vectorized ``C(Δ)`` pass over the width matrix).
 """
 from __future__ import annotations
 

@@ -104,8 +104,12 @@ class FleetSpec:
     n_shards:           key-range shards (each its own on-disk index file
                         with its own Alg. 2 search).
     tune:               per-shard :class:`TuneSpec` — families, λ-grid,
-                        strategy; every shard searches the same space but
-                        against its OWN keys and profile.
+                        strategy, and the tuning ``objective`` ("mean" or
+                        a ``{"p": q, "weight": w}`` tail objective, which
+                        every shard search and ``Fleet.retune`` /
+                        ``retune_budgeted`` honor); every shard searches
+                        the same space but against its OWN keys and
+                        profile.
     serve:              per-shard :class:`ServeSpec` template; the global
                         budget allocator overrides each shard's
                         ``cache_bytes`` (preserving the template's tier

@@ -54,8 +54,8 @@ from repro.core.serialize import (_BAND_DT, _STEP_DT, gallop_step, page_crc,
                                   page_span, parse_meta,
                                   predict_from_records, record_aligned_range,
                                   window_misses)
-from repro.core.storage import (CachedProfile, MeasuredProfile, PROFILES,
-                                StorageProfile)
+from repro.core.storage import (CachedProfile, DistributionalProfile,
+                                MeasuredProfile, PROFILES, StorageProfile)
 from repro.serve.backend import (CorruptPageError, DeadlineExceededError,
                                  FileBackend, ReadError, StorageBackend)
 
@@ -64,6 +64,10 @@ DEFAULT_PAGE_BYTES = 4096
 STATS_SUFFIX = ".stats.json"   # ServeStats snapshots live next to the index
 STATS_WINDOW = 16              # rotating window: snapshots kept per file
 READ_SAMPLE_CAP = 512          # measured (Δ, seconds) pread samples retained
+LOOKUP_SAMPLE_CAP = 512        # per-lookup (n, wall) samples retained
+MIN_FIT_SAMPLES = 8            # reservoir samples needed before any
+#                                observed-profile fit (measured or
+#                                distributional) says anything
 
 
 def demo_serving_design(D):
@@ -199,15 +203,27 @@ class ServeStats:
     # the deployment tier's Eq. 6 value realized on observed queries
     walk_modeled_seconds: float = 0.0
     pread_seconds: float = 0.0  # measured wall-clock inside os.pread
-    # rotating reservoir of measured (Δ bytes, seconds, overlapped, tainted)
-    # pread samples — the raw material of observed_profile(); capped at
-    # READ_SAMPLE_CAP.  ``overlapped`` tags preads issued by the prefetch
-    # stage: they ran concurrently with compute and other I/O, so their
-    # wall time measures queueing as much as the tier.  ``tainted`` tags
-    # reads that needed retries, blew a deadline, or repaired a corrupt
-    # page: their wall time measures the *fault*, not the tier, and
-    # :func:`measured_backing_profile` must never fit them.
+    # uniform reservoir (Vitter's Algorithm R, seeded — deterministic
+    # under a fixed ``sample_seed``) of measured (Δ bytes, seconds,
+    # overlapped, tainted) pread samples — the raw material of
+    # observed_profile(); capped at READ_SAMPLE_CAP.  Every pread ever
+    # seen has equal probability of being retained, so quantile fits
+    # are not biased toward the most recent burst (the old cap-eviction
+    # kept a recency window).  ``overlapped`` tags preads issued by the
+    # prefetch stage: they ran concurrently with compute and other I/O,
+    # so their wall time measures queueing as much as the tier.
+    # ``tainted`` tags reads that needed retries, blew a deadline, or
+    # repaired a corrupt page: their wall time measures the *fault*, not
+    # the tier, and no profile fit may ever ingest them
+    # (:func:`untainted_read_samples` is the single eligibility filter).
     read_samples: list = dataclasses.field(default_factory=list)
+    reads_seen: int = 0         # total preads offered to the reservoir
+    # uniform reservoir of per-lookup (n_queries, wall seconds) pairs —
+    # the online p50/p99 estimates (``lookup_quantile``) that feed
+    # detect_drift's observed_p50/p99 fields
+    lookup_samples: list = dataclasses.field(default_factory=list)
+    lookups_seen: int = 0       # total lookup batches offered
+    sample_seed: int = 0        # reservoir determinism knob
 
     @property
     def hit_rate(self) -> float:
@@ -241,13 +257,58 @@ class ServeStats:
             return float("nan")
         return self.walk_modeled_seconds / self.queries
 
+    def _reservoir_put(self, reservoir: list, cap: int, seen: int,
+                       sample: tuple, salt: int) -> None:
+        """Algorithm R step: with the reservoir full, the ``seen``-th item
+        replaces a uniformly random slot with probability cap/seen.  The
+        replacement draw is a pure function of (sample_seed, salt, seen),
+        so a fixed seed replays the identical reservoir."""
+        if len(reservoir) < cap:
+            reservoir.append(sample)
+            return
+        rng = np.random.default_rng((int(self.sample_seed) & 0x7FFFFFFF,
+                                     int(salt), int(seen)))
+        j = int(rng.integers(0, seen))
+        if j < cap:
+            reservoir[j] = sample
+
     def record_read(self, nbytes: int, seconds: float,
                     overlapped: bool = False, tainted: bool = False) -> None:
         self.pread_seconds += seconds
-        if len(self.read_samples) >= READ_SAMPLE_CAP:
-            del self.read_samples[0]          # rotate: oldest sample leaves
-        self.read_samples.append((int(nbytes), float(seconds),
-                                  bool(overlapped), bool(tainted)))
+        self.reads_seen += 1
+        self._reservoir_put(self.read_samples, READ_SAMPLE_CAP,
+                            self.reads_seen,
+                            (int(nbytes), float(seconds), bool(overlapped),
+                             bool(tainted)), salt=0)
+
+    def record_lookup(self, n_queries: int, wall_seconds: float) -> None:
+        """Feed one lookup batch's wall time into the per-lookup latency
+        reservoir (uniform over all batches ever served)."""
+        self.lookups_seen += 1
+        self._reservoir_put(self.lookup_samples, LOOKUP_SAMPLE_CAP,
+                            self.lookups_seen,
+                            (int(n_queries), float(wall_seconds)), salt=1)
+
+    def lookup_quantile(self, p: float) -> float | None:
+        """Online per-query wall-latency ``p``-quantile estimate.
+
+        Each reservoir entry contributes its per-query average weighted
+        by its batch size (a 64-query batch is 64 query experiences).
+        None before any lookups are recorded.  Weighted empirical
+        quantile with midpoint positions, linear interpolation.
+        """
+        if not self.lookup_samples:
+            return None
+        if not 0.0 < float(p) < 1.0:
+            raise ValueError(f"quantile p must be in (0, 1), got {p}")
+        vals = np.asarray([s / max(int(n), 1)
+                           for n, s in self.lookup_samples], dtype=np.float64)
+        w = np.asarray([max(int(n), 1) for n, _ in self.lookup_samples],
+                       dtype=np.float64)
+        order = np.argsort(vals, kind="stable")
+        vals, w = vals[order], w[order]
+        pos = (np.cumsum(w) - 0.5 * w) / w.sum()
+        return float(np.interp(float(p), pos, vals))
 
     def roofline(self) -> dict:
         """Compute-vs-I/O attribution of served traffic: measured wall
@@ -272,8 +333,13 @@ class ServeStats:
         d = dataclasses.asdict(self)
         d["read_samples"] = [[int(r[0]), float(r[1]), bool(r[2]), bool(r[3])]
                              for r in self.read_samples]
+        d["lookup_samples"] = [[int(r[0]), float(r[1])]
+                               for r in self.lookup_samples]
         d["hit_rate"] = self.hit_rate
         d["roofline"] = self.roofline()
+        # derived, human-readable tail estimates (ignored on load)
+        d["lookup_p50_seconds"] = self.lookup_quantile(0.5)
+        d["lookup_p99_seconds"] = self.lookup_quantile(0.99)
         # NaN (no queries yet) is not valid strict JSON — null it out
         for key in ("query_modeled_seconds", "walk_query_seconds"):
             v = getattr(self, key)
@@ -296,7 +362,7 @@ class ServeStats:
         kw = {}
         for k, v in d.items():
             f = fields.get(k)
-            if f is None or k == "read_samples":
+            if f is None or k in ("read_samples", "lookup_samples"):
                 continue
             kw[k] = int(v) if isinstance(f.default, int) else float(v)
         kw["read_samples"] = [
@@ -304,7 +370,15 @@ class ServeStats:
              bool(r[2]) if len(r) > 2 else False,
              bool(r[3]) if len(r) > 3 else False)
             for r in d.get("read_samples", [])]
-        return cls(**kw)
+        kw["lookup_samples"] = [(int(r[0]), float(r[1]))
+                                for r in d.get("lookup_samples", [])]
+        st = cls(**kw)
+        # legacy snapshots (pre-reservoir) carry no seen counters: make
+        # the reservoir state self-consistent so Algorithm R keeps
+        # working (seen must be >= the retained count)
+        st.reads_seen = max(st.reads_seen, len(st.read_samples))
+        st.lookups_seen = max(st.lookups_seen, len(st.lookup_samples))
+        return st
 
 
 # ---------------------------------------------------------------------------
@@ -395,26 +469,44 @@ def cacheable_working_set(meta, resident_layers: int = 1) -> int:
     return int(sum(lm.size for lm in meta.layers[:L - n_res]))
 
 
-def measured_backing_profile(stats: ServeStats,
-                             min_samples: int = 8) -> MeasuredProfile | None:
+def untainted_read_samples(stats: ServeStats) -> list:
+    """Reservoir samples eligible for *any* profile fitting.
+
+    The single source of truth for the tainted filter: samples tagged
+    ``tainted`` (retried, stalled past a deadline, or part of a
+    corrupt-page repair) measure the *fault*, not the tier, and no
+    fitting path — measured mean or distributional — may ever ingest
+    them.  A flaky disk must not read as a slow one."""
+    return [r for r in stats.read_samples if not (len(r) > 3 and r[3])]
+
+
+def _fit_eligible_samples(stats: ServeStats, min_samples: int) -> list:
+    """Shared eligibility ladder for observed-profile fits.
+
+    Samples tagged ``overlapped`` (issued by the pipeline's prefetch
+    stage while compute and other I/O were in flight) measure queueing,
+    not the tier — fitting them would *under-price* the tier exactly
+    when pipelining hides latency best.  They are excluded whenever
+    enough blocking samples remain; a fully-pipelined window falls back
+    to all *untainted* samples — the ``overlapped`` filter is the only
+    one ever relaxed; the tainted filter
+    (:func:`untainted_read_samples`) is unconditional, so a scarce
+    mostly-tainted window yields too few samples and the fit returns
+    None rather than modeling the faults."""
+    clean = untainted_read_samples(stats)
+    blocking = [r for r in clean if not (len(r) > 2 and r[2])]
+    return blocking if len(blocking) >= min_samples else clean
+
+
+def measured_backing_profile(
+        stats: ServeStats,
+        min_samples: int = MIN_FIT_SAMPLES) -> MeasuredProfile | None:
     """Monotone ``T(Δ)`` through the *measured* pread samples — per-size
     median wall-clock, the §3.2 measurement applied to live serving.
-    None when the window holds too few samples or too few distinct sizes
-    to say anything about the latency/bandwidth split.
-
-    Samples tagged ``overlapped`` (issued by the pipeline's prefetch stage
-    while compute and other I/O were in flight) measure queueing, not the
-    tier — fitting them would *under-price* the tier exactly when
-    pipelining hides latency best.  They are excluded whenever enough
-    blocking samples remain; a fully-pipelined window falls back to all
-    samples rather than refusing to fit.  Samples tagged ``tainted``
-    (retried, stalled past a deadline, or part of a corrupt-page repair)
-    measure the *fault*, not the tier, and are excluded unconditionally —
-    a flaky disk must not read as a slow one."""
-    clean = [r for r in stats.read_samples
-             if not (len(r) > 3 and r[3])]
-    blocking = [r for r in clean if not (len(r) > 2 and r[2])]
-    samples = blocking if len(blocking) >= min_samples else clean
+    None when the window holds too few eligible samples (tainted ones
+    never are — see :func:`_fit_eligible_samples`) or too few distinct
+    sizes to say anything about the latency/bandwidth split."""
+    samples = _fit_eligible_samples(stats, min_samples)
     if len(samples) < min_samples:
         return None
     sizes = np.asarray([r[0] for r in samples], dtype=np.float64)
@@ -427,21 +519,44 @@ def measured_backing_profile(stats: ServeStats,
                            seconds=tuple(med), name="observed-preads")
 
 
+def distributional_backing_profile(
+        stats: ServeStats, min_samples: int = MIN_FIT_SAMPLES,
+        qs=(0.5, 0.9, 0.95, 0.99)) -> DistributionalProfile | None:
+    """Per-Δ latency *distributions* from the pread reservoir — the raw
+    material of tail-latency tuning (mean + mean-excess + empirical
+    quantiles per size; see
+    :class:`repro.core.storage.DistributionalProfile`).  Same sample
+    eligibility as :func:`measured_backing_profile`: tainted reads never
+    fit, the overlapped filter relaxes only when blocking samples are
+    scarce.  None when too few eligible samples or distinct sizes."""
+    samples = _fit_eligible_samples(stats, min_samples)
+    return DistributionalProfile.fit(
+        [(r[0], r[1]) for r in samples], min_samples=min_samples, qs=qs,
+        name="observed-pread-dist")
+
+
 def observed_profile_from_stats(stats: ServeStats, backing: StorageProfile,
                                 cache: StorageProfile | None = None, *,
                                 measured: bool = True,
-                                min_samples: int = 8) -> CachedProfile:
+                                min_samples: int = MIN_FIT_SAMPLES,
+                                distributional: bool = False) -> CachedProfile:
     """Fold observed serving behavior into an effective ``T(Δ)``.
 
     The hit rate always comes from the stats; the backing tier is replaced
     by the *measured* per-pread profile when ``measured=True`` and the
     sample window supports it, else the modeled ``backing`` is kept (so
     with ``measured=False`` this is exactly the deployment-configured
-    :meth:`IndexService.cached_profile`).  Pure function of the snapshot —
+    :meth:`IndexService.cached_profile`).  ``distributional=True``
+    prefers the distributional fit (mean + tail mass, the input a
+    quantile-objective retune needs), degrading to the measured mean
+    fit, then the modeled backing.  Pure function of the snapshot —
     a reloaded snapshot yields the identical profile."""
     eff = backing
     if measured:
-        m = measured_backing_profile(stats, min_samples=min_samples)
+        m = (distributional_backing_profile(stats, min_samples=min_samples)
+             if distributional else None)
+        if m is None:
+            m = measured_backing_profile(stats, min_samples=min_samples)
         if m is not None:
             eff = m
     # default name kept so a measured=False observed profile compares equal
@@ -1155,10 +1270,15 @@ class IndexService:
         triggers shares one absolute deadline.
         """
         st = self._pin()
+        t0 = time.perf_counter()
         try:
-            return self._lookup_pinned(st, queries)
+            out = self._lookup_pinned(st, queries)
         finally:
             self._unpin(st)
+        wall = time.perf_counter() - t0
+        with self._mu:
+            st.stats.record_lookup(len(out), wall)
+        return out
 
     def _lookup_pinned(self, st: _ServeState, queries) -> np.ndarray:
         q = np.atleast_1d(np.asarray(queries, dtype=np.uint64))
@@ -1404,13 +1524,16 @@ class IndexService:
 
     def observed_profile(self, backing: StorageProfile | None = None, *,
                          measured: bool = True,
-                         min_samples: int = 8) -> CachedProfile:
+                         min_samples: int = MIN_FIT_SAMPLES,
+                         distributional: bool = False) -> CachedProfile:
         """Effective ``T(Δ)`` from *observed* serving behavior: the block
         cache's hit rate plus (``measured=True``) the measured per-pread
         latency in place of the modeled backing tier.  This is the profile
         a drift-triggered ``Index.retune`` should tune for (see
         :mod:`repro.api.drift`).  With ``measured=False`` it equals
-        :meth:`cached_profile` exactly."""
+        :meth:`cached_profile` exactly; ``distributional=True`` prefers
+        the per-Δ distribution fit (what a quantile-objective retune
+        needs)."""
         backing = backing or self.profile
         if backing is None:
             raise ValueError("no backing profile: the service was opened "
@@ -1418,7 +1541,8 @@ class IndexService:
         return observed_profile_from_stats(self.stats, backing,
                                            self.cache_profile,
                                            measured=measured,
-                                           min_samples=min_samples)
+                                           min_samples=min_samples,
+                                           distributional=distributional)
 
     def save_stats(self, *, window: int = STATS_WINDOW) -> str:
         """Persist the current :class:`ServeStats` snapshot next to the

@@ -83,15 +83,49 @@ def test_stats_window_rotates(tuned):
     os.unlink(stats_path(path))                    # leave fixture clean
 
 
-def test_read_samples_reservoir_is_bounded():
+def test_read_samples_reservoir_is_bounded_and_uniform():
     from repro.serve.index_service import READ_SAMPLE_CAP
+    n = READ_SAMPLE_CAP * 4
     s = ServeStats()
-    for i in range(READ_SAMPLE_CAP + 100):
+    for i in range(n):
         s.record_read(64, 1e-6 * i)
     assert len(s.read_samples) == READ_SAMPLE_CAP
-    # rotation keeps the newest samples
-    assert s.read_samples[-1][1] == pytest.approx(
-        1e-6 * (READ_SAMPLE_CAP + 99))
+    assert s.reads_seen == n
+    # uniform over the whole stream, not a recency window (the old
+    # cap-eviction kept only the newest READ_SAMPLE_CAP samples, which
+    # biased quantile fits toward the latest burst): a fair share of the
+    # retained samples must predate the final window
+    old = sum(1 for r in s.read_samples if r[1] < 1e-6 * (n - READ_SAMPLE_CAP))
+    assert old > READ_SAMPLE_CAP // 4
+    # deterministic under a fixed seed; a different seed reshuffles
+    s2 = ServeStats()
+    for i in range(n):
+        s2.record_read(64, 1e-6 * i)
+    assert s2.read_samples == s.read_samples
+    s3 = ServeStats(sample_seed=7)
+    for i in range(n):
+        s3.record_read(64, 1e-6 * i)
+    assert s3.read_samples != s.read_samples
+
+
+def test_lookup_reservoir_quantiles():
+    s = ServeStats()
+    assert s.lookup_quantile(0.5) is None
+    # 99 fast batches and 1 slow one, single-query each
+    for i in range(99):
+        s.record_lookup(1, 1e-4)
+    s.record_lookup(1, 1e-2)
+    assert s.lookup_quantile(0.5) == pytest.approx(1e-4)
+    assert s.lookup_quantile(0.995) == pytest.approx(1e-2, rel=0.5)
+    # batch sizes weight the estimate: one 64-query slow batch outweighs
+    # one 1-query slow batch at the same quantile
+    with pytest.raises(ValueError):
+        s.lookup_quantile(1.5)
+    snap = s.snapshot()
+    assert snap["lookup_p50_seconds"] == pytest.approx(1e-4)
+    loaded = ServeStats.from_snapshot(snap)
+    assert loaded.lookup_samples == s.lookup_samples
+    assert loaded.lookup_quantile(0.5) == s.lookup_quantile(0.5)
 
 
 # ---------------------------------------------------------------------------

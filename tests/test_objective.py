@@ -1,0 +1,402 @@
+"""Tail-latency objective certification: mean-objective bit-identity on
+every strategy × tier, zero-variance reduction to the mean search,
+fit_affine degenerate-input hardening, the tainted-reservoir regression
+(faulty preads can never reach any fitted profile), DistributionalProfile
+fit/JSON round-trips, and the TuneSpec.objective facade plumbing."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import Index, TuneSpec, register_strategy
+from repro.api.drift import drift_from_stats
+from repro.core import (AffineProfile, DistributionalProfile, KeyPositions,
+                        MeasuredProfile, ObjectiveProfile, PROFILES, airtune,
+                        beam_search, brute_force, expected_latency,
+                        make_builders, mean_excess_per_lookup,
+                        normalize_objective, objective_latency,
+                        objective_profile, profile_from_dict, profile_to_dict,
+                        quantile_latency)
+from repro.core.registry import SEARCH_STRATEGIES
+from repro.serve.index_service import (MIN_FIT_SAMPLES, ServeStats,
+                                       distributional_backing_profile,
+                                       measured_backing_profile,
+                                       observed_profile_from_stats,
+                                       untainted_read_samples)
+
+from conftest import make_keys
+
+BUILDERS = make_builders(lam_low=2**10, lam_high=2**16, base=4.0)
+STRATEGIES = {
+    "airtune": (airtune, dict(k=3, max_layers=4)),
+    "beam": (beam_search, dict(k=3, max_layers=4)),
+    "brute_force": (brute_force, dict(max_layers=3)),
+}
+P99 = {"p": 0.99, "weight": 0.5}
+
+
+def _data(kind="gmm", n=5_000, seed=3):
+    return KeyPositions.fixed_record(make_keys(kind, n, seed), 16)
+
+
+def _layers_equal(a, b) -> bool:
+    if len(a) != len(b):
+        return False
+    for la, lb in zip(a, b):
+        if la.kind != lb.kind:
+            return False
+        if la.kind == "step":
+            fields = ("piece_keys", "piece_pos", "node_piece_off")
+        else:
+            fields = ("node_keys", "x1", "y1", "m", "delta")
+            if la.clamp_lo != lb.clamp_lo or la.clamp_hi != lb.clamp_hi:
+                return False
+        if not all(np.array_equal(getattr(la, f), getattr(lb, f))
+                   for f in fields):
+            return False
+    return True
+
+
+def _stall_profile():
+    """A distributional tier where wide reads carry a heavy stall tail."""
+    return DistributionalProfile(
+        deltas=(4096.0, 65536.0, 1 << 20),
+        means=(1e-4, 3e-4, 2e-3),
+        excess=(5e-5, 1e-4, 4e-3),
+        qs=(0.5, 0.99), qvalues=((9e-5, 1.2e-4), (2e-4, 2e-3), (1e-3, 3e-2)),
+        name="stall-tier")
+
+
+# ---------------------------------------------------------------------------
+# satellite 4a: objective="mean" is bit-identical to the pre-objective
+# search, on every strategy × tier
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pname", ["azure_ssd", "azure_nfs"])
+@pytest.mark.parametrize("sname", list(STRATEGIES))
+def test_mean_objective_bit_identical(pname, sname):
+    D = _data()
+    strat, kw = STRATEGIES[sname]
+    a = strat(D, PROFILES[pname], BUILDERS, objective="mean", **kw)
+    b = strat(D, PROFILES[pname], BUILDERS, **kw)
+    assert a.cost == b.cost                       # bitwise, not approx
+    assert a.builder_names == b.builder_names
+    assert _layers_equal(a.design.layers, b.design.layers)
+    assert a.objective == "mean" and b.objective == "mean"
+    # weight == 0 *is* the mean objective — same bitwise guarantee
+    c = strat(D, PROFILES[pname], BUILDERS,
+              objective={"p": 0.9, "weight": 0.0}, **kw)
+    assert c.cost == b.cost and c.objective == "mean"
+    assert _layers_equal(c.design.layers, b.design.layers)
+
+
+# ---------------------------------------------------------------------------
+# satellite 4b: a deterministic tier has no tail mass, so the quantile
+# objective reduces to the mean search — same argmin, cost ×(1 + w)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sname", list(STRATEGIES))
+def test_quantile_objective_zero_variance_reduces_to_mean(sname):
+    D = _data()
+    strat, kw = STRATEGIES[sname]
+    mean = strat(D, PROFILES["azure_ssd"], BUILDERS, **kw)
+    tail = strat(D, PROFILES["azure_ssd"], BUILDERS, objective=P99, **kw)
+    assert tail.builder_names == mean.builder_names
+    assert _layers_equal(tail.design.layers, mean.design.layers)
+    assert tail.cost == pytest.approx(
+        (1.0 + P99["weight"]) * mean.cost, rel=1e-12)
+    assert tail.objective == {"p": 0.99, "weight": 0.5}
+
+
+def test_quantile_objective_prefers_tail_safe_design():
+    """On a stall-heavy tier the p99 objective must value the tail mass:
+    the objective cost strictly exceeds (1+w)·mean cost whenever the
+    chosen design still touches stall-prone read sizes."""
+    prof = _stall_profile()
+    D = _data(n=8_000)
+    mean = airtune(D, prof, BUILDERS, k=3, max_layers=4)
+    tail = airtune(D, prof, BUILDERS, k=3, max_layers=4, objective=P99)
+    w, p = P99["weight"], P99["p"]
+    # the tail search minimized the wrapped curve, and its reported cost
+    # is exactly that curve's Eq. 6 value on the returned design
+    wrapped = objective_profile(prof, P99)
+    assert tail.cost == pytest.approx(
+        expected_latency(tail.design, wrapped), rel=1e-9)
+    # identity: E[T] + w·(E[T] + me/(1−p)) evaluated via the latency API
+    direct = (expected_latency(tail.design, prof)
+              + w * quantile_latency(tail.design, prof, p))
+    assert tail.cost == pytest.approx(direct, rel=1e-9)
+    # and the tail-tuned design is no worse than the mean-tuned one
+    # under its own objective (equality allowed: argmins may coincide)
+    assert direct <= (expected_latency(mean.design, prof)
+                      + w * quantile_latency(mean.design, prof, p)) + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# objective/latency API identities
+# ---------------------------------------------------------------------------
+def test_latency_api_identities():
+    prof = _stall_profile()
+    D = _data(n=4_000)
+    res = airtune(D, prof, BUILDERS, k=3)
+    d = res.design
+    me = mean_excess_per_lookup(d, prof)
+    assert me > 0.0
+    assert quantile_latency(d, prof, 0.99) == pytest.approx(
+        expected_latency(d, prof) + me / (1.0 - 0.99), rel=1e-12)
+    assert objective_latency(d, prof, "mean") == expected_latency(d, prof)
+    # deterministic tier: me ≡ 0 → quantile == mean, objective == (1+w)·mean
+    ssd = PROFILES["azure_ssd"]
+    assert mean_excess_per_lookup(d, ssd) == 0.0
+    assert quantile_latency(d, ssd, 0.99) == expected_latency(d, ssd)
+    assert objective_latency(d, ssd, P99) == pytest.approx(
+        1.5 * expected_latency(d, ssd), rel=1e-12)
+    with pytest.raises(ValueError, match="quantile"):
+        quantile_latency(d, prof, 1.0)
+
+
+def test_normalize_objective_validation():
+    assert normalize_objective(None) is None
+    assert normalize_objective("mean") is None
+    assert normalize_objective({"p": 0.9, "weight": 0.0}) is None
+    assert normalize_objective({"p": 0.99}) == (0.99, 1.0)   # weight default
+    assert normalize_objective({"p": 0.5, "weight": 2.5}) == (0.5, 2.5)
+    for bad in ("p99", {"p": 1.0}, {"p": 0.0}, {"p": 0.9, "weight": -1.0},
+                {"p": 0.9, "quantile": 0.5}, {"weight": 1.0}, 0.99,
+                {"p": "hot"}):
+        with pytest.raises(ValueError):
+            normalize_objective(bad)
+    # mean objective returns the *same object* — the bit-identity lever
+    ssd = PROFILES["azure_ssd"]
+    assert objective_profile(ssd, "mean") is ssd
+    assert objective_profile(ssd, None) is ssd
+    wrapped = objective_profile(ssd, P99)
+    assert isinstance(wrapped, ObjectiveProfile)
+    np.testing.assert_allclose(wrapped(4096.0), 1.5 * ssd(4096.0), rtol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: fit_affine degenerate measurements degrade, never poison
+# ---------------------------------------------------------------------------
+def test_fit_affine_single_size_degrades_to_constant():
+    m = MeasuredProfile(deltas=(4096.0, 4096.0, 4096.0),
+                        seconds=(1e-4, 3e-4, 2e-4), name="one-size")
+    with pytest.warns(RuntimeWarning, match="degenerate"):
+        fit = m.fit_affine()
+    assert fit.latency == pytest.approx(2e-4)
+    assert np.isfinite(fit.bandwidth) and fit.bandwidth > 0
+    # the degraded profile predicts positive, finite times everywhere
+    t = fit(np.array([1.0, 4096.0, 1e9]))
+    assert np.all(np.isfinite(t)) and np.all(t > 0)
+    assert t[0] == pytest.approx(t[2])        # constant: no slope leaked
+
+
+def test_fit_affine_constant_seconds_degrades_to_constant():
+    m = MeasuredProfile(deltas=(256.0, 4096.0, 65536.0),
+                        seconds=(5e-4, 5e-4, 5e-4), name="flat")
+    with pytest.warns(RuntimeWarning, match="degenerate"):
+        fit = m.fit_affine()
+    assert fit.latency == pytest.approx(5e-4)
+    assert np.all(fit(np.array([1.0, 1e8])) > 0)
+    # a decreasing (negative-slope) measurement clamps the same way
+    dec = MeasuredProfile(deltas=(256.0, 65536.0), seconds=(2e-3, 1e-3))
+    with pytest.warns(RuntimeWarning, match="slope"):
+        fit = dec.fit_affine()
+    assert fit.latency == pytest.approx(1.5e-3)
+    # ... while a healthy measurement still fits cleanly, no warning
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        ok = MeasuredProfile(deltas=(256.0, 65536.0, 1 << 20),
+                             seconds=(1e-4, 4e-4, 5e-3)).fit_affine()
+    assert ok.latency > 0 and ok.bandwidth > 0
+    # constant fallback round-trips through strict JSON (finite bandwidth)
+    json.dumps(profile_to_dict(fit))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: tainted preads can never reach any fitted profile
+# ---------------------------------------------------------------------------
+def _stats_with(reads, queries=0):
+    st = ServeStats(queries=queries, modeled_seconds=1.0,
+                    walk_modeled_seconds=1.0)
+    for nbytes, secs, overlapped, tainted in reads:
+        st.record_read(nbytes, secs, overlapped=overlapped, tainted=tainted)
+    return st
+
+
+def test_mostly_tainted_reservoir_fits_nothing():
+    # plenty of samples over 2 sizes, but almost all tainted: both fit
+    # paths must refuse (None), never model the faults as the tier
+    reads = [(4096, 50.0, False, True) for _ in range(3 * MIN_FIT_SAMPLES)]
+    reads += [(65536, 60.0, False, True) for _ in range(3 * MIN_FIT_SAMPLES)]
+    reads += [(4096, 1e-4, False, False)] * (MIN_FIT_SAMPLES - 1)
+    st = _stats_with(reads)
+    assert len(untainted_read_samples(st)) == MIN_FIT_SAMPLES - 1
+    assert measured_backing_profile(st) is None
+    assert distributional_backing_profile(st) is None
+    # observed_profile keeps the modeled backing tier instead
+    ssd = PROFILES["azure_ssd"]
+    prof = observed_profile_from_stats(st, ssd, distributional=True)
+    assert prof.backing is ssd
+
+
+def test_mostly_tainted_window_drifts_to_zero_confidence_observe():
+    reads = [(4096, 50.0, False, True) for _ in range(4 * MIN_FIT_SAMPLES)]
+    st = _stats_with(reads, queries=10_000)     # enough queries to be sure
+    rep = drift_from_stats(st, 1e-4)
+    assert rep.confidence == 0.0
+    assert rep.action == "observe"
+    # the same window with clean samples is fully confident
+    clean = [(4096, 1e-4, False, False) for _ in range(4 * MIN_FIT_SAMPLES)]
+    rep2 = drift_from_stats(_stats_with(clean, queries=10_000), 1e-4)
+    assert rep2.confidence == 1.0 and rep2.action != "observe"
+
+
+def test_tainted_samples_never_bias_a_fit():
+    # enough clean samples to fit: absurd tainted outliers must leave the
+    # fitted values completely untouched, on both fit paths
+    clean = ([(4096, 1e-4, False, False)] * (2 * MIN_FIT_SAMPLES)
+             + [(65536, 4e-4, False, False)] * (2 * MIN_FIT_SAMPLES))
+    tainted = [(4096, 100.0, False, True), (65536, 100.0, False, True)] * 8
+    a = measured_backing_profile(_stats_with(clean))
+    b = measured_backing_profile(_stats_with(clean + tainted))
+    assert a == b
+    da = distributional_backing_profile(_stats_with(clean))
+    db = distributional_backing_profile(_stats_with(clean + tainted))
+    assert da == db
+    assert max(db.means) < 1.0          # the 100 s faults left no trace
+    assert float(db.quantile_time(65536.0, 0.99)) < 1.0
+
+
+def test_overlapped_filter_relaxes_but_tainted_never_does():
+    # a fully-pipelined window: every clean sample is overlapped.  The
+    # fallback must use them — but still never the tainted ones.
+    reads = ([(4096, 1e-4, True, False)] * MIN_FIT_SAMPLES
+             + [(65536, 4e-4, True, False)] * MIN_FIT_SAMPLES
+             + [(4096, 100.0, True, True)] * (4 * MIN_FIT_SAMPLES))
+    st = _stats_with(reads)
+    m = measured_backing_profile(st)
+    assert m is not None
+    assert max(m.seconds) < 1.0
+    d = distributional_backing_profile(st)
+    assert d is not None and max(d.means) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# DistributionalProfile: fit semantics and JSON round-trips
+# ---------------------------------------------------------------------------
+def test_distributional_fit_mean_excess_and_quantiles():
+    samples = []
+    for i in range(400):
+        samples.append((4096.0, 1e-4))                   # deterministic size
+        stall = 5e-3 if i % 10 == 0 else 0.0             # exact 10% stall tail
+        samples.append((65536.0, 4e-4 + stall))
+    prof = DistributionalProfile.fit(samples, min_samples=32)
+    assert prof is not None
+    assert float(prof.mean_excess(4096.0)) == 0.0
+    mu = 4e-4 + 0.10 * 5e-3
+    assert float(prof.read_time(65536.0)) == pytest.approx(mu, rel=1e-9)
+    # E[(T−μ)₊] = P(stall)·(stall − E[stall]) for the two-point mixture
+    assert float(prof.mean_excess(65536.0)) == pytest.approx(
+        0.10 * (5e-3 - 0.10 * 5e-3), rel=1e-9)
+    assert float(prof.quantile_time(65536.0, 0.5)) == pytest.approx(4e-4)
+    assert float(prof.quantile_time(65536.0, 0.99)) > 4e-3
+    # scarcity contracts: too few samples / too few distinct sizes → None
+    assert DistributionalProfile.fit(samples[:10], min_samples=32) is None
+    assert DistributionalProfile.fit([(4096.0, 1e-4)] * 64,
+                                     min_samples=32) is None
+
+
+def test_distributional_and_objective_profiles_json_roundtrip():
+    prof = _stall_profile()
+    d = profile_to_dict(prof)
+    json.dumps(d)                                  # strict-JSON safe
+    assert profile_from_dict(d) == prof
+    wrapped = objective_profile(prof, P99)
+    d2 = profile_to_dict(wrapped)
+    json.dumps(d2)
+    back = profile_from_dict(d2)
+    assert isinstance(back, ObjectiveProfile)
+    assert back.p == wrapped.p and back.weight == wrapped.weight
+    assert back.base == prof
+    probe = np.array([1024.0, 65536.0, 1 << 22], dtype=np.float64)
+    np.testing.assert_array_equal(back(probe), wrapped(probe))
+    # the wrapped curve is the documented surrogate, exactly
+    np.testing.assert_allclose(
+        wrapped(probe),
+        1.5 * prof.read_time(probe) + (0.5 / 0.01) * prof.mean_excess(probe),
+        rtol=1e-12)
+
+
+def test_observed_profile_prefers_distributional_fit():
+    clean = ([(4096, 1e-4, False, False)] * 32
+             + [(65536, 4e-4, False, False)] * 32)
+    st = _stats_with(clean)
+    prof = observed_profile_from_stats(st, PROFILES["azure_ssd"],
+                                       distributional=True)
+    assert isinstance(prof.backing, DistributionalProfile)
+    # default (mean-only) path is unchanged: measured fit
+    prof2 = observed_profile_from_stats(st, PROFILES["azure_ssd"])
+    assert isinstance(prof2.backing, MeasuredProfile)
+
+
+# ---------------------------------------------------------------------------
+# facade: TuneSpec.objective validation, meta recording, strategy gating
+# ---------------------------------------------------------------------------
+def test_tunespec_objective_validate_and_roundtrip():
+    spec = TuneSpec(objective=P99)
+    spec.validate()
+    assert TuneSpec.from_json(spec.to_json()) == spec
+    assert TuneSpec().objective == "mean"          # default, old metas too
+    with pytest.raises(ValueError, match="objective"):
+        TuneSpec(objective="p99").validate()
+    with pytest.raises(ValueError, match="objective"):
+        TuneSpec(objective={"p": 2.0}).validate()
+
+
+def test_objective_recorded_in_meta_and_reopened(tmp_path):
+    D = _data(n=4_000)
+    spec = TuneSpec(lam_high=2.0**14, lam_base=4.0, k=2, max_layers=3,
+                    page_bytes=1024, objective=P99)
+    path = str(tmp_path / "p99.air")
+    idx = Index.tune(D, "azure_ssd", spec).build()
+    assert idx.result.objective == {"p": 0.99, "weight": 0.5}
+    idx.save(path)
+    re = Index.open(path)
+    assert re.file_meta.tune["objective"] == {"p": 0.99, "weight": 0.5}
+    assert re.spec.objective == {"p": 0.99, "weight": 0.5}
+    # mean-objective indexes record "mean" (and old metas omitting the
+    # key parse as "mean" via the TuneSpec default)
+    path2 = str(tmp_path / "mean.air")
+    Index.tune(D, "azure_ssd", spec.replace(objective="mean")).save(path2)
+    assert Index.open(path2).file_meta.tune["objective"] == "mean"
+
+
+def test_objective_unaware_strategy_is_refused_not_silent():
+    # no **kwargs and no `objective` parameter: the facade must detect
+    # that the strategy cannot honor a quantile objective
+    def legacy_strategy(D, profile, builders, *, k=4, max_layers=6):
+        return airtune(D, profile, builders, k=k, max_layers=max_layers)
+
+    register_strategy("legacy_noobj")(legacy_strategy)
+    try:
+        D = _data(n=2_000)
+        spec = TuneSpec(strategy="legacy_noobj", k=2, max_layers=3,
+                        objective=P99)
+        with pytest.raises(ValueError, match="objective-aware"):
+            Index.tune(D, "azure_ssd", spec).build()
+        # the mean objective still works through it (no gate to trip)
+        mean_spec = spec.replace(objective="mean")
+        idx = Index.tune(D, "azure_ssd", mean_spec).build()
+        assert np.isfinite(idx.result.cost) and idx.result.cost > 0
+    finally:
+        SEARCH_STRATEGIES.unregister("legacy_noobj")
+
+
+def test_retune_carries_objective():
+    D = _data(n=4_000)
+    spec = TuneSpec(lam_high=2.0**14, lam_base=4.0, k=2, max_layers=3,
+                    objective=P99)
+    idx = Index.tune(D, _stall_profile(), spec).build()
+    re = idx.retune(PROFILES["azure_nfs"], warm_start=True)
+    assert re.spec.objective == {"p": 0.99, "weight": 0.5}
+    assert re.result.objective == {"p": 0.99, "weight": 0.5}
