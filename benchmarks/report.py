@@ -1,7 +1,6 @@
 """Generate the dry-run and roofline markdown report tables."""
 from __future__ import annotations
 
-import json
 import sys
 
 sys.path.insert(0, "src")

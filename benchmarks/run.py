@@ -20,7 +20,7 @@ sys.path.insert(0, "src")
 
 from repro.core import (AffineProfile, KeyPositions, PROFILES, airtune,
                         expected_latency, IndexDesign, make_builders,
-                        mean_read_volume, verify_lookup)
+                        mean_read_volume)
 from repro.core.baselines import (build_fixed_btree, data_calculator,
                                   homogeneous_airtune, tune_pgm, tune_rmi)
 from repro.data.datasets import DATASETS, sosd_like

@@ -6,7 +6,6 @@ measured fetch path against a naive full-shard read.
 
 Run:  PYTHONPATH=src python examples/data_pipeline.py
 """
-import os
 import sys
 import tempfile
 import time

@@ -39,7 +39,7 @@ sys.path.insert(0, "src")
 
 from repro.api import Index, RetryPolicy, ServeSpec, TuneSpec, detect_drift
 from repro.core import KeyPositions
-from repro.core.serialize import read_meta
+from repro.core.serialize import read_meta_path
 from repro.data.datasets import sosd_like
 from repro.serve import FaultInjectingBackend, FileBackend
 from repro.serve.index_service import demo_serving_design
@@ -58,11 +58,7 @@ def chaotic(path):
     reads on data pages (gated past the meta region so a dense schedule
     cannot spend the whole parse budget inside the header).  Every fault
     clears within the RetryPolicy budget — recoverable by contract."""
-    fd = os.open(path, os.O_RDONLY)
-    try:
-        meta_end = min(lm.offset for lm in read_meta(fd).layers)
-    finally:
-        os.close(fd)
+    meta_end = min(lm.offset for lm in read_meta_path(path).layers)
     return FaultInjectingBackend(FileBackend(path), seed=7, page_bytes=1024,
                                  eio_rate=0.35, eio_attempts=2,
                                  short_rate=0.25, short_attempts=1,

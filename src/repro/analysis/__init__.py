@@ -1,0 +1,50 @@
+"""airlint — AST-based invariant checks for the serving engine's contracts.
+
+Nine PRs of growth accumulated load-bearing invariants that existed only
+as prose and runtime assertions: every serving-path pread must flow
+through the :class:`repro.serve.StorageBackend` seam so retries / CRC /
+fault injection apply, ``ServeStats``/cache mutations must happen under
+the engine lock while preads run outside it, typed
+:class:`repro.serve.StorageError`\\ s must never be silently absorbed,
+and frozen specs must JSON-round-trip every declared field.  This package
+turns those tribal contracts into machine-checked ones: a pure-stdlib
+``ast`` rule framework (:mod:`repro.analysis.core`), one module per rule
+(:mod:`repro.analysis.rules`), and a CLI (``python -m repro.analysis``)
+that CI runs as a fatal step.
+
+Rules (error codes are stable — tests and suppressions key on them):
+
+====================  =======  ==================================================
+rule                  code     contract
+====================  =======  ==================================================
+pread-seam            AIR001   ``os.pread`` / ``os.open(..., O_RDONLY)`` only in
+                               ``serve/backend.py``; everything else goes through
+                               a ``StorageBackend`` or carries a justified allow
+lock-discipline       AIR002   stats/cache mutations under ``self._mu``; preads
+                               never under it (lock-using modules only)
+typed-error-flow      AIR003   no broad ``except`` in ``serve/``/``fleet/`` that
+                               can absorb a ``StorageError`` without re-raising,
+                               a preceding typed handler, or an allow
+spec-roundtrip        AIR004   every declared field of the frozen spec
+                               dataclasses appears in ``to_dict`` and is restored
+                               by ``from_json`` / ``from_dict``
+shim-discipline       AIR005   no internal reference to deprecated entry points
+                               or legacy ``IndexService`` keyword arguments
+kernel-fallback-shape AIR006   every ``kernels/*/`` package ships ``ops`` +
+                               ``ref``; a ``backend=``-dispatching ``ops`` names
+                               the full pallas → jnp → numpy chain and imports
+                               jax lazily
+allow-hygiene         AIR000   an ``# airlint: allow[rule]`` without a
+                               ``-- reason`` justification is itself a finding
+====================  =======  ==================================================
+
+Suppression: ``# airlint: allow[<rule>] -- <reason>`` on the offending
+line, or alone on a comment line above it (the justification may continue
+over following comment lines).  The reason is mandatory — an allow is an
+argued exception, not an off switch.
+"""
+from .core import Finding, Rule, ProjectRule, collect_allows, run_checks
+from .rules import ALL_RULES, rules_by_name
+
+__all__ = ["Finding", "Rule", "ProjectRule", "ALL_RULES", "rules_by_name",
+           "collect_allows", "run_checks"]

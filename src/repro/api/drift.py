@@ -221,7 +221,7 @@ def detect_drift_from_file(index_path: str, *,
     import os
     import warnings
 
-    from repro.core.serialize import read_meta
+    from repro.core.serialize import read_meta_path
     from repro.serve.index_service import load_stats_history, stats_path
 
     history = load_stats_history(index_path)
@@ -246,11 +246,7 @@ def detect_drift_from_file(index_path: str, *,
             f"snapshot; returning a low-confidence observe report",
             RuntimeWarning, stacklevel=2)
         stats = ServeStats()
-    fd = os.open(index_path, os.O_RDONLY)
-    try:
-        meta = read_meta(fd)
-    finally:
-        os.close(fd)
+    meta = read_meta_path(index_path)
     tune = meta.tune or {}
     if cache is None:
         # IndexService's default cache tier, so the offline profile

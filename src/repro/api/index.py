@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import inspect
-import os
 
 import numpy as np
 
@@ -34,7 +33,7 @@ from repro.core.nodes import BandLayer, StepLayer, outline
 from repro.core.registry import SEARCH_STRATEGIES
 from repro.core.airtune import TuneResult, TuneStats
 from repro.core.serialize import (SerializedIndex, materialize_design,
-                                  read_meta, write_index)
+                                  read_meta_path, write_index)
 from repro.core.storage import (PROFILES, StorageProfile,
                                 normalize_objective, profile_from_dict,
                                 profile_to_dict)
@@ -199,11 +198,7 @@ class Index:
         :class:`ServeSpec` (if the file was written by :meth:`save`) are
         restored; pass ``data`` to enable full materialization
         (``.design``) and :meth:`retune`."""
-        fd = os.open(path, os.O_RDONLY)
-        try:
-            meta = read_meta(fd)
-        finally:
-            os.close(fd)
+        meta = read_meta_path(path)
         spec = sspec = prof = pname = None
         if meta.tune:
             if meta.tune.get("spec") is not None:

@@ -15,7 +15,7 @@ import dataclasses
 import numpy as np
 
 from .keyset import KeyPositions
-from .nodes import Layer, mean_width, outline
+from .nodes import mean_width, outline
 from .storage import StorageProfile, normalize_objective, objective_profile
 
 

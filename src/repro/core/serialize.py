@@ -223,7 +223,29 @@ def parse_meta(pread) -> IndexFileMeta:
 
 
 def read_meta(fd: int) -> IndexFileMeta:
+    """Header from an already-open raw fd — compat seam for callers that
+    own their descriptor (tests, tooling); path-based callers should use
+    :func:`read_meta_path`, which reads through the StorageBackend."""
+    # airlint: allow[pread-seam] -- raw-fd compat seam; the caller owns the
+    # descriptor and path-based internal callers use read_meta_path instead
     return parse_meta(lambda n, off: os.pread(fd, n, off))
+
+
+def open_file_backend(path: str):
+    """A :class:`repro.serve.FileBackend` for ``path`` (lazy import:
+    serve sits above core in the layer order)."""
+    from repro.serve.backend import FileBackend
+    return FileBackend(path)
+
+
+def read_meta_path(path: str) -> IndexFileMeta:
+    """Header of the index file at ``path``, read through the
+    StorageBackend seam (so CRC/fault-injection wrappers apply)."""
+    be = open_file_backend(path)
+    try:
+        return parse_meta(be.pread)
+    finally:
+        be.close()
 
 
 def load_index(path: str, data: KeyPositions) -> IndexDesign:
@@ -243,12 +265,12 @@ def load_index(path: str, data: KeyPositions) -> IndexDesign:
 
 def materialize_design(path: str, data: KeyPositions) -> IndexDesign:
     """Full deserialization (round-trips, re-tuning); real lookups use ranges."""
-    fd = os.open(path, os.O_RDONLY)
+    be = open_file_backend(path)
     try:
-        meta = read_meta(fd)
+        meta = parse_meta(be.pread)
         layers = []
         for lm in meta.layers:
-            raw = os.pread(fd, lm.size, lm.offset)
+            raw = be.pread(lm.size, lm.offset)
             if lm.kind == "step":
                 rec = np.frombuffer(raw, dtype=_STEP_DT)
                 pos = np.append(rec["pos"].astype(np.int64), lm.end_pos)
@@ -266,7 +288,7 @@ def materialize_design(path: str, data: KeyPositions) -> IndexDesign:
                     clamp_lo=0, clamp_hi=lm.end_pos))
         return IndexDesign(layers=tuple(layers), data=data)
     finally:
-        os.close(fd)
+        be.close()
 
 
 # ---------------------------------------------------------------------------
@@ -332,21 +354,28 @@ def window_misses(kind: str, raw: bytes, a: int, b: int, layer_size: int,
 
 
 class SerializedIndex:
-    """Handle for Alg.-1 lookups against an index file with partial reads."""
+    """Handle for Alg.-1 lookups against an index file with partial reads.
 
-    def __init__(self, path: str):
-        self.fd = os.open(path, os.O_RDONLY)
-        self.meta = read_meta(self.fd)
+    Reads flow through a :class:`repro.serve.StorageBackend` (default
+    :class:`~repro.serve.FileBackend`); pass ``backend_factory`` to wrap
+    the file in a fault-injecting or instrumented backend.
+    """
+
+    def __init__(self, path: str, backend_factory=None):
+        factory = backend_factory or open_file_backend
+        self._backend = factory(path)
+        self.meta = parse_meta(self._backend.pread)
         self.bytes_read = 0
         self.reads = 0
         root = self.meta.layers[-1] if self.meta.layers else None
-        self._root_raw = os.pread(self.fd, root.size, root.offset) if root else b""
+        self._root_raw = (self._backend.pread(root.size, root.offset)
+                          if root else b"")
         if root:
             self.bytes_read += root.size
             self.reads += 1
 
     def close(self):
-        os.close(self.fd)
+        self._backend.close()
 
     def lookup(self, query: int) -> tuple[int, int]:
         """→ predicted [lo, hi) byte range in the data layer."""
@@ -360,7 +389,7 @@ class SerializedIndex:
             a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
             a, b = int(a[0]), int(b[0])
             while True:
-                raw = os.pread(self.fd, b - a, lm.offset + a)
+                raw = self._backend.pread(b - a, lm.offset + a)
                 self.bytes_read += b - a
                 self.reads += 1
                 left, right = window_misses(lm.kind, raw, a, b, lm.size, q1)

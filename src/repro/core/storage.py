@@ -382,6 +382,8 @@ def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
     if not os.path.exists(path) or os.path.getsize(path) < file_bytes:
         with open(path, "wb") as f:
             f.write(os.urandom(min(file_bytes, 1 << 26)))
+    # airlint: allow[pread-seam] -- §3.2 probe: measures the raw syscall
+    # path on purpose; wrapping it in a backend would time the wrapper
     fd = os.open(path, os.O_RDONLY)
     try:
         actual = os.path.getsize(path)
@@ -391,6 +393,8 @@ def profile_local_storage(path: str, *, sizes=None, repeats: int = 5,
             for _ in range(repeats):
                 off = int(rng.integers(0, max(actual - sz, 1)))
                 t0 = time.perf_counter()
+                # airlint: allow[pread-seam] -- the probe's measured read:
+                # timing the bare syscall IS the point (§3.2 profiling)
                 os.pread(fd, sz, off)
                 ts.append(time.perf_counter() - t0)
             meas.append(float(np.median(ts)))

@@ -45,7 +45,7 @@ class ShardedTokenStore:
     """Random-access token store with an AirTune-built sample index."""
 
     def __init__(self, path: str, profile: StorageProfile | str = "measure",
-                 k: int = 3):
+                 k: int = 3, backend_factory=None):
         self.path = path
         offs = np.load(os.path.join(path, "offsets.npy"))
         self.n = len(offs) - 1
@@ -60,19 +60,21 @@ class ShardedTokenStore:
         self.tune = airtune(self.D, profile, k=k)
         idx_path = os.path.join(path, "sample.air")
         write_index(idx_path, self.tune.design)
-        self.index = SerializedIndex(idx_path)
-        self.data_fd = os.open(os.path.join(path, "shard0.tokens"),
-                               os.O_RDONLY)
+        self.index = SerializedIndex(idx_path,
+                                     backend_factory=backend_factory)
+        from repro.core.serialize import open_file_backend
+        factory = backend_factory or open_file_backend
+        self._data_backend = factory(os.path.join(path, "shard0.tokens"))
         self.offs = offs
 
     def close(self):
         self.index.close()
-        os.close(self.data_fd)
+        self._data_backend.close()
 
     def get(self, sample_id: int) -> np.ndarray:
         """Fetch one sample via index lookup + partial data read (Alg. 1)."""
         lo, hi = self.index.lookup(int(sample_id))
-        raw = os.pread(self.data_fd, hi - lo, lo)
+        raw = self._data_backend.pread(hi - lo, lo)
         # last-mile: exact record range from the fetched window
         rec_lo = int(self.offs[sample_id]) - lo
         rec_hi = int(self.offs[sample_id + 1]) - lo

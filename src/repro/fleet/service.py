@@ -243,6 +243,17 @@ class FleetService:
                         svc.cache.cap_pages[i] * svc.page_bytes
                         for i in range(svc.cache.n_tiers)),
                 })
+            except StorageError as e:
+                # typed failure while reading shard state: take the shard
+                # out of rotation and surface the concrete class name —
+                # operators key availability reports on it
+                if self.healthy[sid]:
+                    n_unhealthy += 1
+                self._mark_unhealthy(sid, e)
+                row["healthy"] = False
+                row["error"] = self.errors[sid]
+                per_shard.append(row)
+                continue
             except Exception as e:   # closed / half-open shard: thin row
                 row["error"] = row["error"] or f"{type(e).__name__}: {e}"
                 per_shard.append(row)
@@ -277,8 +288,10 @@ class FleetService:
         for svc in self.services:
             try:
                 svc.close()
+            # airlint: allow[typed-error-flow] -- best-effort shutdown: one
+            # shard's close failure must not strand the remaining shards
             except Exception:
-                pass        # best effort: one shard must not strand the rest
+                pass
 
     def __enter__(self) -> "FleetService":
         return self

@@ -92,7 +92,18 @@ class ShardMap:
 
     @classmethod
     def from_dict(cls, d: dict) -> "ShardMap":
+        unknown = set(d) - {"bounds"}
+        if unknown:
+            raise ValueError(f"unknown ShardMap fields {sorted(unknown)}; "
+                             f"allowed: ['bounds']")
         return cls(bounds=tuple(d["bounds"]))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ShardMap":
+        return cls.from_dict(json.loads(s))
 
 
 @dataclasses.dataclass(frozen=True)

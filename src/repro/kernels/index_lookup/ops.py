@@ -11,9 +11,6 @@ from the numpy ``IndexDesign`` is in :func:`device_arrays_from_design`.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 

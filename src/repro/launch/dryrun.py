@@ -16,8 +16,6 @@ Usage:
 """
 import argparse
 import json
-import re
-import sys
 import time
 
 import jax

@@ -10,7 +10,6 @@ the sliding-window mask stays static inside the traced block.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -753,11 +753,12 @@ class IndexService:
                 lm = st.meta.layers[li]
                 raw = self._load_resident(st, lm, policy)
                 st.resident[li] = self._parse_layer(lm, raw)
-                st.stats.open_bytes += lm.size
-                if self.profile is not None:
-                    t = float(self.profile(lm.size))
-                    st.stats.modeled_seconds += t
-                    st.stats.open_modeled_seconds += t
+                with self._mu:
+                    st.stats.open_bytes += lm.size
+                    if self.profile is not None:
+                        t = float(self.profile(lm.size))
+                        st.stats.modeled_seconds += t
+                        st.stats.open_modeled_seconds += t
             # the resident prefix, top-down (root first) — the fused
             # kernel's layer order; row L−1 of its output feeds the disk
             # walk
@@ -771,6 +772,8 @@ class IndexService:
                 if st.packed is not None:
                     try:
                         import jax  # noqa: F401  (gated: CPU-only containers)
+                    # airlint: allow[typed-error-flow] -- import gate: the
+                    # body is 'import jax', which cannot raise a StorageError
                     except Exception:
                         st.packed = None
                 st.device_active = st.packed is not None
@@ -993,6 +996,8 @@ class IndexService:
         # skips close()/the context manager
         try:
             self.close()
+        # airlint: allow[typed-error-flow] -- best-effort finalizer; raising
+        # from __del__ would crash interpreter shutdown, not surface errors
         except Exception:
             pass
 
@@ -1200,10 +1205,11 @@ class IndexService:
         P = st.page_bytes
         a, b = record_aligned_range(lm.kind, lo, hi, lm.size)
         a, b = a.copy(), b.copy()       # per-query windows, grown on misses
-        st.stats.ranges_requested += len(q)
-        if self.profile is not None:    # full-price walk: one window/query
-            st.stats.walk_modeled_seconds += float(
-                np.sum(self.profile((b - a).astype(np.float64))))
+        with self._mu:
+            st.stats.ranges_requested += len(q)
+            if self.profile is not None:  # full-price walk: one window/query
+                st.stats.walk_modeled_seconds += float(
+                    np.sum(self.profile((b - a).astype(np.float64))))
         out_lo = np.empty(len(q), dtype=np.float64)
         out_hi = np.empty(len(q), dtype=np.float64)
         pending = np.arange(len(q))
@@ -1242,12 +1248,15 @@ class IndexService:
                 a[lmiss] = max(int(ab[ui, 0]) - w, 0)
                 b[rmiss] = min(int(ab[ui, 1]) + w, lm.size)
                 still.extend([lmiss, rmiss])
-                st.stats.retries += len(lmiss) + len(rmiss)
-                if self.profile is not None and (len(lmiss) or len(rmiss)):
-                    # the scalar walk re-reads each extended window
-                    ext = np.concatenate([lmiss, rmiss])
-                    st.stats.walk_modeled_seconds += float(np.sum(
-                        self.profile((b[ext] - a[ext]).astype(np.float64))))
+                with self._mu:
+                    st.stats.retries += len(lmiss) + len(rmiss)
+                    if self.profile is not None \
+                            and (len(lmiss) or len(rmiss)):
+                        # the scalar walk re-reads each extended window
+                        ext = np.concatenate([lmiss, rmiss])
+                        st.stats.walk_modeled_seconds += float(np.sum(
+                            self.profile(
+                                (b[ext] - a[ext]).astype(np.float64))))
             pending = (np.concatenate(still) if still
                        else np.empty(0, dtype=np.int64))
         return out_lo, out_hi
@@ -1409,6 +1418,8 @@ class IndexService:
             return 0                 # service closed under the pipeline
         try:
             return self._prefetch_batch(st, q)
+        # airlint: allow[typed-error-flow] -- not absorbed: captured in
+        # _prefetch_exc and re-raised typed at the next batch boundary
         except BaseException as e:   # noqa: BLE001 — re-raised on boundary
             with self._mu:
                 if self._prefetch_exc is None:

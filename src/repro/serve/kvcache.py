@@ -17,8 +17,7 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import (KeyPositions, PROFILES, airtune, expected_latency,
-                        lookup_batch, make_builders)
+from repro.core import KeyPositions, PROFILES, airtune, make_builders
 
 PAGE = 16  # tokens per KV page
 

@@ -24,8 +24,6 @@ import json
 import os
 import time
 
-import numpy as np
-
 
 @dataclasses.dataclass
 class FTConfig:

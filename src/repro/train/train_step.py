@@ -7,7 +7,6 @@ freed between microbatches) and the optimizer update runs once per step.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,394 @@
+"""airlint: per-rule seeded violations, suppression hygiene, JSON schema
+stability, CLI exit codes — and the fatal gate that the repo's own tree
+is clean under every shipped rule."""
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import ALL_RULES, run_checks
+from repro.analysis.__main__ import JSON_SCHEMA_VERSION, main
+from repro.analysis.core import collect_allows
+from repro.analysis.rules import rules_by_name
+from repro.analysis.rules import spec_roundtrip as spec_roundtrip_mod
+from repro.analysis.rules.kernel_fallback import KernelFallbackShapeRule
+from repro.analysis.rules.spec_roundtrip import roundtrip_problems
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write(path, src):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(src))
+    return str(path)
+
+
+def check(paths, rule_names):
+    findings, _ = run_checks([str(p) for p in paths],
+                             rules_by_name(rule_names))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# the gate itself: the repo's own tree is clean (this test is the fatal
+# contract CI's airlint step re-checks; a violation anywhere in src/
+# without a justified allow fails here first)
+# ---------------------------------------------------------------------------
+def test_repo_tree_is_clean_under_all_rules():
+    findings, n = run_checks([os.path.join(REPO, "src"),
+                              os.path.join(REPO, "benchmarks"),
+                              os.path.join(REPO, "examples")], ALL_RULES)
+    assert n > 50                       # the scan actually saw the repo
+    assert findings == [], "\n" + "\n".join(f.format() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# AIR001 pread-seam
+# ---------------------------------------------------------------------------
+def test_pread_seam_flags_raw_pread_and_open(tmp_path):
+    p = write(tmp_path / "reader.py", """\
+        import os
+
+        def f(fd, path):
+            raw = os.pread(fd, 4, 0)
+            fd2 = os.open(path, os.O_RDONLY)
+            return raw, fd2
+        """)
+    fs = check([p], ["pread-seam"])
+    assert [(f.code, f.line) for f in fs] == [("AIR001", 4), ("AIR001", 5)]
+    assert all(f.path == p for f in fs)
+
+
+def test_pread_seam_exempts_the_seam_module(tmp_path):
+    p = write(tmp_path / "repro" / "serve" / "backend.py", """\
+        import os
+
+        def pread_full(fd):
+            return os.pread(fd, 4, 0)
+        """)
+    assert check([p], ["pread-seam"]) == []
+
+
+# ---------------------------------------------------------------------------
+# AIR002 lock-discipline
+# ---------------------------------------------------------------------------
+def test_lock_discipline_stats_cache_and_pread(tmp_path):
+    p = write(tmp_path / "engine.py", """\
+        class Svc:
+            def f(self, st):
+                st.stats.hits += 1
+                st.stats.record_read(1)
+                st.cache.get(1)
+                with self._mu:
+                    st.stats.hits += 1
+                    st.storage.pread(4, 0)
+        """)
+    fs = check([p], ["lock-discipline"])
+    got = {(f.line, f.message.split("'")[1]) for f in fs}
+    assert got == {(3, ".stats.hits"), (4, ".stats.record_read(...)"),
+                   (5, ".cache.get(...)"), (8, ".pread(...)")}
+
+
+def test_lock_discipline_keeps_state_through_except_blocks(tmp_path):
+    # a `with self._mu:` inside an except handler must count as locked
+    p = write(tmp_path / "engine.py", """\
+        class Svc:
+            def f(self, st):
+                try:
+                    st.storage.pread(4, 0)
+                except OSError:
+                    with self._mu:
+                        st.stats.degraded_runs += 1
+        """)
+    assert check([p], ["lock-discipline"]) == []
+
+
+def test_lock_discipline_skips_modules_without_the_idiom(tmp_path):
+    p = write(tmp_path / "other.py", """\
+        def f(st):
+            st.stats.hits += 1
+        """)
+    assert check([p], ["lock-discipline"]) == []
+
+
+# ---------------------------------------------------------------------------
+# AIR003 typed-error-flow
+# ---------------------------------------------------------------------------
+def test_typed_error_flow_flags_broad_except_in_serve(tmp_path):
+    p = write(tmp_path / "serve" / "svc.py", """\
+        def f():
+            try:
+                return 1
+            except Exception:
+                return None
+        """)
+    fs = check([p], ["typed-error-flow"])
+    assert [(f.code, f.line) for f in fs] == [("AIR003", 4)]
+
+
+def test_typed_error_flow_accepts_shield_and_reraise(tmp_path):
+    p = write(tmp_path / "fleet" / "svc.py", """\
+        def f():
+            try:
+                return 1
+            except StorageError:
+                return 2
+            except Exception:
+                return None
+
+        def g():
+            try:
+                return 1
+            except Exception:
+                raise
+        """)
+    assert check([p], ["typed-error-flow"]) == []
+
+
+def test_typed_error_flow_ignores_out_of_scope_paths(tmp_path):
+    p = write(tmp_path / "core" / "x.py", """\
+        def f():
+            try:
+                return 1
+            except Exception:
+                return None
+        """)
+    assert check([p], ["typed-error-flow"]) == []
+
+
+# ---------------------------------------------------------------------------
+# AIR004 spec-roundtrip
+# ---------------------------------------------------------------------------
+_BROKEN_SPEC_SRC = """\
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class BrokenSpec:
+    a: int = 1
+    b: int = 2
+
+    def to_dict(self):
+        return {"a": self.a}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+    def to_json(self):
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_json(cls, s):
+        return cls.from_dict(json.loads(s))
+"""
+
+
+def test_roundtrip_problems_catch_dropped_field(tmp_path, monkeypatch):
+    p = write(tmp_path / "broken_spec.py", _BROKEN_SPEC_SRC)
+    monkeypatch.syspath_prepend(str(tmp_path))
+    import broken_spec
+    probs = roundtrip_problems(broken_spec.BrokenSpec, lambda c: c())
+    assert any("field 'b' missing from to_dict()" in m for m in probs)
+
+
+def test_spec_roundtrip_rule_anchors_at_class_def(tmp_path, monkeypatch):
+    # distinct module name: broken_spec is already in sys.modules from the
+    # test above, and a cached module would anchor at the wrong file
+    p = write(tmp_path / "broken_spec_anchor.py", _BROKEN_SPEC_SRC)
+    monkeypatch.syspath_prepend(str(tmp_path))
+    monkeypatch.setattr(
+        spec_roundtrip_mod, "SPEC_TARGETS",
+        [("broken_spec_anchor", "BrokenSpec", lambda c: c())])
+    rule = spec_roundtrip_mod.SpecRoundtripRule()
+    files = [p, os.path.join(REPO, "src/repro/api/spec.py")]  # gate opens
+    fs = list(rule.check_project(files))
+    assert fs, "broken spec produced no findings"
+    # class BrokenSpec: sits on line 6 of the fixture source
+    assert all((f.path, f.line, f.code) == (p, 6, "AIR004") for f in fs)
+    assert any("field 'b' missing" in f.message for f in fs)
+
+
+def test_real_specs_round_trip_clean():
+    for mod, cls_name, build in spec_roundtrip_mod.SPEC_TARGETS:
+        import importlib
+        cls = getattr(importlib.import_module(mod), cls_name)
+        assert roundtrip_problems(cls, build) == [], (mod, cls_name)
+
+
+# ---------------------------------------------------------------------------
+# AIR005 shim-discipline
+# ---------------------------------------------------------------------------
+def test_shim_discipline_flags_imports_calls_and_legacy_kwargs(tmp_path):
+    p = write(tmp_path / "caller.py", """\
+        from repro.core.serialize import load_index
+
+        def g(path, data):
+            return load_index(path, data)
+
+        def h(path, IndexService):
+            return IndexService(path, cache_bytes=(1,), use_device=True)
+        """)
+    fs = check([p], ["shim-discipline"])
+    assert [(f.code, f.line) for f in fs] == [
+        ("AIR005", 1), ("AIR005", 4), ("AIR005", 7)]
+    assert "cache_bytes, use_device" in fs[2].message
+
+
+def test_shim_discipline_exempts_init_reexports(tmp_path):
+    p = write(tmp_path / "pkg" / "__init__.py", """\
+        from repro.core.serialize import load_index
+        """)
+    assert check([p], ["shim-discipline"]) == []
+
+
+# ---------------------------------------------------------------------------
+# AIR006 kernel-fallback-shape
+# ---------------------------------------------------------------------------
+def test_kernel_fallback_shape_seeded_violations(tmp_path):
+    init = write(tmp_path / "repro" / "kernels" / "badkern" / "__init__.py",
+                 "VERSION = 1\n")
+    ops = write(tmp_path / "repro" / "kernels" / "badkern" / "ops.py", """\
+        import jax
+
+        def run(x, backend="pallas"):
+            if backend == "pallas":
+                return jax.numpy.asarray(x)
+            return x
+        """)
+    fs = list(KernelFallbackShapeRule().check_project([init, ops]))
+    msgs = [f.message for f in fs]
+    assert any("missing ref.py" in m for m in msgs)
+    assert any("does not re-export from .ops" in m for m in msgs)
+    assert any("'jnp', 'numpy'" in m for m in msgs)
+    jax_f = [f for f in fs if "module top level" in f.message]
+    assert [(f.path, f.line) for f in jax_f] == [(ops, 1)]
+
+
+def test_kernel_fallback_shape_accepts_repo_kernels():
+    findings, _ = run_checks([os.path.join(REPO, "src/repro/kernels")],
+                             [KernelFallbackShapeRule()])
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# AIR000 allow hygiene + suppression semantics
+# ---------------------------------------------------------------------------
+def test_justified_allow_suppresses(tmp_path):
+    p = write(tmp_path / "reader.py", """\
+        import os
+
+        def f(fd):
+            return os.pread(fd, 4, 0)  # airlint: allow[pread-seam] -- probe
+        """)
+    assert check([p], ["pread-seam"]) == []
+
+
+def test_standalone_allow_covers_next_code_line(tmp_path):
+    p = write(tmp_path / "reader.py", """\
+        import os
+
+        def f(fd):
+            # airlint: allow[pread-seam] -- offline path, justified over
+            # two comment lines that both belong to this suppression
+            return os.pread(fd, 4, 0)
+        """)
+    assert check([p], ["pread-seam"]) == []
+
+
+def test_allow_without_reason_is_a_finding_and_never_suppresses(tmp_path):
+    p = write(tmp_path / "reader.py", """\
+        import os
+
+        def f(fd):
+            return os.pread(fd, 4, 0)  # airlint: allow[pread-seam]
+        """)
+    fs = check([p], ["pread-seam"])
+    assert [(f.code, f.line) for f in fs] == [("AIR000", 4), ("AIR001", 4)]
+    assert "without a justification" in fs[0].message
+
+
+def test_allow_for_a_different_rule_does_not_suppress(tmp_path):
+    p = write(tmp_path / "reader.py", """\
+        import os
+
+        def f(fd):
+            return os.pread(fd, 4, 0)  # airlint: allow[lock-discipline] -- x
+        """)
+    fs = check([p], ["pread-seam"])
+    assert [f.code for f in fs] == ["AIR001"]
+
+
+def test_collect_allows_grammar():
+    allows = collect_allows([
+        "x = 1  # airlint: allow[pread-seam] -- reason here",
+        "# airlint: allow[lock-discipline] -- standalone",
+        "y = 2",
+        "# airlint: allow[shim-discipline]",
+    ])
+    assert [(a.rule, a.line, a.comment_line, bool(a.reason))
+            for a in allows] == [
+        ("pread-seam", 1, 1, True),
+        ("lock-discipline", 3, 2, True),
+        ("shim-discipline", 5, 4, False),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# AIR999 parse failure is a finding, not a crash
+# ---------------------------------------------------------------------------
+def test_syntax_error_yields_air999(tmp_path):
+    p = write(tmp_path / "broken.py", "def f(:\n")
+    findings, n = run_checks([p], rules_by_name(["pread-seam"]))
+    assert n == 1
+    assert [f.code for f in findings] == ["AIR999"]
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes + --json schema stability
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes_and_json_schema(tmp_path, capsys):
+    bad = write(tmp_path / "bad.py", """\
+        import os
+
+        def f(fd):
+            return os.pread(fd, 4, 0)
+        """)
+    clean = write(tmp_path / "clean.py", "x = 1\n")
+    report = tmp_path / "airlint.json"
+
+    assert main([clean]) == 0
+    assert main(["--rules", "no-such-rule", clean]) == 2
+    assert main([bad, "--rules", "pread-seam",
+                 "--json", str(report)]) == 1
+    out = capsys.readouterr().out
+    assert f"{bad}:4:" in out and "AIR001" in out
+
+    blob = json.loads(report.read_text())
+    assert set(blob) == {"version", "paths", "rules", "files_scanned",
+                         "findings"}
+    assert blob["version"] == JSON_SCHEMA_VERSION == 1
+    assert blob["files_scanned"] == 1
+    assert blob["paths"] == [bad]
+    assert blob["rules"] == [{"name": "pread-seam", "code": "AIR001",
+                              "description": rules_by_name(
+                                  ["pread-seam"])[0].description}]
+    (f,) = blob["findings"]
+    assert set(f) == {"rule", "code", "path", "line", "col", "message"}
+    assert (f["rule"], f["code"], f["path"], f["line"]) == \
+        ("pread-seam", "AIR001", bad, 4)
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("AIR001", "AIR002", "AIR003", "AIR004", "AIR005",
+                 "AIR006"):
+        assert code in out
+
+
+def test_rules_by_name_rejects_unknown():
+    with pytest.raises(KeyError, match="available:"):
+        rules_by_name(["nope"])

@@ -22,7 +22,7 @@ from repro.core.serialize import layer_page_crcs, page_crc, read_meta
 from repro.fleet import ShardUnavailableError
 from repro.serve import (CorruptPageError, DeadlineExceededError,
                          FaultInjectingBackend, FileBackend, IndexService,
-                         ReadError, StorageBackend, StorageError, pread_full)
+                         ReadError, StorageError, pread_full)
 from repro.serve.index_service import (demo_serving_design,
                                        measured_backing_profile)
 
@@ -562,6 +562,54 @@ def test_fleet_isolates_failing_shard_and_reports_health(fleet_parts):
         # schedule was the fault): back in rotation
         svc.mark_healthy(sick)
         assert svc.stats_summary()["unhealthy_shards"] == 0
+
+
+class _CorruptsAfterOpen(FileBackend):
+    """Healthy through open, then every pread reports persistent page
+    corruption — the typed cause the availability report must preserve."""
+
+    armed = False
+
+    def pread(self, nbytes, offset):
+        raw = super().pread(nbytes, offset)
+        if _CorruptsAfterOpen.armed:
+            raise CorruptPageError("injected persistent corruption",
+                                   path=self.path,
+                                   page_id=int(offset) // P)
+        return raw
+
+
+def test_partial_results_preserve_corrupt_page_cause(fleet_parts):
+    # regression: a broad `except Exception` anywhere on the fleet path
+    # used to be able to flatten CorruptPageError into a generic failure;
+    # the typed class name must survive into errors[] and stats_summary
+    serve, D = fleet_parts
+    rng = np.random.default_rng(3)
+    qs = rng.choice(D.keys, 400)
+    with serve() as svc:
+        want = svc.lookup(qs)
+        paths = svc.paths
+    sick = 2
+    _CorruptsAfterOpen.armed = False
+
+    def make(path):
+        if path == paths[sick]:
+            return _CorruptsAfterOpen(path)
+        return FileBackend(path)
+
+    with serve(backend_factories=make) as svc:
+        _CorruptsAfterOpen.armed = True
+        out, avail = svc.lookup(qs, partial_results=True)
+        sick_keys = svc.shard_map.route(qs) == sick
+        assert np.array_equal(avail, ~sick_keys)
+        assert np.array_equal(out[avail], want[avail])
+        # the typed cause survives, by name, in both reporting surfaces
+        assert svc.healthy == [True, True, False]
+        assert "CorruptPageError" in svc.errors[sick]
+        row = svc.stats_summary()["shards"][sick]
+        assert row["healthy"] is False
+        assert "CorruptPageError" in row["error"]
+    _CorruptsAfterOpen.armed = False
 
 
 def test_fleet_stats_summary_survives_closed_shard_service(fleet_parts):

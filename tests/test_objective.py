@@ -10,7 +10,7 @@ import pytest
 
 from repro.api import Index, TuneSpec, register_strategy
 from repro.api.drift import drift_from_stats
-from repro.core import (AffineProfile, DistributionalProfile, KeyPositions,
+from repro.core import (DistributionalProfile, KeyPositions,
                         MeasuredProfile, ObjectiveProfile, PROFILES, airtune,
                         beam_search, brute_force, expected_latency,
                         make_builders, mean_excess_per_lookup,

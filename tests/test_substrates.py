@@ -7,14 +7,11 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import PROFILES
 from repro.data.store import ShardedTokenStore, write_token_store
 from repro.serve.kvcache import PagedKVCache
 from repro.train.checkpoint import restore_checkpoint, save_checkpoint
-from repro.train.compression import (compress_decompress, compressed_psum,
-                                     init_error_state)
-from repro.train.fault_tolerance import (FTConfig, HeartbeatMonitor,
-                                         TrainingSupervisor,
+from repro.train.compression import compress_decompress, compressed_psum
+from repro.train.fault_tolerance import (FTConfig, TrainingSupervisor,
                                          elastic_mesh_shape, rescale_batch)
 
 

@@ -4,11 +4,11 @@ the device scoring backends."""
 import numpy as np
 import pytest
 
-from repro.core import (AffineProfile, AffineUniformProfile, CachedProfile,
+from repro.core import (AffineUniformProfile, CachedProfile,
                         KeyPositions, MeasuredProfile, PROFILES, airtune,
                         batched_mean_read_costs, beam_search, brute_force,
                         expected_latency, make_builders)
-from repro.core.builders import (LayerBuilder, build_eband, build_eband_multi,
+from repro.core.builders import (build_eband, build_eband_multi,
                                  build_gband, build_gband_multi, build_gstep,
                                  build_gstep_multi)
 from repro.core.registry import BUILDER_FAMILIES, register_builder
